@@ -1,0 +1,22 @@
+"""Subprocess worker: reads a SweepSpec JSON on stdin, prints row JSON.
+
+Invoked by benchmarks/common.py with XLA_FLAGS set BEFORE python starts, so
+jax initializes with the requested host device count.
+"""
+import json
+import sys
+
+
+def main() -> int:
+    spec_dict = json.loads(sys.stdin.read())
+    from benchmarks.common import SweepSpec, run_sweep_inproc
+
+    spec = SweepSpec(**{k: tuple(v) if k == "grains" else v
+                        for k, v in spec_dict.items()})
+    rows = run_sweep_inproc(spec)
+    print(json.dumps(rows))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,132 @@
+"""Shared measurement machinery for the Task Bench benchmarks.
+
+All benchmarks follow the paper's protocol (§6): a task graph of `steps`
+timesteps x `width` points, the compute-bound kernel with the grain knob
+`iterations`, reps with warmup, best-of-reps walls; METG extracted at the
+50% efficiency threshold.
+
+Device-count sweeps run in SUBPROCESSES (`run_worker`) so each point gets
+its own forced host-device count — the main process never touches
+XLA_FLAGS. On this container every host device multiplexes ONE physical
+core, so absolute FLOP/s do not scale with devices; efficiency is
+peak-normalized per configuration, which keeps the paper's runtime-overhead
+reading valid (documented in EXPERIMENTS.md §Reproduction).
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_DIR = os.path.join(ROOT, "artifacts", "bench")
+
+
+def bench_path(name: str) -> str:
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    return os.path.join(BENCH_DIR, name)
+
+
+@dataclasses.dataclass
+class SweepSpec:
+    runtime: str
+    pattern: str = "stencil_1d"
+    devices: int = 1
+    width: int = 0  # 0 -> devices x overdecomposition
+    overdecomposition: int = 1
+    steps: int = 50
+    payload: int = 64
+    grains: Tuple[int, ...] = (1, 16, 256, 4096, 16384)
+    reps: int = 3
+    warmup: int = 1
+    options: Dict = dataclasses.field(default_factory=dict)
+
+    def resolved_width(self) -> int:
+        return self.width or self.devices * self.overdecomposition
+
+
+def run_sweep_inproc(spec: SweepSpec) -> List[Dict]:
+    """Run inside the current process (uses existing jax device set)."""
+    import jax
+
+    from repro.core import KernelSpec, TaskGraph, get_runtime
+
+    devs = jax.devices()[: spec.devices]
+    if len(devs) < spec.devices:
+        raise RuntimeError(
+            f"need {spec.devices} devices, have {len(jax.devices())}")
+    rows = []
+    for grain in spec.grains:
+        g = TaskGraph(
+            steps=spec.steps,
+            width=spec.resolved_width(),
+            pattern=spec.pattern,
+            payload=spec.payload,
+            kernel=KernelSpec("compute_bound", grain),
+        )
+        rt = get_runtime(spec.runtime, devices=devs, **spec.options)
+        ok, why = rt.supports(g)
+        if not ok:
+            rows.append({"grain": grain, "skip": why})
+            continue
+        sample, stats = rt.measure(g, reps=spec.reps, warmup=spec.warmup)
+        rows.append({
+            "grain": grain,
+            "wall": sample.wall_time,
+            "flops": sample.total_flops,
+            "tasks": sample.num_tasks,
+            "cores": sample.cores,
+            "gran_us": sample.granularity_us,
+            "rate": sample.flops_per_second,
+            "dispatches": stats.dispatches,
+        })
+    return rows
+
+
+def run_worker(spec: SweepSpec, timeout: int = 3000) -> List[Dict]:
+    """Run a sweep in a subprocess with its own forced device count."""
+    payload = json.dumps(dataclasses.asdict(spec))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={spec.devices}")
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + ROOT
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks._worker"],
+        input=payload, capture_output=True, text=True, timeout=timeout,
+        env=env, cwd=ROOT,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(f"worker failed:\n{out.stderr[-4000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def metg_from_rows(rows: Sequence[Dict], threshold: float = 0.5,
+                   peak: Optional[float] = None):
+    from repro.core import GrainSample, compute_metg
+
+    samples = [
+        GrainSample(
+            iterations=r["grain"], wall_time=r["wall"],
+            total_flops=r["flops"], num_tasks=r["tasks"], cores=r["cores"],
+        )
+        for r in rows if "skip" not in r
+    ]
+    return compute_metg(samples, threshold=threshold, peak=peak)
+
+
+def write_csv(name: str, header: Sequence[str], rows: Sequence[Sequence]):
+    path = bench_path(name)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def fmt_us(v: Optional[float]) -> str:
+    return "unreached" if v is None else f"{v:.1f}"

@@ -1,0 +1,78 @@
+"""Fig 1 (a) FLOP/s vs grain size, (b) efficiency vs task granularity.
+
+Paper setup: stencil pattern, 1 node (48 cores), 48 tasks — one task per
+core. Ours: one "node" of D forced host devices, width = D, all backends.
+Output: artifacts/bench/fig1.csv with one row per (backend, grain).
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import (
+    SweepSpec,
+    fmt_us,
+    metg_from_rows,
+    run_worker,
+    write_csv,
+)
+
+BACKENDS = ("fused", "serialized", "bsp", "bsp_scan", "overlap")
+
+
+def run(devices: int = 4, steps: int = 50, reps: int = 3,
+        grains=(1, 4, 16, 64, 256, 1024, 4096, 16384), payload: int = 64,
+        use_pallas: bool = False, verbose: bool = True):
+    rows_out = []
+    summary = {}
+    for backend in BACKENDS:
+        spec = SweepSpec(
+            runtime=backend, pattern="stencil_1d", devices=devices,
+            overdecomposition=1, steps=steps, grains=tuple(grains),
+            reps=reps, payload=payload,
+            options={"use_pallas": use_pallas} if use_pallas else {},
+        )
+        rows = run_worker(spec)
+        if all("skip" in r for r in rows):
+            if verbose:
+                print(f"fig1 {backend:12s} n/a — {rows[0]['skip']}",
+                      flush=True)
+            continue
+        res = metg_from_rows(rows)
+        summary[backend] = res
+        if verbose:
+            print(f"fig1 {backend:12s} METG(50%) = {fmt_us(res.metg_us)} us "
+                  f"(peak {res.peak_flops_per_second/1e9:.3f} GFLOP/s)",
+                  flush=True)
+        for r in rows:
+            if "skip" in r:
+                continue
+            eff = r["rate"] / max(res.peak_flops_per_second, 1e-30)
+            rows_out.append([backend, r["grain"], r["rate"], r["gran_us"],
+                             eff, r["wall"], r["dispatches"]])
+    path = write_csv(
+        "fig1.csv",
+        ["backend", "grain", "flops_per_s", "granularity_us", "efficiency",
+         "wall_s", "dispatches"],
+        rows_out,
+    )
+    if verbose:
+        print(f"wrote {path}")
+    return summary
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--paper", action="store_true",
+                    help="paper protocol: 1000 steps, 5 reps")
+    ap.add_argument("--pallas", action="store_true")
+    a = ap.parse_args(argv)
+    steps, reps = (1000, 5) if a.paper else (a.steps, a.reps)
+    run(devices=a.devices, steps=steps, reps=reps, use_pallas=a.pallas)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,70 @@
+"""Fig 2: METG vs device count under overdecomposition {8, 16}.
+
+Paper: METG of each system with 1..16 nodes; lower + flatter is better
+(flat = communication topology doesn't penalize scale). Ours: device count
+sweep via subprocesses; distributed backends only (the shared-memory
+backends don't scale past one "node" by construction).
+Output: artifacts/bench/fig2.csv.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import (
+    SweepSpec,
+    fmt_us,
+    metg_from_rows,
+    run_worker,
+    write_csv,
+)
+
+BACKENDS = ("bsp", "bsp_scan", "overlap", "fused")
+
+
+def run(device_counts=(1, 2, 4, 8), ods=(8, 16), steps: int = 50,
+        reps: int = 3, grains=(1, 16, 256, 4096, 16384),
+        verbose: bool = True):
+    rows_csv = []
+    for backend in BACKENDS:
+        for od in ods:
+            for d in device_counts:
+                spec = SweepSpec(
+                    runtime=backend, pattern="stencil_1d", devices=d,
+                    overdecomposition=od, steps=steps, grains=tuple(grains),
+                    reps=reps,
+                )
+                rows = run_worker(spec)
+                res = metg_from_rows(rows)
+                rows_csv.append([
+                    backend, od, d,
+                    "" if res.metg_us is None else res.metg_us,
+                    res.peak_flops_per_second,
+                ])
+                if verbose:
+                    print(f"fig2 {backend:9s} od={od:2d} devices={d:2d} "
+                          f"METG = {fmt_us(res.metg_us)} us", flush=True)
+    path = write_csv(
+        "fig2.csv",
+        ["backend", "overdecomposition", "devices", "metg_us",
+         "peak_flops_per_s"],
+        rows_csv,
+    )
+    if verbose:
+        print(f"wrote {path}")
+    return rows_csv
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, nargs="*", default=[1, 2, 4, 8])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--paper", action="store_true")
+    a = ap.parse_args(argv)
+    steps, reps = (1000, 5) if a.paper else (a.steps, a.reps)
+    run(device_counts=tuple(a.devices), steps=steps, reps=reps)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,86 @@
+"""Fig 3: throughput of backend build-option variants at a fixed grain.
+
+Paper: Charm++ builds (Default / 8-byte priority / SHMEM transport /
+Combined / Simplified scheduling) on the stencil pattern, 8 nodes, grain
+4096 — finding transport moves throughput (~5.7%), scheduling-path changes
+don't, i.e. communication latency dominates at fine grain.
+
+Our variants of the AMT-analogue (`overlap`) backend map the same axes:
+  default            ppermute halos, interior-first overlap  (Default)
+  no_overlap         boundary-first, no latency hiding       (Simple Sched.)
+  allgather          whole-ring transport                    (SHMEM/NIC swap)
+  allgather+no_ovl   both                                    (Combined-like)
+  unroll4            scan unrolled x4                        (sched. path)
+plus `bsp_scan` (per-step collective, no overdecomposition advantage) as the
+non-AMT reference.
+Output: artifacts/bench/fig3.csv.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import SweepSpec, run_worker, write_csv
+
+VARIANTS = (
+    ("overlap", "default", {}),
+    ("overlap", "no_overlap", {"overlap": False}),
+    ("overlap", "allgather", {"halo_via": "allgather"}),
+    ("overlap", "allgather+no_ovl", {"halo_via": "allgather",
+                                     "overlap": False}),
+    ("overlap", "unroll4", {"unroll": 4}),
+    ("bsp_scan", "bsp_scan", {}),
+)
+
+
+def run(devices: int = 8, od: int = 8, grain: int = 4096, steps: int = 50,
+        reps: int = 5, verbose: bool = True):
+    rows_csv = []
+    results = {}
+    for runtime, label, options in VARIANTS:
+        spec = SweepSpec(
+            runtime=runtime, pattern="stencil_1d", devices=devices,
+            overdecomposition=od, steps=steps, grains=(grain,), reps=reps,
+            options=options,
+        )
+        rows = run_worker(spec)
+        r = rows[0]
+        if "skip" in r:
+            continue
+        results[label] = r["rate"]
+        rows_csv.append([label, runtime, grain, devices, od, r["rate"],
+                         r["wall"]])
+        if verbose:
+            print(f"fig3 {label:18s} {r['rate']/1e9:8.3f} GFLOP/s "
+                  f"(wall {r['wall']*1e3:.1f} ms)", flush=True)
+    if verbose and "default" in results:
+        base = results["default"]
+        print("\nrelative to default:")
+        for label, rate in results.items():
+            print(f"  {label:18s} {rate/base*100:6.1f}%")
+    path = write_csv(
+        "fig3.csv",
+        ["variant", "runtime", "grain", "devices", "overdecomposition",
+         "flops_per_s", "wall_s"],
+        rows_csv,
+    )
+    if verbose:
+        print(f"wrote {path}")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--od", type=int, default=8)
+    ap.add_argument("--grain", type=int, default=4096)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--paper", action="store_true")
+    a = ap.parse_args(argv)
+    steps, reps = (1000, 5) if a.paper else (a.steps, a.reps)
+    run(devices=a.devices, od=a.od, grain=a.grain, steps=steps, reps=reps)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

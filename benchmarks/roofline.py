@@ -1,0 +1,83 @@
+"""Roofline table assembly: reads artifacts/dryrun/*.json (written by
+repro.launch.dryrun) and renders the per-(arch x shape x mesh) roofline
+terms, dominant bottleneck, and useful-FLOPs ratio.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh pod16x16] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import ROOT, write_csv
+
+DRYRUN_DIR = os.path.join(ROOT, "artifacts", "dryrun")
+
+
+def load(mesh: str = "pod16x16") -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def render(records: List[Dict], md: bool = False) -> str:
+    lines = []
+    if md:
+        lines.append(
+            "| arch | shape | compute_s | memory_s | collective_s | "
+            "dominant | model/HLO flops | peak GB/dev |")
+        lines.append("|---|---|---|---|---|---|---|---|")
+    rows_csv = []
+    for r in records:
+        if r.get("status") == "skip":
+            if md:
+                lines.append(
+                    f"| {r['arch']} | {r['shape']} | — | — | — | skip | — | — |")
+            rows_csv.append([r["arch"], r["shape"], "", "", "", "skip", "",
+                             ""])
+            continue
+        rl = r["roofline"]
+        peak_gb = r["memory"]["peak_bytes"] / 1e9
+        ratio = rl["useful_flops_ratio"]
+        if md:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3e} | "
+                f"{rl['memory_s']:.3e} | {rl['collective_s']:.3e} | "
+                f"{rl['dominant']} | {ratio:.3f} | {peak_gb:.2f} |")
+        rows_csv.append([
+            r["arch"], r["shape"], rl["compute_s"], rl["memory_s"],
+            rl["collective_s"], rl["dominant"], ratio, peak_gb,
+        ])
+    write_csv(
+        "roofline.csv",
+        ["arch", "shape", "compute_s", "memory_s", "collective_s",
+         "dominant", "useful_flops_ratio", "peak_gb_per_dev"],
+        rows_csv,
+    )
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--md", action="store_true")
+    a = ap.parse_args(argv)
+    records = load(a.mesh)
+    if not records:
+        print(f"no dry-run artifacts for mesh {a.mesh}; run "
+              f"`python -m repro.launch.dryrun --all` first")
+        return 1
+    txt = render(records, md=True)
+    print(txt)
+    print(f"\n{len(records)} cells; csv written to artifacts/bench/roofline.csv")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,79 @@
+"""Benchmark orchestrator: one benchmark per paper table/figure.
+
+  fig1    FLOP/s + efficiency vs grain (paper Fig 1a/1b)
+  table2  METG x overdecomposition {1,8,16} (paper Table 2)
+  fig2    METG vs device count (paper Fig 2)
+  fig3    build-option/transport ablation (paper Fig 3)
+  roofline  assemble dry-run artifacts (framework §Roofline)
+
+`python -m benchmarks.run` runs the quick preset of everything;
+`--only fig1,table2` selects; `--paper` switches to the 1000-step protocol.
+CSVs land in artifacts/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+ALL = ("fig1", "table2", "fig2", "fig3", "roofline")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(ALL))
+    ap.add_argument("--paper", action="store_true",
+                    help="full paper protocol (1000 steps, 5 reps) — slow")
+    a = ap.parse_args(argv)
+    chosen = tuple(a.only.split(",")) if a.only else ALL
+
+    t_all = time.perf_counter()
+    steps, reps = (1000, 5) if a.paper else (50, 3)
+
+    if "fig1" in chosen:
+        print("=" * 72)
+        print("Fig 1: FLOP/s and efficiency vs grain size (stencil, 1 node)")
+        print("=" * 72)
+        from benchmarks.fig1_flops_vs_grain import run as fig1
+        fig1(devices=4, steps=steps, reps=reps)
+
+    if "table2" in chosen:
+        print("=" * 72)
+        print("Table 2: METG x overdecomposition {1, 8, 16}")
+        print("=" * 72)
+        from benchmarks.table2_metg import run as table2
+        table2(devices=4, steps=steps, reps=reps)
+
+    if "fig2" in chosen:
+        print("=" * 72)
+        print("Fig 2: METG vs device count (od 8, 16)")
+        print("=" * 72)
+        from benchmarks.fig2_scaling import run as fig2
+        fig2(device_counts=(1, 2, 4, 8), steps=steps, reps=reps)
+
+    if "fig3" in chosen:
+        print("=" * 72)
+        print("Fig 3: transport/scheduling variant ablation (grain 4096)")
+        print("=" * 72)
+        from benchmarks.fig3_variants import run as fig3
+        fig3(devices=8, od=8, steps=steps, reps=max(reps, 5))
+
+    if "roofline" in chosen:
+        print("=" * 72)
+        print("Roofline (from dry-run artifacts, if present)")
+        print("=" * 72)
+        from benchmarks.roofline import load, render
+        records = load("pod16x16")
+        if records:
+            print(render(records, md=True))
+        else:
+            print("(no dry-run artifacts yet — run "
+                  "`python -m repro.launch.dryrun --all`)")
+
+    print(f"\ntotal bench time: {time.perf_counter() - t_all:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

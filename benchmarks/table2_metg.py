@@ -1,0 +1,72 @@
+"""Table 2: METG per backend for overdecomposition {1, 8, 16}, one node.
+
+Paper: width = cores x N for N in {1, 8, 16}; stencil pattern. METG uses
+each configuration's own peak (the paper normalizes per system).
+Output: artifacts/bench/table2.csv.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import (
+    SweepSpec,
+    fmt_us,
+    metg_from_rows,
+    run_worker,
+    write_csv,
+)
+
+BACKENDS = ("fused", "serialized", "bsp", "bsp_scan", "overlap")
+ODS = (1, 8, 16)
+
+
+def run(devices: int = 4, steps: int = 50, reps: int = 3,
+        grains=(1, 16, 256, 4096, 16384), verbose: bool = True):
+    table = {}
+    rows_csv = []
+    for backend in BACKENDS:
+        for od in ODS:
+            spec = SweepSpec(
+                runtime=backend, pattern="stencil_1d", devices=devices,
+                overdecomposition=od, steps=steps, grains=tuple(grains),
+                reps=reps,
+            )
+            rows = run_worker(spec)
+            res = metg_from_rows(rows)
+            table[(backend, od)] = res.metg_us
+            rows_csv.append([backend, od, devices,
+                             "" if res.metg_us is None else res.metg_us,
+                             res.peak_flops_per_second])
+            if verbose:
+                print(f"table2 {backend:12s} od={od:2d} METG = "
+                      f"{fmt_us(res.metg_us)} us", flush=True)
+    path = write_csv(
+        "table2.csv",
+        ["backend", "overdecomposition", "devices", "metg_us",
+         "peak_flops_per_s"],
+        rows_csv,
+    )
+    if verbose:
+        print(f"wrote {path}")
+        print("\n| system | 1 task/core | 8 tasks/core | 16 tasks/core |")
+        print("|---|---|---|---|")
+        for backend in BACKENDS:
+            cells = " | ".join(fmt_us(table[(backend, od)]) for od in ODS)
+            print(f"| {backend} | {cells} |")
+    return table
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--paper", action="store_true")
+    a = ap.parse_args(argv)
+    steps, reps = (1000, 5) if a.paper else (a.steps, a.reps)
+    run(devices=a.devices, steps=steps, reps=reps)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

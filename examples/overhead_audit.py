@@ -1,0 +1,72 @@
+"""Overhead audit: the paper's methodology applied to the training loop.
+
+Trains the same reduced model three ways and compares their step-level
+overhead profile — the production-loop analogue of the paper's
+runtime-system comparison:
+
+  1 jit step, batch  8  (coarse grain — overhead amortized)
+  1 jit step, batch  1  (fine grain — dispatch overhead visible)
+  8 microbatch dispatches per step (the `serialized` failure mode)
+
+  PYTHONPATH=src python examples/overhead_audit.py
+"""
+import time
+
+import jax
+
+from repro.configs.registry import get_config, get_shape
+from repro.core.instrumentation import OverheadProfiler
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.launch import steps as steps_lib
+from repro.models.model import Model
+from repro.optim.optimizer import AdamW
+
+
+def run_variant(label, cfg, batch, seq, steps, microbatches=1):
+    model, opt = Model(cfg), AdamW()
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    shape = get_shape("train_4k")
+    pipe = SyntheticTokenPipeline(cfg, shape, batch_override=batch,
+                                  seq_override=seq)
+    step = jax.jit(steps_lib.make_train_step(model, opt))
+
+    prof = OverheadProfiler(devices=1, tasks_per_step=microbatches)
+    mb = batch // microbatches
+    for i in range(steps):
+        data = pipe.batch_at(i)
+        t0 = time.perf_counter()
+        if microbatches == 1:
+            params, opt_state, m = step(params, opt_state, data)
+        else:
+            for j in range(microbatches):
+                sl = {k: v[j * mb:(j + 1) * mb] for k, v in data.items()}
+                params, opt_state, m = step(params, opt_state, sl)
+        jax.block_until_ready(m["loss"])
+        prof.record(time.perf_counter() - t0)
+    rep = prof.report()
+    print(f"\n--- {label} ---")
+    for line in rep.lines():
+        print("  " + line)
+    return rep
+
+
+def main():
+    cfg = get_config("internlm2-1.8b").reduced()
+    a = run_variant("batch 8, fused step", cfg, batch=8, seq=64, steps=12)
+    b = run_variant("batch 1, fused step", cfg, batch=1, seq=64, steps=12)
+    c = run_variant("batch 8, 8 microbatch dispatches", cfg, batch=8,
+                    seq=64, steps=12, microbatches=8)
+    # total dispatch overhead per step = dispatches x per-dispatch latency
+    share_a = 1 * a.dispatch_overhead / a.mean_wall
+    share_c = 8 * c.dispatch_overhead / c.mean_wall
+    print(f"\ndispatch-overhead share of step: fused {share_a*100:.2f}% vs "
+          f"8-way microbatched {share_c*100:.2f}%")
+    print("Reading: smaller per-dispatch work -> dispatch overhead takes a "
+          "larger step share\n(the paper's fine-grain regime); fusing work "
+          "into one dispatch restores efficiency.")
+    assert share_c >= share_a
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: the paper's methodology in ~40 lines of public API.
+
+Builds a Task Bench stencil graph, runs it under three execution strategies
+(the "runtime systems under test"), sweeps task granularity, and prints each
+strategy's METG — the minimum effective task granularity at 50% efficiency,
+the paper's headline metric.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import (
+    KernelSpec,
+    TaskGraph,
+    compute_metg,
+    default_grain_schedule,
+    get_runtime,
+)
+
+
+def main():
+    print("Task Bench in JAX — quickstart\n")
+
+    backends = ["fused", "bsp_scan", "serialized"]
+    grains = default_grain_schedule(1, 1 << 14, points_per_decade=2)
+
+    for backend in backends:
+        rt = get_runtime(backend)
+        samples = []
+        for grain in grains:
+            graph = TaskGraph(
+                steps=20,
+                width=16,
+                pattern="stencil_1d",
+                kernel=KernelSpec("compute_bound", iterations=grain),
+                payload=64,
+            )
+            sample, _ = rt.measure(graph, reps=2, warmup=1)
+            samples.append(sample)
+        result = compute_metg(samples)
+        print(f"  {backend:12s} {result}")
+
+    print(
+        "\nReading: `fused` (whole graph in one XLA program) tolerates the "
+        "finest grains;\n`serialized` (one dispatch per task, the AMT "
+        "task-spawn analogue) needs the\ncoarsest — the paper's Fig 1b "
+        "ordering."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Uses the real framework stack — config system, synthetic data pipeline,
+AdamW, checkpointing (with an injected failure + restart at step 120 to
+demonstrate fault tolerance), and the OverheadProfiler that applies the
+paper's METG methodology to the production loop.
+
+The model is mamba2-130m at a narrowed width (so a few hundred steps fit
+this container's single CPU core); pass --full for the real 130M config.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--full]
+"""
+import argparse
+import dataclasses
+
+from repro.configs.registry import get_config, get_shape
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--full", action="store_true",
+                    help="true 130M-param config (slow on 1 CPU core)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = get_config("mamba2-130m")
+    if not args.full:
+        # ~8M params: same family/depth structure, narrowed width
+        cfg = dataclasses.replace(
+            cfg, n_layers=8, d_model=256, ssm_state=32, ssm_head_dim=32,
+            vocab=8192, dtype="float32", param_dtype="float32")
+    print(f"config: {cfg.name} ({cfg.param_count()/1e6:.1f}M params, "
+          f"{cfg.n_layers}L d={cfg.d_model})")
+
+    shape = get_shape("train_4k")
+    res = train(
+        cfg, shape,
+        steps=args.steps, batch=args.batch, seq=args.seq,
+        ckpt_dir=args.ckpt_dir, ckpt_every=100,
+        fail_at=(120,),  # fault-tolerance drill: crash once, restart
+        lr=1e-3, log_every=25,
+    )
+    first = sum(res.losses[:10]) / max(len(res.losses[:10]), 1)
+    last = sum(res.losses[-10:]) / max(len(res.losses[-10:]), 1)
+    print(f"\nloss {first:.3f} -> {last:.3f} over {res.steps_run} steps "
+          f"({res.restarts} injected restart(s) survived)")
+    assert last < first, "training should reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Atomic, async-capable pytree checkpointing (no orbax in this container).
+
+Layout: <dir>/step_<n>/arrays.npz + manifest.json (tree structure, dtypes,
+pipeline + RNG state), written to a tmp dir and atomically renamed — a
+half-written checkpoint can never be restored. `keep` bounds disk usage;
+`async_save` runs serialization on a worker thread so the train loop only
+pays for the host transfer.
+
+Restore targets an ABSTRACT tree (structure + ShapeDtypeStruct) so arrays
+can be placed directly onto any mesh sharding — this is what makes restarts
+elastic: a checkpoint written on a (2,16,16) mesh restores onto (16,16) or a
+single CPU device unchanged (see elastic.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> str:
+        host_tree = jax.tree.map(np.asarray, tree)  # device -> host
+        return self._write(step, host_tree, extra or {})
+
+    def async_save(self, step: int, tree: Any,
+                   extra: Optional[Dict] = None) -> None:
+        self.wait()  # one in flight at a time
+        host_tree = jax.tree.map(np.asarray, tree)  # transfer on caller
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host_tree, extra or {}), daemon=True
+        )
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree: Any, extra: Dict) -> str:
+        flat, _ = _flatten(host_tree)
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k: v for k, v in flat})
+        manifest = {
+            "step": step,
+            "keys": [k for k, _ in flat],
+            "extra": extra,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target: Any, step: Optional[int] = None,
+                shardings: Optional[Any] = None) -> Tuple[Any, Dict]:
+        """target: pytree of arrays or ShapeDtypeStructs (structure donor)."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        flat, treedef = _flatten(target)
+        sh_flat = (_flatten(shardings)[0] if shardings is not None
+                   else [(k, None) for k, _ in flat])
+        leaves = []
+        for (key, tgt), (_, sh) in zip(flat, sh_flat):
+            arr = data[key]
+            if tuple(arr.shape) != tuple(tgt.shape):
+                raise ValueError(
+                    f"checkpoint leaf {key}: shape {arr.shape} != {tgt.shape}"
+                )
+            arr = arr.astype(tgt.dtype)
+            leaves.append(jax.device_put(arr, sh) if sh is not None else
+                          jax.device_put(arr))
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        return tree, manifest["extra"]

@@ -1,0 +1,89 @@
+"""Elastic scaling + failure handling around the checkpointer.
+
+Elasticity: checkpoints store full logical arrays, so restoring onto a
+different mesh is re-placement, not re-layout — `reshard_restore` takes the
+NEW policy's shardings and puts every leaf straight onto the new mesh. A job
+that loses a pod restarts on (16,16) from a (2,16,16) checkpoint unchanged;
+the data pipeline re-slices its stream from the restored step integer.
+
+Failure drill: `FailureInjector` raises a SimulatedFailure at a chosen step;
+`run_with_restarts` restarts the loop from the latest checkpoint. Tests
+assert bit-identical final params vs an uninterrupted run — the
+checkpoint/restart path provably loses nothing.
+
+Straggler mitigation at scale (documented design, exercised in tests via the
+overlap runtime): per-step work is overdecomposed (microbatches / Task Bench
+points per device) so a slow participant delays only its own slice;
+double-buffered input feeds + async checkpoint writes keep the critical path
+free of host hiccups.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+class FailureInjector:
+    """Raises at the START of the given step indices (post-checkpoint)."""
+
+    def __init__(self, fail_at: Tuple[int, ...] = ()):
+        self.fail_at = set(fail_at)
+        self.fired = set()
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise SimulatedFailure(f"injected node failure at step {step}")
+
+
+def run_with_restarts(
+    *,
+    total_steps: int,
+    ckpt: Checkpointer,
+    ckpt_every: int,
+    init_state: Callable[[], Any],
+    step_fn: Callable[[Any, int], Any],
+    injector: Optional[FailureInjector] = None,
+    max_restarts: int = 8,
+    extra_state: Optional[Dict] = None,
+) -> Tuple[Any, int]:
+    """Generic fault-tolerant loop: state -> step_fn -> state, checkpointing
+    every `ckpt_every` and restarting from the latest checkpoint on failure.
+
+    Returns (final_state, restarts_used). `state` is any pytree; step 0's
+    state comes from init_state() or the latest checkpoint if one exists.
+    """
+    restarts = 0
+    while True:
+        latest = ckpt.latest_step()
+        if latest is None:
+            state, start = init_state(), 0
+        else:
+            state, _ = ckpt.restore(init_state(), step=latest)
+            start = latest
+        try:
+            for step in range(start, total_steps):
+                if injector is not None:
+                    injector.maybe_fail(step)
+                state = step_fn(state, step)
+                nxt = step + 1
+                if nxt % ckpt_every == 0 or nxt == total_steps:
+                    ckpt.save(nxt, state, extra_state)
+            ckpt.wait() if hasattr(ckpt, "wait") else None
+            return state, restarts
+        except SimulatedFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+
+
+def reshard_restore(ckpt: Checkpointer, target: Any, policy) -> Tuple[Any, Dict]:
+    """Restore the latest checkpoint onto the mesh described by `policy`
+    (any shape — this is the elastic-scaling entry point)."""
+    shardings = policy.param_shardings(target)
+    return ckpt.restore(target, shardings=shardings)

@@ -1,0 +1,1 @@
+"""Architecture + shape configs. See registry.py for --arch resolution."""

@@ -1,0 +1,40 @@
+"""Task Bench workload configs (the paper's own experiment grid).
+
+The paper runs the stencil pattern for 1000 timesteps, 5 reps per point, on
+48-core nodes, with overdecomposition {1, 8, 16} (Table 2) and grain sweeps
+(Fig 1). These presets scale the grid to this container while keeping the
+protocol identical; benchmarks/ uses them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskBenchConfig:
+    name: str
+    pattern: str = "stencil_1d"
+    steps: int = 1000
+    payload: int = 64
+    overdecomposition: Tuple[int, ...] = (1, 8, 16)
+    grains: Tuple[int, ...] = (1, 4, 16, 64, 256, 1024, 4096, 16384)
+    reps: int = 5
+    runtimes: Tuple[str, ...] = ("fused", "serialized", "bsp", "bsp_scan", "overlap")
+
+
+# The paper's protocol (1000 steps, 5 reps) — heavyweight on 1 CPU core.
+PAPER = TaskBenchConfig(name="paper")
+
+# Scaled preset used by `python -m benchmarks.run` so the suite finishes in
+# minutes on this container; same shape of sweep, shorter graph.
+QUICK = TaskBenchConfig(
+    name="quick",
+    steps=50,
+    overdecomposition=(1, 8),
+    grains=(1, 16, 256, 4096, 65536),
+    reps=3,
+    runtimes=("fused", "serialized", "bsp", "bsp_scan", "overlap"),
+)
+
+PRESETS = {c.name: c for c in (PAPER, QUICK)}

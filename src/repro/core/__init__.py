@@ -1,0 +1,45 @@
+"""Task Bench in JAX — the paper's primary contribution as a composable module.
+
+Public API:
+    TaskGraph, KernelSpec           workload definition
+    PATTERNS                        dependence pattern names
+    get_runtime, available_runtimes execution backends (the systems under test)
+    compute_metg, GrainSample       the METG metric
+    OverheadProfiler                the methodology applied to production loops
+"""
+from repro.core.graph import TaskGraph
+from repro.core.instrumentation import OverheadProfiler, measure_dispatch_overhead
+from repro.core.metg import (
+    DEFAULT_THRESHOLD,
+    GrainSample,
+    MetgResult,
+    compute_metg,
+    default_grain_schedule,
+    efficiency_curve,
+)
+from repro.core.patterns import PATTERNS
+from repro.core.task_kernels import KernelSpec
+
+# importing the backends registers them
+from repro.core.runtimes.base import Runtime, available_runtimes, get_runtime
+from repro.core.runtimes import fused as _fused  # noqa: F401
+from repro.core.runtimes import serialized as _serialized  # noqa: F401
+from repro.core.runtimes import bsp as _bsp  # noqa: F401
+from repro.core.runtimes import overlap as _overlap  # noqa: F401
+
+__all__ = [
+    "TaskGraph",
+    "KernelSpec",
+    "PATTERNS",
+    "Runtime",
+    "get_runtime",
+    "available_runtimes",
+    "GrainSample",
+    "MetgResult",
+    "compute_metg",
+    "efficiency_curve",
+    "default_grain_schedule",
+    "DEFAULT_THRESHOLD",
+    "OverheadProfiler",
+    "measure_dispatch_overhead",
+]

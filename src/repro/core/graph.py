@@ -1,0 +1,153 @@
+"""Task graph abstraction — the heart of Task Bench.
+
+A task graph is ``steps`` timesteps x ``width`` parallel points. Each point at
+timestep ``t`` depends on a pattern-defined set of points at timestep ``t-1``.
+Executing the graph means executing every task (t, p) after its dependencies,
+with each task running a grain-size-parameterized kernel (see task_kernels.py).
+
+This mirrors Task Bench (Slaughter et al., SC'20) as used by the paper
+"Quantifying Overheads in Charm++ and HPX using Task Bench": the graph is the
+*workload*, the runtime (see runtimes/) is the *system under test*, and METG
+(see metg.py) is the *metric*.
+
+Dependence sets are materialized as padded index/mask arrays so that every
+runtime backend (fused jit, per-task dispatch, shard_map BSP, overlapped) can
+consume the same graph and must produce bit-identical dataflow. The arrays have
+a leading ``period`` dimension: patterns whose dependences change per timestep
+(fft, tree) repeat with period log2(width), so we store one period and index by
+``t % period`` instead of materializing all ``steps`` slices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import cached_property
+from typing import Tuple
+
+import numpy as np
+
+from repro.core import patterns as _patterns
+from repro.core.task_kernels import KernelSpec
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskGraph:
+    """A parameterized Task Bench task graph.
+
+    Attributes:
+      steps:   number of timesteps (T). The paper uses 1000.
+      width:   number of parallel points (W); typically #cores x overdecomposition.
+      pattern: dependence pattern name, one of ``patterns.PATTERNS``.
+      kernel:  grain-size-parameterized task body.
+      payload: floats of output state per point (task output size).
+      radius:  neighborhood radius for nearest/random_nearest.
+      fanout:  dependence count for spread.
+      seed:    RNG seed for random_nearest (deterministic graphs).
+    """
+
+    steps: int
+    width: int
+    pattern: str = "stencil_1d"
+    kernel: KernelSpec = dataclasses.field(default_factory=KernelSpec)
+    payload: int = 64
+    radius: int = 1
+    fanout: int = 3
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.pattern not in _patterns.PATTERNS:
+            raise ValueError(
+                f"unknown pattern {self.pattern!r}; known: {sorted(_patterns.PATTERNS)}"
+            )
+        if self.pattern in ("fft", "tree") and not _is_pow2(self.width):
+            raise ValueError(f"pattern {self.pattern} requires power-of-two width")
+        if self.steps < 1 or self.width < 1:
+            raise ValueError("steps and width must be >= 1")
+        if self.payload < 1:
+            raise ValueError("payload must be >= 1")
+
+    # ------------------------------------------------------------------ deps
+
+    def dependencies(self, t: int, p: int) -> Tuple[int, ...]:
+        """Points at timestep t-1 that task (t, p) consumes. Empty at t=0."""
+        if t == 0:
+            return ()
+        if not 0 <= p < self.width:
+            raise IndexError(f"point {p} outside [0, {self.width})")
+        return _patterns.dependencies(self, t, p)
+
+    def reverse_dependencies(self, t: int, p: int) -> Tuple[int, ...]:
+        """Points at timestep t+1 that consume task (t, p)."""
+        if t >= self.steps - 1:
+            return ()
+        return tuple(
+            q for q in range(self.width) if p in _patterns.dependencies(self, t + 1, q)
+        )
+
+    @cached_property
+    def period(self) -> int:
+        """Timestep periodicity of the dependence sets."""
+        return _patterns.period(self)
+
+    @cached_property
+    def max_deps(self) -> int:
+        return _patterns.max_deps(self)
+
+    def dependency_arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Padded dependence arrays.
+
+        Returns:
+          idx:  int32 (period, width, max_deps) — dependency point ids, padded
+                with 0 where masked out.
+          mask: float32 (period, width, max_deps) — 1.0 for live deps, else 0.0.
+
+        Timestep ``t >= 1`` uses slice ``(t - 1) % period`` (t=0 has no deps).
+        """
+        P, W, D = self.period, self.width, self.max_deps
+        idx = np.zeros((P, W, D), dtype=np.int32)
+        mask = np.zeros((P, W, D), dtype=np.float32)
+        for s in range(P):
+            t = s + 1  # slice s serves timesteps t with (t-1) % period == s
+            for p in range(W):
+                deps = _patterns.dependencies(self, t, p)
+                for j, d in enumerate(deps):
+                    idx[s, p, j] = d
+                    mask[s, p, j] = 1.0
+        return idx, mask
+
+    # ----------------------------------------------------------------- stats
+
+    @property
+    def num_tasks(self) -> int:
+        return self.steps * self.width
+
+    @cached_property
+    def num_dependencies(self) -> int:
+        """Total dependence edges in the graph."""
+        _, mask = self.dependency_arrays()
+        per_period = mask.sum(axis=(1, 2))
+        total = 0.0
+        for t in range(1, self.steps):
+            total += per_period[(t - 1) % self.period]
+        return int(total)
+
+    def flops_per_task(self) -> int:
+        return self.kernel.flops(self.payload)
+
+    def bytes_per_task(self) -> int:
+        return self.kernel.bytes(self.payload)
+
+    def total_flops(self) -> int:
+        return self.num_tasks * self.flops_per_task()
+
+    def describe(self) -> str:
+        return (
+            f"TaskGraph({self.pattern}, T={self.steps}, W={self.width}, "
+            f"payload={self.payload}, kernel={self.kernel.kind}"
+            f"@{self.kernel.iterations}it, deps<= {self.max_deps}, "
+            f"period={self.period})"
+        )

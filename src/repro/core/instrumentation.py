@@ -1,0 +1,145 @@
+"""Runtime-overhead instrumentation for production loops.
+
+This is the paper's methodology applied to the framework itself: a training
+or serving loop is a task graph whose per-step "tasks" are the model steps,
+and the quantity of interest is how much of the wall clock the *runtime*
+(dispatch, data feed, collective schedule) adds on top of pure compute.
+
+``OverheadProfiler`` wraps any step callable and reports:
+  * per-step wall times and effective task granularity
+    (wall x devices / tasks — Task Bench's granularity formula),
+  * dispatch overhead (measured with an empty jitted step),
+  * step-METG: the smallest per-step useful work that would keep the fleet
+    >= 50% efficient given the measured overhead — the paper's METG applied
+    to the production loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.metg import DEFAULT_THRESHOLD
+
+
+def measure_dispatch_overhead(reps: int = 50) -> float:
+    """Seconds of host->device dispatch latency for a trivial jitted op."""
+    f = jax.jit(lambda x: x + 1.0)
+    x = jnp.zeros(())
+    jax.block_until_ready(f(x))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        x = f(x)
+    jax.block_until_ready(x)
+    return (time.perf_counter() - t0) / reps
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    wall: float
+    tokens: int = 0
+    flops: float = 0.0
+
+
+@dataclasses.dataclass
+class OverheadReport:
+    steps: int
+    mean_wall: float
+    p50_wall: float
+    best_wall: float
+    dispatch_overhead: float
+    overhead_fraction: float  # dispatch / mean_wall
+    granularity_us: float  # wall x devices / tasks_per_step
+    step_metg_us: Optional[float]
+    sustained_flops_per_s: float
+
+    def lines(self) -> List[str]:
+        out = [
+            f"steps measured        : {self.steps}",
+            f"mean / p50 / best wall: {self.mean_wall * 1e3:.3f} / "
+            f"{self.p50_wall * 1e3:.3f} / {self.best_wall * 1e3:.3f} ms",
+            f"dispatch overhead     : {self.dispatch_overhead * 1e6:.1f} us "
+            f"({self.overhead_fraction * 100:.2f}% of step)",
+            f"effective granularity : {self.granularity_us:.1f} us",
+            f"sustained FLOP/s      : {self.sustained_flops_per_s / 1e9:.3f} G",
+        ]
+        if self.step_metg_us is not None:
+            out.append(f"step-METG(50%)        : {self.step_metg_us:.1f} us")
+        return out
+
+
+class OverheadProfiler:
+    """Wraps a step function; records walls; derives overhead metrics."""
+
+    def __init__(
+        self,
+        devices: int = 1,
+        tasks_per_step: int = 1,
+        flops_per_step: float = 0.0,
+        threshold: float = DEFAULT_THRESHOLD,
+    ):
+        self.devices = max(devices, 1)
+        self.tasks_per_step = max(tasks_per_step, 1)
+        self.flops_per_step = flops_per_step
+        self.threshold = threshold
+        self.records: List[StepRecord] = []
+        self._dispatch: Optional[float] = None
+
+    def wrap(self, step_fn: Callable) -> Callable:
+        def timed(*args, **kwargs):
+            t0 = time.perf_counter()
+            out = step_fn(*args, **kwargs)
+            out = jax.block_until_ready(out)
+            wall = time.perf_counter() - t0
+            self.records.append(
+                StepRecord(len(self.records), wall, flops=self.flops_per_step)
+            )
+            return out
+
+        return timed
+
+    def record(self, wall: float) -> None:
+        self.records.append(
+            StepRecord(len(self.records), wall, flops=self.flops_per_step)
+        )
+
+    @property
+    def dispatch_overhead(self) -> float:
+        if self._dispatch is None:
+            self._dispatch = measure_dispatch_overhead()
+        return self._dispatch
+
+    def report(self, skip_warmup: int = 1) -> OverheadReport:
+        recs = self.records[skip_warmup:] or self.records
+        if not recs:
+            raise ValueError("no steps recorded")
+        walls = sorted(r.wall for r in recs)
+        mean = sum(walls) / len(walls)
+        p50 = walls[len(walls) // 2]
+        best = walls[0]
+        disp = self.dispatch_overhead
+        gran_us = mean * self.devices / self.tasks_per_step * 1e6
+
+        # step-METG: per-step useful compute time c such that
+        # c / (c + overhead) = threshold  =>  c = overhead * th / (1 - th);
+        # expressed as granularity (per device) in microseconds.
+        th = self.threshold
+        metg_us = (disp * th / (1.0 - th)) / self.tasks_per_step * 1e6 \
+            if th < 1.0 else None
+
+        flops = self.flops_per_step / mean if mean > 0 else 0.0
+        return OverheadReport(
+            steps=len(recs),
+            mean_wall=mean,
+            p50_wall=p50,
+            best_wall=best,
+            dispatch_overhead=disp,
+            overhead_fraction=min(disp / mean, 1.0) if mean > 0 else 0.0,
+            granularity_us=gran_us,
+            step_metg_us=metg_us,
+            sustained_flops_per_s=flops,
+        )

@@ -1,0 +1,114 @@
+"""Shared halo-exchange dataflow used by the distributed runtimes.
+
+Points are block-distributed: device d owns rows [d*B, (d+1)*B) of the global
+(W, payload) state. Halo-expressible patterns (stencil/dom/nearest/...) reach
+at most ``r = halo_radius`` points across, so one ring exchange of r edge rows
+per direction supplies all remote inputs.
+
+``make_halo_combine`` builds a combine closure that EXACTLY matches
+``task_kernels.combine_dependencies`` (mean over live deps) so fused and
+distributed backends stay bit-compatible — the masks below must mirror
+patterns.dependencies for every edge case (global edges, dom's asymmetry,
+random_nearest's keep set).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import patterns as _patterns
+from repro.core.graph import TaskGraph
+
+
+def offset_keep(graph: TaskGraph) -> np.ndarray:
+    """Which window offsets [-r..r] the pattern actually consumes."""
+    r = _patterns.halo_radius(graph)
+    offsets = np.arange(-r, r + 1)
+    if graph.pattern == "no_comm":
+        return offsets == 0
+    if graph.pattern == "dom":
+        return offsets <= 0
+    # stencil_1d(_periodic), nearest, random_nearest: whole window
+    return np.ones_like(offsets, dtype=bool)
+
+
+def random_keep_table(graph: TaskGraph) -> Optional[np.ndarray]:
+    """(W, 2r+1) keep mask for random_nearest; None for other patterns."""
+    if graph.pattern != "random_nearest":
+        return None
+    r = graph.radius
+    W = graph.width
+    keep = np.zeros((W, 2 * r + 1), dtype=np.float32)
+    for p in range(W):
+        deps = set(_patterns.dependencies(graph, 1, p))
+        for j, o in enumerate(range(-r, r + 1)):
+            if (p + o) % W in deps:
+                keep[p, j] = 1.0
+    return keep
+
+
+def make_halo_combine(graph: TaskGraph) -> Callable:
+    """Build combine(ctx, n, p0) -> (n, payload).
+
+    Args (of the returned closure):
+      ctx: (n + 2r, payload) rows giving each output row its full window:
+           output row i consumes ctx rows [i, i + 2r].
+      n:   static number of output rows.
+      p0:  traced global point id of output row 0 (for edge masking).
+    """
+    r = _patterns.halo_radius(graph)
+    if r < 0:
+        raise ValueError(f"{graph.pattern} is not halo-expressible")
+    keep_np = offset_keep(graph)
+    nonperiodic = graph.pattern in ("stencil_1d", "dom")
+    rand_np = random_keep_table(graph)
+    W = graph.width
+    rand = jnp.asarray(rand_np) if rand_np is not None else None
+
+    def combine(ctx: jax.Array, n: int, p0: jax.Array) -> jax.Array:
+        if r == 0:  # no_comm: self only
+            return ctx
+        windows = jnp.stack(
+            [
+                jax.lax.dynamic_slice_in_dim(ctx, j, n, axis=0)
+                for j in range(2 * r + 1)
+            ],
+            axis=1,
+        )  # (n, 2r+1, payload)
+        p = p0 + jnp.arange(n)  # (n,) global ids
+        offs = jnp.arange(-r, r + 1)  # (2r+1,)
+        mask = jnp.broadcast_to(
+            jnp.asarray(keep_np, jnp.float32)[None, :], (n, 2 * r + 1)
+        )
+        if nonperiodic:
+            q = p[:, None] + offs[None, :]
+            mask = mask * ((q >= 0) & (q < W)).astype(jnp.float32)
+        if rand is not None:
+            mask = mask * jax.lax.dynamic_slice_in_dim(rand, p0, n, axis=0)
+        denom = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
+        return (windows * mask[..., None]).sum(axis=1) / denom
+
+    return combine
+
+
+def ring_perms(num_devices: int, axis: str = "shard"):
+    """Forward (d -> d+1) and backward (d -> d-1) ring permutations."""
+    fwd = [(d, (d + 1) % num_devices) for d in range(num_devices)]
+    bwd = [(d, (d - 1) % num_devices) for d in range(num_devices)]
+    return fwd, bwd
+
+
+def exchange_halos(local: jax.Array, r: int, num_devices: int, axis: str = "shard"):
+    """Ring-exchange r edge rows each way.
+
+    Returns (recv_left, recv_right): rows that sit immediately left/right of
+    this device's block in global order (wrapped at the ends; wrap values are
+    masked off by the combine for non-periodic patterns).
+    """
+    fwd, bwd = ring_perms(num_devices, axis)
+    recv_left = jax.lax.ppermute(local[-r:], axis, fwd)  # from d-1: its last r
+    recv_right = jax.lax.ppermute(local[:r], axis, bwd)  # from d+1: its first r
+    return recv_left, recv_right

@@ -1,0 +1,152 @@
+"""Runtime backend ABC + timing harness.
+
+A *runtime* executes a TaskGraph. Each backend models one of the paper's
+systems-under-test (DESIGN.md §2 has the full mapping):
+
+  fused       whole-graph single jit + lax.scan      (OpenMP / static analogue)
+  serialized  one host dispatch per task             (per-task spawn overhead)
+  bsp         shard_map + per-step host dispatch     (MPI analogue)
+  bsp_scan    shard_map + in-jit timestep loop       (MPI, amortized dispatch)
+  overlap     overdecomposed, halo/compute overlap   (Charm++ / HPX analogue)
+
+All backends must produce *identical* final states for the same graph — the
+dataflow semantics live in task_kernels.combine_* and are shared. Tests
+enforce cross-backend allclose; this is the system's core invariant.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import time
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.graph import TaskGraph
+from repro.core.metg import GrainSample
+
+
+def _fresh(x: jax.Array) -> jax.Array:
+    """A copy safe to hand to a donating executable."""
+    import jax.numpy as jnp
+
+    return jnp.array(x, copy=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingStats:
+    best: float
+    mean: float
+    walls: Tuple[float, ...]
+    dispatches: int  # host->device dispatch count for one graph execution
+
+
+class Runtime(abc.ABC):
+    """Executes task graphs under one scheduling/communication strategy."""
+
+    #: registry name; subclasses set this
+    name: str = "abstract"
+
+    def __init__(self, devices: Optional[Sequence[jax.Device]] = None, **options):
+        self.devices = list(devices) if devices is not None else jax.devices()
+        self.options = options
+
+    # -- capabilities ------------------------------------------------------
+
+    def supports(self, graph: TaskGraph) -> Tuple[bool, str]:
+        """Whether this backend can run the graph (and why not, if not)."""
+        return True, ""
+
+    def _require_support(self, graph: TaskGraph) -> None:
+        ok, why = self.supports(graph)
+        if not ok:
+            raise ValueError(f"runtime {self.name} cannot run {graph.describe()}: {why}")
+
+    # -- execution ---------------------------------------------------------
+
+    @abc.abstractmethod
+    def build(self, graph: TaskGraph) -> Callable[[jax.Array], Any]:
+        """Compile an executor: initial (W, payload) state -> final state."""
+
+    def dispatches_per_run(self, graph: TaskGraph) -> int:
+        """Host->device dispatch count for one execution (overhead model)."""
+        return 1
+
+    def execute(self, graph: TaskGraph, init: Optional[jax.Array] = None) -> np.ndarray:
+        """Run the graph once, returning the final (width, payload) state."""
+        from repro.core.task_kernels import initial_state
+
+        self._require_support(graph)
+        if init is None:
+            init = initial_state(graph.width, graph.payload, graph.seed)
+        fn = self.build(graph)
+        out = fn(_fresh(init))
+        return np.asarray(jax.block_until_ready(out))
+
+    # -- measurement -------------------------------------------------------
+
+    def measure(
+        self,
+        graph: TaskGraph,
+        *,
+        reps: int = 3,
+        warmup: int = 1,
+        init: Optional[jax.Array] = None,
+    ) -> Tuple[GrainSample, TimingStats]:
+        """Timed execution -> a GrainSample for the METG machinery."""
+        from repro.core.task_kernels import initial_state
+
+        self._require_support(graph)
+        if init is None:
+            init = initial_state(graph.width, graph.payload, graph.seed)
+        init = jax.block_until_ready(jax.device_put(init))
+        fn = self.build(graph)
+
+        # backends may donate their input buffers; each invocation gets a
+        # fresh copy, made OUTSIDE the timed region
+        for _ in range(max(warmup, 1)):
+            jax.block_until_ready(fn(_fresh(init)))
+        walls: List[float] = []
+        for _ in range(reps):
+            arg = jax.block_until_ready(_fresh(init))
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(arg))
+            walls.append(time.perf_counter() - t0)
+
+        stats = TimingStats(
+            best=min(walls),
+            mean=sum(walls) / len(walls),
+            walls=tuple(walls),
+            dispatches=self.dispatches_per_run(graph),
+        )
+        sample = GrainSample(
+            iterations=graph.kernel.iterations,
+            wall_time=stats.best,
+            total_flops=float(graph.total_flops()),
+            num_tasks=graph.num_tasks,
+            cores=len(self.devices),
+        )
+        return sample, stats
+
+
+# ----------------------------------------------------------------- registry
+
+_REGISTRY: dict = {}
+
+
+def register(cls):
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def get_runtime(name: str, **kwargs) -> Runtime:
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown runtime {name!r}; known: {sorted(_REGISTRY)}") from None
+    return cls(**kwargs)
+
+
+def available_runtimes() -> List[str]:
+    return sorted(_REGISTRY)

@@ -1,0 +1,275 @@
+"""`bsp` runtime — bulk-synchronous shard_map (the MPI analogue).
+
+Points are block-distributed over the device mesh. Every timestep is one
+synchronous superstep: exchange (collective), then compute — exactly MPI's
+send/recv + compute structure in the paper's Task Bench MPI backend.
+
+Two dispatch models:
+  bsp        one host dispatch per timestep (Python loop), charging per-step
+             launch overhead like an MPI rank's per-iteration progress loop.
+  bsp_scan   the whole timestep loop inside one jit (lax.scan + lax.switch
+             over the pattern period) — the "perfectly amortized" MPI bound.
+
+Collective selection per pattern class (see patterns.py):
+  halo       ring ppermute of r edge rows each way
+  butterfly  XOR block collective_permute (stride >= block) or local shuffle
+  global     all_to_all -> psum-mean; spread -> all_gather + arithmetic gather
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import patterns as _patterns
+from repro.core.graph import TaskGraph
+from repro.core.runtimes import _halo
+from repro.core.runtimes.base import Runtime, register
+from repro.core.task_kernels import apply_kernel
+
+AXIS = "shard"
+
+
+class _BspBase(Runtime):
+    """Shared machinery for bsp / bsp_scan / overlap."""
+
+    def _mesh(self) -> Mesh:
+        return Mesh(np.array(self.devices), (AXIS,))
+
+    def _block(self, graph: TaskGraph) -> int:
+        return graph.width // len(self.devices)
+
+    def supports(self, graph: TaskGraph):
+        D = len(self.devices)
+        if graph.width % D != 0:
+            return False, f"width {graph.width} not divisible by {D} devices"
+        B = graph.width // D
+        pat = graph.pattern
+        if pat in _patterns.HALO_PATTERNS or pat == "random_nearest":
+            r = _patterns.halo_radius(graph)
+            if r > B:
+                return False, f"halo radius {r} exceeds block {B} (multi-hop needed)"
+            return True, ""
+        if pat in _patterns.BUTTERFLY_PATTERNS:
+            if D & (D - 1):
+                return False, "butterfly patterns need power-of-two device count"
+            return True, ""
+        if pat in ("all_to_all", "spread", "trivial"):
+            return True, ""
+        return False, f"pattern {pat} unsupported by {self.name}"
+
+    # ---------------------------------------------------------- step bodies
+
+    def _make_halo_step(self, graph: TaskGraph, use_pallas: bool) -> Callable:
+        r = _patterns.halo_radius(graph)
+        B = self._block(graph)
+        D = len(self.devices)
+        combine = _halo.make_halo_combine(graph)
+        spec = graph.kernel
+
+        def step(local):  # (B, payload)
+            d = jax.lax.axis_index(AXIS)
+            p0 = d * B
+            if r == 0:
+                x = combine(local, B, p0)
+            else:
+                recv_l, recv_r = _halo.exchange_halos(local, r, D, AXIS)
+                ext = jnp.concatenate([recv_l, local, recv_r], axis=0)
+                x = combine(ext, B, p0)
+            return apply_kernel(x, spec, use_pallas=use_pallas)
+
+        return step
+
+    def _make_butterfly_steps(self, graph: TaskGraph, use_pallas: bool) -> List[Callable]:
+        """One step body per period slot k (pairing distance 2^k_eff)."""
+        W, D = graph.width, len(self.devices)
+        B = W // D
+        L = max(1, int(math.log2(W)))
+        spec = graph.kernel
+
+        def strides_for_slot(s: int) -> int:
+            if graph.pattern == "fft":
+                return 1 << (s % L)
+            k = s % (2 * L)
+            k = k if k < L else (2 * L - 1 - k)
+            return 1 << k
+
+        def make(stride: int) -> Callable:
+            def step(local):
+                if stride < B:  # partner within block: local row shuffle
+                    j = jnp.arange(B)
+                    partner = local[j ^ stride]
+                else:  # partner block: XOR collective permute
+                    bs = stride // B
+                    perm = [(d, d ^ bs) for d in range(D)]
+                    partner = jax.lax.ppermute(local, AXIS, perm)
+                x = (local + partner) * 0.5
+                return apply_kernel(x, spec, use_pallas=use_pallas)
+
+            return step
+
+        return [make(strides_for_slot(s)) for s in range(graph.period)]
+
+    def _make_global_step(self, graph: TaskGraph, use_pallas: bool) -> Callable:
+        W, D = graph.width, len(self.devices)
+        B = W // D
+        spec = graph.kernel
+        if graph.pattern == "all_to_all":
+
+            def step(local, t):
+                mean = jax.lax.psum(local.sum(axis=0), AXIS) / W
+                x = jnp.broadcast_to(mean[None, :], local.shape)
+                # psum output is shard-invariant; re-mark as varying so scan
+                # carries keep a consistent VMA type under shard_map.
+                x = jax.lax.pcast(x, AXIS, to="varying")
+                return apply_kernel(x, spec, use_pallas=use_pallas)
+
+            return step
+
+        if graph.pattern == "spread":
+            stride = max(1, W // graph.fanout)
+
+            def step(local, t):
+                full = jax.lax.all_gather(local, AXIS, axis=0, tiled=True)  # (W, P)
+                d = jax.lax.axis_index(AXIS)
+                p = d * B + jnp.arange(B)
+                ids = (p[:, None] + jnp.arange(graph.fanout)[None, :] * stride
+                       + (t - 1)) % W  # (B, fanout)
+                x = full[ids].mean(axis=1)
+                return apply_kernel(x, spec, use_pallas=use_pallas)
+
+            return step
+
+        if graph.pattern == "trivial":
+
+            def step(local, t):
+                return apply_kernel(local, spec, use_pallas=use_pallas)
+
+            return step
+
+        raise ValueError(graph.pattern)
+
+    def _shard_map(self, mesh: Mesh, fn: Callable, n_in: int = 1) -> Callable:
+        return jax.shard_map(
+            fn,
+            mesh=mesh,
+            in_specs=tuple([P(AXIS)] * n_in) if n_in > 1 else P(AXIS),
+            out_specs=P(AXIS),
+        )
+
+
+@register
+class BspRuntime(_BspBase):
+    name = "bsp"
+    loop_in_jit = False
+
+    def build(self, graph: TaskGraph) -> Callable[[jax.Array], jax.Array]:
+        use_pallas = bool(self.options.get("use_pallas", False))
+        donate = bool(self.options.get("donate", True))
+        mesh = self._mesh()
+        spec = graph.kernel
+        pat = graph.pattern
+
+        kernel_only = self._shard_map(
+            mesh, lambda local: apply_kernel(local, spec, use_pallas=use_pallas)
+        )
+        kernel_only = jax.jit(kernel_only, donate_argnums=(0,) if donate else ())
+
+        if pat in _patterns.HALO_PATTERNS or pat == "random_nearest":
+            body = self._make_halo_step(graph, use_pallas)
+            steps = [jax.jit(self._shard_map(mesh, body),
+                             donate_argnums=(0,) if donate else ())]
+            pick = lambda t: steps[0]
+        elif pat in _patterns.BUTTERFLY_PATTERNS:
+            bodies = self._make_butterfly_steps(graph, use_pallas)
+            steps = [jax.jit(self._shard_map(mesh, b),
+                             donate_argnums=(0,) if donate else ())
+                     for b in bodies]
+            period = graph.period
+            pick = lambda t: steps[(t - 1) % period]
+        else:  # global patterns take (local, t): t rides in replicated
+            body = self._make_global_step(graph, use_pallas)
+            stepped = jax.jit(
+                jax.shard_map(
+                    body, mesh=mesh, in_specs=(P(AXIS), P()), out_specs=P(AXIS)
+                ),
+                donate_argnums=(0,) if donate else (),
+            )
+
+            def pick(t):
+                return lambda s: stepped(s, jnp.int32(t))
+
+        sharding = NamedSharding(mesh, P(AXIS))
+
+        if self.loop_in_jit:
+            raise AssertionError("use BspScanRuntime")
+
+        def run(init):
+            state = kernel_only(jax.device_put(init, sharding))
+            for t in range(1, graph.steps):
+                state = pick(t)(state)
+            return state
+
+        return run
+
+    def dispatches_per_run(self, graph: TaskGraph) -> int:
+        return graph.steps
+
+
+@register
+class BspScanRuntime(_BspBase):
+    """BSP with the timestep loop fused into the jit (amortized dispatch)."""
+
+    name = "bsp_scan"
+
+    def build(self, graph: TaskGraph) -> Callable[[jax.Array], jax.Array]:
+        use_pallas = bool(self.options.get("use_pallas", False))
+        unroll = int(self.options.get("unroll", 1))
+        mesh = self._mesh()
+        spec = graph.kernel
+        pat = graph.pattern
+        period = graph.period
+
+        if pat in _patterns.HALO_PATTERNS or pat == "random_nearest":
+            body = self._make_halo_step(graph, use_pallas)
+            branches = [lambda local, t, b=body: b(local)]
+        elif pat in _patterns.BUTTERFLY_PATTERNS:
+            bodies = self._make_butterfly_steps(graph, use_pallas)
+            branches = [lambda local, t, b=b: b(local) for b in bodies]
+        else:
+            gbody = self._make_global_step(graph, use_pallas)
+            branches = [gbody]
+
+        def local_run(local):  # (B, payload) per device
+            local = apply_kernel(local, spec, use_pallas=use_pallas)
+            if graph.steps == 1:
+                return local
+
+            def scan_body(state, t):
+                if len(branches) == 1:
+                    new = branches[0](state, t)
+                else:
+                    slot = jax.lax.rem(t - 1, period)
+                    new = jax.lax.switch(
+                        slot, [lambda s, tt=t, br=br: br(s, tt) for br in branches],
+                        state,
+                    )
+                return new, None
+
+            local, _ = jax.lax.scan(
+                scan_body, local, jnp.arange(1, graph.steps), unroll=unroll
+            )
+            return local
+
+        fn = jax.jit(self._shard_map(mesh, local_run))
+        sharding = NamedSharding(mesh, P(AXIS))
+        return lambda init: fn(jax.device_put(init, sharding))
+
+    def dispatches_per_run(self, graph: TaskGraph) -> int:
+        return 1

@@ -1,0 +1,76 @@
+"""`fused` runtime — whole-graph single jit (the OpenMP/static analogue).
+
+The entire T-step graph lowers into one XLA program: a lax.scan over
+timesteps whose body gathers dependencies and applies the task kernel,
+vectorized over all W points. There is exactly ONE host dispatch per graph
+execution, so this backend's METG floor is set purely by XLA's fused compute
+throughput — the "zero runtime overhead" rung of the ladder, like the paper's
+best shared-memory configuration at coarse grain.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import TaskGraph
+from repro.core.runtimes.base import Runtime, register
+from repro.core.task_kernels import (
+    apply_kernel,
+    combine_all_to_all,
+    combine_dependencies,
+)
+
+
+@register
+class FusedRuntime(Runtime):
+    name = "fused"
+
+    def supports(self, graph: TaskGraph):
+        if graph.pattern == "all_to_all":
+            return True, ""
+        # (period, W, max_deps) index arrays; refuse absurd materializations.
+        cells = graph.period * graph.width * graph.max_deps
+        if cells > 64 << 20:
+            return False, f"dependency array too large ({cells} cells)"
+        return True, ""
+
+    def build(self, graph: TaskGraph) -> Callable[[jax.Array], jax.Array]:
+        spec = graph.kernel
+        use_pallas = bool(self.options.get("use_pallas", False))
+        unroll = int(self.options.get("unroll", 1))
+
+        if graph.pattern == "all_to_all":
+            combine = lambda state, t: combine_all_to_all(state)
+        else:
+            idx_np, mask_np = graph.dependency_arrays()
+            idx = jnp.asarray(idx_np)
+            mask = jnp.asarray(mask_np)
+            period = graph.period
+
+            def combine(state, t):
+                s = jax.lax.rem(t - 1, period)
+                i = jax.lax.dynamic_index_in_dim(idx, s, 0, keepdims=False)
+                m = jax.lax.dynamic_index_in_dim(mask, s, 0, keepdims=False)
+                return combine_dependencies(state, i, m)
+
+        def step(state, t):
+            x = combine(state, t)
+            return apply_kernel(x, spec, use_pallas=use_pallas), None
+
+        @jax.jit
+        def run(init):
+            state = apply_kernel(init, spec, use_pallas=use_pallas)  # t=0 tasks
+            if graph.steps == 1:
+                return state
+            state, _ = jax.lax.scan(
+                step, state, jnp.arange(1, graph.steps), unroll=unroll
+            )
+            return state
+
+        return run
+
+    def dispatches_per_run(self, graph: TaskGraph) -> int:
+        return 1

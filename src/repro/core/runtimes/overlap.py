@@ -1,0 +1,142 @@
+"""`overlap` runtime — overdecomposed, communication-hiding (Charm++/HPX analogue).
+
+The AMT value proposition the paper studies (§6.2): give each core N > 1 tasks
+so the runtime can execute ready tasks while messages for the others are in
+flight. The TPU-native rendition:
+
+  * each device owns B = width/devices points (B = the overdecomposition
+    factor when width = N x devices);
+  * per timestep, the halo ppermute for the boundary points is issued FIRST,
+    then the B - 2r interior points (whose inputs are all local) are computed
+    with no data dependence on the collective, then the boundary points
+    consume the received halos.
+
+XLA's latency-hiding scheduler can therefore place collective-permute-start
+before the interior compute and -done after it — the DMA rides under the MXU
+work exactly like a chare's entry method executing under an in-flight message.
+The whole timestep loop lives in one lax.scan (AMTs have no per-step host
+barrier), so dispatch overhead is ~zero and what remains is communication +
+schedule quality: the quantity the paper's Fig 2 isolates.
+
+Options (the Fig-3-style "build options" of this backend):
+  overlap=False      compute boundary first (no latency hiding) — the
+                     "simplified scheduling path" ablation.
+  halo_via="allgather"  transport ablation: fetch the whole ring instead of
+                     r-row halos (NIC-vs-SHMEM analogue; see DESIGN.md §2).
+  unroll=k           scan unroll factor.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import patterns as _patterns
+from repro.core.graph import TaskGraph
+from repro.core.runtimes import _halo
+from repro.core.runtimes.base import register
+from repro.core.runtimes.bsp import AXIS, _BspBase
+from repro.core.task_kernels import apply_kernel
+
+
+@register
+class OverlapRuntime(_BspBase):
+    name = "overlap"
+
+    def supports(self, graph: TaskGraph):
+        ok, why = super().supports(graph)
+        if not ok:
+            return ok, why
+        pat = graph.pattern
+        if pat not in _patterns.HALO_PATTERNS and pat != "random_nearest":
+            return False, f"overlap models halo patterns; {pat} is not one"
+        r = _patterns.halo_radius(graph)
+        B = self._block(graph)
+        if r > 0 and B < 2 * r:
+            return False, (
+                f"block {B} < 2*radius {r}: no interior to overlap "
+                f"(increase overdecomposition)"
+            )
+        return True, ""
+
+    def build(self, graph: TaskGraph) -> Callable[[jax.Array], jax.Array]:
+        use_pallas = bool(self.options.get("use_pallas", False))
+        do_overlap = bool(self.options.get("overlap", True))
+        halo_via = str(self.options.get("halo_via", "ppermute"))
+        unroll = int(self.options.get("unroll", 1))
+
+        mesh = self._mesh()
+        D = len(self.devices)
+        B = self._block(graph)
+        r = _patterns.halo_radius(graph)
+        spec = graph.kernel
+        combine = _halo.make_halo_combine(graph)
+
+        def fetch_halos(local):
+            if halo_via == "allgather":
+                full = jax.lax.all_gather(local, AXIS, axis=0, tiled=True)  # (W,P)
+                d = jax.lax.axis_index(AXIS)
+                left = jax.lax.dynamic_slice_in_dim(
+                    jnp.roll(full, r, axis=0), d * B, r, axis=0
+                )
+                right = jax.lax.dynamic_slice_in_dim(
+                    jnp.roll(full, -B, axis=0), d * B, r, axis=0
+                )
+                return left, right
+            return _halo.exchange_halos(local, r, D, AXIS)
+
+        def step(local):  # (B, payload)
+            d = jax.lax.axis_index(AXIS)
+            p0 = d * B
+            if r == 0:
+                return apply_kernel(combine(local, B, p0), spec,
+                                    use_pallas=use_pallas)
+
+            recv_l, recv_r = fetch_halos(local)
+
+            def interior():
+                # rows r .. B-r-1; their full window lives in `local`
+                x = combine(local, B - 2 * r, p0 + r)
+                return apply_kernel(x, spec, use_pallas=use_pallas)
+
+            def boundary(rl, rr):
+                ctx_top = jnp.concatenate([rl, local[: 2 * r]], axis=0)
+                ctx_bot = jnp.concatenate([local[B - 2 * r:], rr], axis=0)
+                top = apply_kernel(combine(ctx_top, r, p0), spec,
+                                   use_pallas=use_pallas)
+                bot = apply_kernel(combine(ctx_bot, r, p0 + B - r), spec,
+                                   use_pallas=use_pallas)
+                return top, bot
+
+            if do_overlap:
+                # interior first: no data dependence on the collective, so the
+                # scheduler may overlap the ppermute with this compute.
+                mid = interior()
+                top, bot = boundary(recv_l, recv_r)
+            else:
+                top, bot = boundary(recv_l, recv_r)
+                mid = interior()
+            return jnp.concatenate([top, mid, bot], axis=0)
+
+        def local_run(local):
+            local = apply_kernel(local, spec, use_pallas=use_pallas)
+            if graph.steps == 1:
+                return local
+
+            def body(state, _):
+                return step(state), None
+
+            local, _ = jax.lax.scan(
+                body, local, None, length=graph.steps - 1, unroll=unroll
+            )
+            return local
+
+        fn = jax.jit(self._shard_map(mesh, local_run))
+        sharding = NamedSharding(mesh, P(AXIS))
+        return lambda init: fn(jax.device_put(init, sharding))
+
+    def dispatches_per_run(self, graph: TaskGraph) -> int:
+        return 1

@@ -1,0 +1,94 @@
+"""`serialized` runtime — one host dispatch per task.
+
+Every task (t, p) is a separate jit call driven by a Python loop. This is the
+maximal-overhead rung: it charges the full host->device dispatch latency to
+every task, which is JAX's analogue of an AMT runtime's per-task spawn +
+schedule cost (the quantity the paper isolates with fine-grain sweeps; cf.
+HPX-local's threading-subsystem overhead, paper §3.3/§6.1).
+
+At large grain the dispatch cost amortizes and this backend reaches the same
+peak FLOP/s as `fused` (paper Fig 1a); at small grain its efficiency collapses
+first, giving it the largest METG — exactly the Charm++/HPX-vs-MPI shape of
+paper Table 2.
+
+The task body jit is compiled ONCE per (deps, payload) shape and reused by all
+T*W tasks, so what we time is dispatch, not compilation.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import TaskGraph
+from repro.core.runtimes.base import Runtime, register
+from repro.core.task_kernels import apply_kernel
+
+
+@register
+class SerializedRuntime(Runtime):
+    name = "serialized"
+
+    MAX_TASKS = 200_000  # refuse graphs whose python loop would take forever
+
+    def supports(self, graph: TaskGraph):
+        if graph.num_tasks > self.MAX_TASKS:
+            return False, f"too many tasks for per-task dispatch ({graph.num_tasks})"
+        if graph.pattern == "all_to_all" and graph.width > 1024:
+            return False, "all_to_all fan-in too wide for per-task gather"
+        return True, ""
+
+    def build(self, graph: TaskGraph) -> Callable[[jax.Array], jax.Array]:
+        spec = graph.kernel
+        use_pallas = bool(self.options.get("use_pallas", False))
+
+        @partial(jax.jit, static_argnums=())
+        def task_no_deps(x):  # (payload,)
+            return apply_kernel(x, spec, use_pallas=use_pallas)
+
+        @jax.jit
+        def task_with_deps(deps, mask):  # (D, payload), (D,)
+            w = mask[:, None]
+            combined = (deps * w).sum(0) / jnp.maximum(mask.sum(), 1.0)
+            return apply_kernel(combined, spec, use_pallas=use_pallas)
+
+        # Host-side dependency lists, precomputed (the "graph build" phase —
+        # Task Bench likewise excludes graph construction from timing).
+        dep_ids: List[List[tuple]] = []
+        for t in range(graph.steps):
+            dep_ids.append([graph.dependencies(t, p) for p in range(graph.width)])
+        D = max(1, graph.max_deps)
+        pad_masks = {}
+        for t in range(graph.steps):
+            for deps in dep_ids[t]:
+                n = len(deps)
+                if n and n not in pad_masks:
+                    pad_masks[n] = jnp.asarray(
+                        np.concatenate([np.ones(n), np.zeros(D - n)]).astype(np.float32)
+                    )
+
+        def run(init):
+            state = [init[p] for p in range(graph.width)]
+            state = [task_no_deps(x) for x in state]  # t = 0
+            zero = jnp.zeros_like(state[0])
+            for t in range(1, graph.steps):
+                nxt = []
+                for p in range(graph.width):
+                    deps = dep_ids[t][p]
+                    if not deps:
+                        nxt.append(task_no_deps(state[p]))
+                        continue
+                    stack = jnp.stack(
+                        [state[d] for d in deps] + [zero] * (D - len(deps))
+                    )
+                    nxt.append(task_with_deps(stack, pad_masks[len(deps)]))
+                state = nxt
+            return jnp.stack(state)
+
+        return run
+
+    def dispatches_per_run(self, graph: TaskGraph) -> int:
+        return graph.num_tasks

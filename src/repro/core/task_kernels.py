@@ -1,0 +1,165 @@
+"""Grain-size-parameterized task bodies.
+
+The paper's compute kernel executes ``iterations`` fused-multiply-adds per
+element ("the time for each vertex to execute such a kernel with a grain size
+of one is 2.5 ns" — paper §6.1). We reproduce that exactly: the task body is an
+iterated elementwise FMA over the point's payload vector, so
+
+    FLOPs(task) = 2 * payload * iterations        (compute_bound)
+
+``memory_bound`` sweeps a scratch buffer instead (bytes-dominated), and
+``empty`` is a no-op body used to measure pure runtime overhead.
+
+The *reference* implementation here is pure jnp (this module). The TPU
+hot-spot implementation is ``repro.kernels.taskbench_compute`` (Pallas,
+VMEM-tiled); runtimes select it with ``use_pallas=True`` and tests assert
+allclose between the two across shapes/dtypes.
+
+Numerical design: the FMA uses a contraction map x <- a*x + b with |a| < 1 so
+arbitrarily many iterations stay bounded (no inf/nan at any grain size) while
+remaining un-DCE-able (result depends on every iteration and on the combined
+dependency inputs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# Contraction constants: x converges towards B/(1-A) = 0.1/0.5 without ever
+# being constant-foldable (A, B are runtime scalars broadcast in).
+FMA_A = 0.5
+FMA_B = 0.1
+
+KINDS = ("compute_bound", "memory_bound", "empty")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Task body spec. ``iterations`` is the grain-size knob."""
+
+    kind: str = "compute_bound"
+    iterations: int = 16
+    scratch: int = 2048  # floats; memory_bound working set per point
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown kernel kind {self.kind!r}; known {KINDS}")
+        if self.iterations < 0:
+            raise ValueError("iterations must be >= 0")
+
+    def flops(self, payload: int) -> int:
+        if self.kind == "compute_bound":
+            return 2 * payload * self.iterations
+        if self.kind == "memory_bound":
+            return self.scratch * self.iterations  # 1 add per touched element
+        return 0
+
+    def bytes(self, payload: int) -> int:
+        if self.kind == "compute_bound":
+            return 4 * payload * 2  # read + write once; iterations live in reg
+        if self.kind == "memory_bound":
+            return 4 * self.scratch * 2 * self.iterations
+        return 0
+
+    def grain_duration_estimate(self, payload: int, flops_per_s: float) -> float:
+        """Seconds per task at a given sustained FLOP rate (napkin math)."""
+        return self.flops(payload) / max(flops_per_s, 1.0)
+
+
+# --------------------------------------------------------------------------
+# Reference (pure-jnp) task bodies. All operate on x: (..., payload) f32.
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnums=(1,))
+def _compute_bound_jit(x: jax.Array, iterations: int) -> jax.Array:
+    return compute_bound_body(x, iterations)
+
+
+def compute_bound_body(x: jax.Array, iterations: int) -> jax.Array:
+    """Iterated FMA: x <- A*x + B, ``iterations`` times (trace-time loop-free)."""
+    a = jnp.asarray(FMA_A, x.dtype)
+    b = jnp.asarray(FMA_B, x.dtype)
+
+    def body(_, v):
+        return a * v + b
+
+    return jax.lax.fori_loop(0, iterations, body, x)
+
+
+def memory_bound_body(x: jax.Array, iterations: int, scratch: int) -> jax.Array:
+    """Bytes-dominated body: stream a scratch buffer ``iterations`` times.
+
+    Each point expands its payload into a (scratch,) working set, sweeps it
+    (read-modify-write) per iteration, then reduces back to payload size.
+    """
+    lead = x.shape[:-1]
+    payload = x.shape[-1]
+    reps = -(-scratch // payload)  # ceil
+    buf = jnp.tile(x, lead and (1,) * len(lead) + (reps,) or (reps,))[..., :scratch]
+
+    def body(i, b):
+        # rotate + add: forces a full read and write of the buffer
+        return jnp.roll(b, 1, axis=-1) + jnp.asarray(1e-6, b.dtype)
+
+    buf = jax.lax.fori_loop(0, iterations, body, buf)
+    # reduce back to payload: mean over the scratch window per payload slot
+    pad = reps * payload - scratch
+    buf = jnp.concatenate([buf, jnp.zeros(lead + (pad,), buf.dtype)], axis=-1)
+    return buf.reshape(lead + (reps, payload)).mean(axis=-2)
+
+
+def apply_kernel(
+    x: jax.Array, spec: KernelSpec, *, use_pallas: bool = False
+) -> jax.Array:
+    """Apply the task body to a batch of point states x: (..., payload)."""
+    if spec.kind == "empty" or spec.iterations == 0:
+        return x
+    if spec.kind == "compute_bound":
+        if use_pallas:
+            from repro.kernels import ops as _kops
+
+            return _kops.taskbench_compute(x, spec.iterations)
+        return compute_bound_body(x, spec.iterations)
+    if spec.kind == "memory_bound":
+        return memory_bound_body(x, spec.iterations, spec.scratch)
+    raise ValueError(spec.kind)
+
+
+def combine_dependencies(
+    outputs: jax.Array, idx: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """Gather + reduce dependency outputs into per-point kernel inputs.
+
+    Args:
+      outputs: (W, payload) previous-step point outputs.
+      idx:     (W, D) int32 dependency indices (padded).
+      mask:    (W, D) f32 1/0 liveness.
+
+    Returns:
+      (W, payload): mean over live deps of their outputs; points with zero
+      deps (trivial pattern / masked rows) keep their own previous output.
+    """
+    gathered = outputs[idx]  # (W, D, payload)
+    w = mask[..., None]
+    denom = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)[..., None]
+    combined = (gathered * w).sum(axis=1) / denom[:, 0]
+    has_deps = (mask.sum(-1) > 0)[:, None]
+    return jnp.where(has_deps, combined, outputs)
+
+
+def combine_all_to_all(outputs: jax.Array) -> jax.Array:
+    """Specialized combine for the all_to_all pattern: mean over all points.
+
+    Avoids materializing the (W, W) index array for wide graphs.
+    """
+    mean = outputs.mean(axis=0, keepdims=True)
+    return jnp.broadcast_to(mean, outputs.shape)
+
+
+def initial_state(width: int, payload: int, seed: int = 0) -> jax.Array:
+    key = jax.random.PRNGKey(seed)
+    return jax.random.uniform(key, (width, payload), jnp.float32, 0.1, 1.0)

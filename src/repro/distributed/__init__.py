@@ -1,0 +1,1 @@
+"""Distributed runtime: logical-axis sharding, collectives, pipeline, ZeRO."""

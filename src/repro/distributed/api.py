@@ -1,0 +1,121 @@
+"""Logical-axis sharding context used throughout the model code.
+
+Model code annotates activations/params with *logical* axis names
+("batch", "heads", "ff", ...). A ``ShardingRules`` mapping — chosen per
+(arch x step kind) by distributed/sharding.py — resolves them to mesh axes.
+Outside any mesh context the constraints are no-ops, so the same model code
+runs single-device smoke tests and 512-chip dry-runs unchanged.
+
+Divisibility guard: a logical dim whose size does not divide the mesh axis
+product resolves to None (replicated) instead of failing — e.g. hymba's 5 KV
+heads on a 16-way model axis stay replicated while its 25 q heads... also not
+divisible; both replicate, and the FF/vocab dims carry the TP instead.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from contextvars import ContextVar
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+AxisRef = Union[None, str, Tuple[str, ...]]
+
+_ACTIVE: ContextVar = ContextVar("repro_sharding_ctx", default=None)
+
+
+class ShardingRules:
+    """logical axis name -> mesh axis (or tuple of axes, or None)."""
+
+    def __init__(self, mapping: Dict[str, AxisRef]):
+        self.mapping = dict(mapping)
+
+    def resolve(self, name: Optional[str]) -> AxisRef:
+        if name is None:
+            return None
+        return self.mapping.get(name)
+
+    def override(self, **kw: AxisRef) -> "ShardingRules":
+        m = dict(self.mapping)
+        m.update(kw)
+        return ShardingRules(m)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Optional[Mesh], rules: Optional[ShardingRules]):
+    token = _ACTIVE.set((mesh, rules) if mesh is not None else None)
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = _ACTIVE.get()
+    return ctx[0] if ctx else None
+
+
+def current_rules() -> Optional[ShardingRules]:
+    ctx = _ACTIVE.get()
+    return ctx[1] if ctx else None
+
+
+def _axis_size(mesh: Mesh, ref: AxisRef) -> int:
+    if ref is None:
+        return 1
+    if isinstance(ref, str):
+        return mesh.shape[ref]
+    return math.prod(mesh.shape[a] for a in ref)
+
+
+def spec_for(shape: Sequence[int], names: Sequence[Optional[str]]) -> Optional[P]:
+    """Resolve logical names to a PartitionSpec under the active context."""
+    ctx = _ACTIVE.get()
+    if ctx is None:
+        return None
+    mesh, rules = ctx
+    parts = []
+    used: set = set()
+    for dim, name in zip(shape, names):
+        ref = rules.resolve(name)
+        if ref is not None and dim % _axis_size(mesh, ref) != 0:
+            ref = None  # replicate instead of failing (documented guard)
+        if ref is not None:
+            # one mesh axis may appear once per spec; first dim wins (e.g.
+            # logits (batch, seq, vocab) under SP: seq takes "model", vocab
+            # replicates)
+            axes = (ref,) if isinstance(ref, str) else tuple(ref)
+            if any(a in used for a in axes):
+                ref = None
+            else:
+                used.update(axes)
+        parts.append(ref)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Apply with_sharding_constraint per the active logical rules (no-op
+    outside a mesh context)."""
+    ctx = _ACTIVE.get()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    if len(names) != x.ndim:
+        raise ValueError(f"{len(names)} names for rank-{x.ndim} array")
+    spec = spec_for(x.shape, names)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def sharding_of(shape: Sequence[int], names: Sequence[Optional[str]]):
+    """NamedSharding for an input/param with the given logical names (or None
+    outside a mesh context) — used to build in_shardings for jit."""
+    ctx = _ACTIVE.get()
+    if ctx is None:
+        return None
+    mesh, _ = ctx
+    return NamedSharding(mesh, spec_for(shape, names))

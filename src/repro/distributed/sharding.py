@@ -1,0 +1,218 @@
+"""ShardingPolicy: logical-axis rule sets + param PartitionSpec trees.
+
+One policy per (arch x step kind). The production meshes are
+(data=16, model=16) and (pod=2, data=16, model=16); see launch/mesh.py.
+
+Strategy summary (DESIGN.md §5):
+  train/prefill  DP over (pod, data); Megatron TP over model (qkv/gate/up
+                 column, o/down row); sequence-parallel residual stream over
+                 model; vocab-sharded embedding/head/logits; MoE expert FFNs
+                 tensor-sharded over model ("expert_ff"); optional FSDP
+                 (params additionally sharded over data, gathered per scanned
+                 layer block).
+  decode         batch over (pod, data); cache sequence-sharded over model
+                 (long_500k: over data AND model — batch=1 frees both), read
+                 via the lse-combine shard_map; TP over model for projections.
+
+Param specs are derived from pytree paths — the table below is the single
+source of truth for which dim of which weight carries which logical axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.api import ShardingRules
+
+# (submodule, leaf) -> logical names per dim (without the scan-stack dim).
+# "fsdp" marks the dim that FSDP additionally shards over data.
+_PARAM_TABLE: Dict[Tuple[str, str], Tuple[Optional[str], ...]] = {
+    ("", "embed"): ("vocab", "embed_fsdp"),
+    ("", "head"): ("embed_fsdp", "vocab"),
+    ("", "final_norm"): (None,),
+    ("attn", "wq"): ("fsdp", "heads_out"),
+    ("attn", "wk"): ("fsdp", "kv_out"),
+    ("attn", "wv"): ("fsdp", "kv_out"),
+    ("attn", "wo"): ("heads_out", "fsdp"),
+    ("attn", "q_norm"): (None,),
+    ("attn", "k_norm"): (None,),
+    ("mlp", "gate"): ("fsdp", "ff"),
+    ("mlp", "up"): ("fsdp", "ff"),
+    ("mlp", "down"): ("ff", "fsdp"),
+    ("moe", "router"): ("fsdp", None),
+    ("moe", "gate"): ("experts", "fsdp", "expert_ff"),
+    ("moe", "up"): ("experts", "fsdp", "expert_ff"),
+    ("moe", "down"): ("experts", "expert_ff", "fsdp"),
+    ("ssm", "in_proj"): ("fsdp", "ssm_inner"),
+    ("ssm", "out_proj"): ("ssm_inner", "fsdp"),
+    ("ssm", "conv_w"): (None, "ssm_inner"),
+    ("ssm", "conv_b"): ("ssm_inner",),
+    ("ssm", "A_log"): (None,),
+    ("ssm", "D"): (None,),
+    ("ssm", "dt_bias"): (None,),
+    ("ssm", "norm_w"): ("ssm_inner",),
+}
+_NORMS = ("norm1", "norm2", "fuse_norm_a", "fuse_norm_s")
+
+
+@dataclasses.dataclass
+class ShardingPolicy:
+    mesh: Mesh
+    rules: ShardingRules
+    fsdp: bool
+
+    # ---------------------------------------------------------- factories
+
+    @staticmethod
+    def for_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                 fsdp: Optional[bool] = None) -> "ShardingPolicy":
+        multi_pod = "pod" in mesh.shape
+        dp = ("pod", "data") if multi_pod else ("data",)
+        if fsdp is None:
+            # params bf16 per model shard > ~4 GB -> gather-per-block FSDP
+            fsdp = cfg.param_count() * 2 / mesh.shape["model"] > 4e9
+        common = {
+            "heads_out": "model", "kv_out": "model", "ff": "model",
+            "vocab": "model", "expert_ff": "model", "experts": None,
+            "ssm_inner": "model", "embed_fsdp": None,
+            "fsdp": dp if fsdp else None,
+            "heads": "model", "batch": dp,
+        }
+        if shape.kind in ("train", "prefill"):
+            rules = ShardingRules({
+                **common,
+                "seq": "model",  # sequence-parallel residual stream
+                # attention q rows / SSD chunks: "heads" is named first on
+                # those tensors, so when the head count divides the axis TP
+                # carries it and seq_q is dropped (de-dup guard); when it
+                # does NOT divide (granite 24H, hymba 25H, musicgen 24H,
+                # mamba2 24 ssd heads) the inner compute would replicate
+                # 16x — seq_q picks the axis up instead (§Perf #3)
+                "seq_q": "model",
+                "cap": dp,  # MoE buckets: capacity over DP axes
+                "cache_seq": None,
+            })
+        else:  # decode
+            long_ctx = shape.global_batch < mesh.shape["data"]
+            rules = ShardingRules({
+                **common,
+                "fsdp": None,  # decode never FSDPs (no grads/opt state)
+                "seq": None,
+                "seq_q": None,
+                "cap": None,
+                "cache_seq": ("data", "model") if long_ctx else "model",
+            })
+            fsdp = False
+        return ShardingPolicy(mesh=mesh, rules=rules, fsdp=fsdp)
+
+    # ------------------------------------------------------- param specs
+
+    def _leaf_spec(self, path, leaf) -> P:
+        names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        leaf_name = names[-1]
+        stacked = any(str(n).startswith("group") for n in names[:-1])
+        sub = ""
+        for n in names[:-1]:
+            if n in ("attn", "mlp", "moe", "ssm"):
+                sub = n
+        if leaf_name in _NORMS or leaf_name in (
+            "fuse_a", "fuse_s", "gate_attn", "gate_mlp"
+        ):
+            logical: Tuple[Optional[str], ...] = (None,) * (
+                leaf.ndim - (1 if stacked else 0)
+            )
+        else:
+            key = (sub, leaf_name)
+            if key not in _PARAM_TABLE:
+                raise KeyError(f"no sharding rule for param {names}")
+            logical = _PARAM_TABLE[key]
+        parts = []
+        for dim, name in zip(leaf.shape[1:] if stacked else leaf.shape, logical):
+            ref = self.rules.resolve(name)
+            if ref is not None:
+                import math as _m
+
+                size = (self.mesh.shape[ref] if isinstance(ref, str)
+                        else _m.prod(self.mesh.shape[a] for a in ref))
+                if dim % size != 0:
+                    ref = None
+            parts.append(ref)
+        if stacked:
+            parts = [None] + parts
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def param_specs(self, params: Any) -> Any:
+        return jax.tree_util.tree_map_with_path(self._leaf_spec, params)
+
+    def param_shardings(self, params: Any) -> Any:
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), self.param_specs(params)
+        )
+
+    # ------------------------------------------------- input/cache specs
+
+    def batch_spec(self) -> P:
+        return P(self.rules.resolve("batch"))
+
+    def batch_shardings(self, batch_tree: Any) -> Any:
+        dp = self.rules.resolve("batch")
+        mesh = self.mesh
+        import math as _m
+
+        dp_size = 1 if dp is None else (
+            mesh.shape[dp] if isinstance(dp, str)
+            else _m.prod(mesh.shape[a] for a in dp))
+
+        def leaf(x):
+            # divisibility guard: long_500k has global_batch=1 — replicate
+            ref = dp if (dp and x.shape[0] % dp_size == 0) else None
+            parts = [ref] + [None] * (x.ndim - 1)
+            return NamedSharding(self.mesh, P(*parts))
+
+        return jax.tree.map(leaf, batch_tree)
+
+    def cache_shardings(self, caches: Any) -> Any:
+        """Attention k/v (stack, B, Hkv, S, hd): batch over DP + S over
+        cache_seq. SSM ssd state (stack, B, H, N, P): batch + H over model.
+        SSM conv window (stack, B, cw-1, ch): batch + channels over model."""
+        dp = self.rules.resolve("batch")
+        seq = self.rules.resolve("cache_seq")
+        mesh = self.mesh
+        import math as _m
+
+        def fits(ref, dim):
+            if ref is None:
+                return None
+            size = (mesh.shape[ref] if isinstance(ref, str)
+                    else _m.prod(mesh.shape[a] for a in ref))
+            return ref if dim % size == 0 else None
+
+        def leaf(path, x):
+            names = [str(getattr(k, "key", getattr(k, "name", ""))) for k in path]
+            kind = next((n for n in ("conv", "ssd", "k_scale", "v_scale",
+                                     "k", "v") if n in names), "")
+            if kind in ("k", "v", "k_scale", "v_scale"):
+                # (stack, B, Hkv, S, hd) / scales (stack, B, Hkv, S, 1)
+                spec = P(None, fits(dp, x.shape[1]), None,
+                         fits(seq, x.shape[3]), None)
+            elif kind == "ssd":  # (stack, B, H, N, P)
+                spec = P(None, fits(dp, x.shape[1]),
+                         fits(self.rules.resolve("heads"), x.shape[2]))
+            elif kind == "conv":  # (stack, B, cw-1, ch)
+                spec = P(None, fits(dp, x.shape[1]), None,
+                         fits(self.rules.resolve("ssm_inner"), x.shape[3]))
+            else:
+                spec = P(*([None] * x.ndim))
+            return NamedSharding(mesh, spec)
+
+        return jax.tree_util.tree_map_with_path(leaf, caches)
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())

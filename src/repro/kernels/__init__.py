@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel lives in <name>.py (pl.pallas_call + BlockSpec), has a pure-jnp
+oracle in ref.py, and a public jit'd wrapper in ops.py that auto-selects
+interpret mode off-TPU.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,144 @@
+"""Single-token decode attention (FlashDecoding-style) in Pallas.
+
+Decode reads a long KV cache with a single query per head: memory-bound, so
+the kernel's job is to stream the cache through VMEM exactly once. Grid is
+(batch, kv_heads, cache_blocks); each step loads one (blk_s x D) cache tile
+and updates the online-softmax state for the whole GQA query group (G query
+rows that share this kv head) — the group rides in sublanes so the tile is
+read once per group, not once per query head.
+
+Validity of cache positions is supplied as an additive bias row (0 or -inf)
+rather than a scalar-prefetch length: portable across interpret mode and
+easily extended to paged caches (bias doubles as the page mask).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+SUBLANE = 8
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_out_ref, l_out_ref,
+                   acc_ref, m_ref, l_ref):
+    s_blk = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(s_blk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (blk_s, D)
+    v = v_ref[0, 0].astype(jnp.float32)  # (blk_s, D)
+    bias = bias_ref[0].astype(jnp.float32)  # (blk_s,)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (G, blk_s)
+    s = s + bias[None, :]
+
+    m_prev = m_ref[:, :1]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(bias[None, :] > NEG_INF * 0.5, p, 0.0)
+
+    l_ref[...] = jnp.broadcast_to(
+        alpha * l_ref[:, :1] + p.sum(axis=-1, keepdims=True), l_ref.shape
+    )
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(s_blk == ns - 1)
+    def _fin():
+        l = l_ref[:, :1]
+        lsafe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / lsafe).astype(o_ref.dtype)
+        m_out_ref[0, 0] = m_ref[...].astype(m_out_ref.dtype)
+        l_out_ref[0, 0] = l_ref[...].astype(l_out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sm_scale", "blk_s", "window", "interpret")
+)
+def decode_attention_pallas(
+    q: jax.Array,        # (B, Hq, D) — one query token per head
+    k_cache: jax.Array,  # (B, Hkv, S, D)
+    v_cache: jax.Array,  # (B, Hkv, S, D)
+    lengths: jax.Array,  # (B,) int32 — valid cache prefix per sequence
+    *,
+    sm_scale: float | None = None,
+    blk_s: int = 512,
+    window: int = 0,  # sliding window: only the last `window` positions visible
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
+    G = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(D)
+
+    # additive validity bias, precomputed on host-side jnp (B, S)
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+    valid = pos < lengths[:, None]
+    if window > 0:
+        valid = jnp.logical_and(valid, pos >= lengths[:, None] - window)
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+    # group queries under their kv head: (B, Hkv, G, D), scale folded into q
+    qg = (q * sm_scale).reshape(B, Hkv, G, D)
+    pad_g = (-G) % SUBLANE
+    pad_d = (-D) % LANE
+    blk_s = min(blk_s, max(SUBLANE, 1 << (S - 1).bit_length()))
+    pad_s = (-S) % blk_s
+    qg = jnp.pad(qg, ((0, 0), (0, 0), (0, pad_g), (0, pad_d)))
+    kp = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad_s), (0, pad_d)))
+    vp = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad_s), (0, pad_d)))
+    biasp = jnp.pad(bias, ((0, 0), (0, pad_s)), constant_values=NEG_INF)
+    Gp, Dp, Sp = G + pad_g, D + pad_d, S + pad_s
+
+    grid = (B, Hkv, Sp // blk_s)
+    out, m_out, l_out = pl.pallas_call(
+        _decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Gp, Dp), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, blk_s, Dp), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, blk_s, Dp), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, blk_s), lambda b, h, s: (b, s)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Gp, Dp), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, Gp, LANE), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, Gp, LANE), lambda b, h, s: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, Gp, Dp), q.dtype),
+            jax.ShapeDtypeStruct((B, Hkv, Gp, LANE), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, Gp, LANE), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Gp, Dp), jnp.float32),
+            pltpu.VMEM((Gp, LANE), jnp.float32),
+            pltpu.VMEM((Gp, LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kp, vp, biasp)
+    o = out[:, :, :G, :D].reshape(B, Hq, D)
+    m = m_out[:, :, :G, 0].reshape(B, Hq)
+    l = l_out[:, :, :G, 0].reshape(B, Hq)
+    return o, m, l

@@ -1,0 +1,163 @@
+"""Blockwise online-softmax attention (FlashAttention) for TPU in Pallas.
+
+Grid: (batch, q_heads, q_blocks, k_blocks) — the k dimension is innermost and
+TPU grids execute sequentially, so the running (m, l, acc) state lives in VMEM
+scratch across k steps (the canonical TPU flash pattern; FA-2 arXiv:2307.08691
+adapted to MXU tiling: blocks are (blk_q x D) @ (D x blk_k) matmuls with
+lane-padded D).
+
+Features:
+  * causal masking
+  * sliding-window masking (SWA, window w: q - k < w) — Mistral/Gemma local
+  * GQA: kv head = q head // group, expressed in the k/v BlockSpec index maps
+    so kv blocks are fetched once per group (no host-side head replication)
+  * key-length masking for padded sequences
+  * fully-masked k blocks are skipped via pl.when (big win for SWA/causal)
+
+Forward only: the framework uses this kernel on no-grad paths (prefill/serve);
+the training path uses the jnp reference (ref.py) which jax.grad handles.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, sm_scale: float, causal: bool, window: int, blk_q: int, blk_k: int,
+    seq_k: int,
+):
+    i = pl.program_id(2)  # q block
+    j = pl.program_id(3)  # k block
+    nk = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # --- block-level visibility (skip fully masked k blocks) ---------------
+    q_lo = i * blk_q
+    q_hi = q_lo + blk_q - 1
+    k_lo = j * blk_k
+    visible = k_lo < seq_k  # traced (program_id): padded tail blocks skip
+    if causal:
+        visible = jnp.logical_and(visible, k_lo <= q_hi)
+    if window > 0:
+        k_hi_blk = k_lo + blk_k - 1
+        visible = jnp.logical_and(visible, k_hi_blk >= q_lo - window + 1)
+
+    @pl.when(visible)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (blk_q, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (blk_k, D)
+        v = v_ref[0, 0].astype(jnp.float32)  # (blk_k, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale  # (blk_q, blk_k)
+
+        qi = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kj = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kj < seq_k
+        if causal:
+            mask = jnp.logical_and(mask, kj <= qi)
+        if window > 0:
+            mask = jnp.logical_and(mask, qi - kj < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]  # (blk_q, 1)
+        m_cur = s.max(axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)  # (blk_q, 1)
+        p = jnp.exp(s - m_new)  # (blk_q, blk_k)
+        p = jnp.where(mask, p, 0.0)
+
+        l_new = alpha * l_ref[:, :1] + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == nk - 1)
+    def _fin():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "sm_scale", "blk_q", "blk_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (B, Hq, Sq, D)
+    k: jax.Array,  # (B, Hkv, Sk, D)
+    v: jax.Array,  # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,  # 0 = unlimited
+    sm_scale: float | None = None,
+    blk_q: int = 128,
+    blk_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
+    group = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(D)
+
+    blk_q = min(blk_q, max(8, 1 << (Sq - 1).bit_length()))
+    blk_k = min(blk_k, max(8, 1 << (Sk - 1).bit_length()))
+    pad_d = (-D) % LANE
+    pad_q = (-Sq) % blk_q
+    pad_k = (-Sk) % blk_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, pad_d)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, pad_d)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, pad_d)))
+    Sqp, Skp, Dp = Sq + pad_q, Sk + pad_k, D + pad_d
+
+    grid = (B, Hq, Sqp // blk_q, Skp // blk_k)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            sm_scale=sm_scale,
+            causal=causal,
+            window=window,
+            blk_q=blk_q,
+            blk_k=blk_k,
+            seq_k=Sk,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, Dp), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec(
+                (1, 1, blk_k, Dp), lambda b, h, i, j, g=group: (b, h // g, j, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, blk_k, Dp), lambda b, h, i, j, g=group: (b, h // g, j, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, Dp), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sqp, Dp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, Dp), jnp.float32),
+            pltpu.VMEM((blk_q, LANE), jnp.float32),
+            pltpu.VMEM((blk_q, LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :Sq, :D]

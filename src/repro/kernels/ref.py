@@ -1,0 +1,251 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the normative semantics: tests sweep shapes/dtypes and assert the
+Pallas kernels (interpret mode on CPU) match these within tolerance. They are
+also the differentiable implementations the training path uses (the Pallas
+kernels here are forward-only).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.task_kernels import FMA_A, FMA_B
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------ taskbench FMA
+
+
+def taskbench_compute_ref(x: jax.Array, iterations: int) -> jax.Array:
+    a = jnp.asarray(FMA_A, x.dtype)
+    b = jnp.asarray(FMA_B, x.dtype)
+
+    def body(_, v):
+        return a * v + b
+
+    return jax.lax.fori_loop(0, iterations, body, x)
+
+
+# ----------------------------------------------------------------- rmsnorm
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------- attention
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Hq, Sq, D)
+    k: jax.Array,  # (B, Hkv, Sk, D)
+    v: jax.Array,  # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    sm_scale: Optional[float] = None,
+    q_offset: int = 0,  # global position of q row 0 (for cached decode)
+) -> jax.Array:
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    G = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(D)
+    kx = jnp.repeat(k, G, axis=1)
+    vx = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * sm_scale
+    qi = q_offset + jnp.arange(Sq)[:, None]
+    kj = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kj <= qi
+    if window > 0:
+        mask &= (qi - kj) < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None, None], p, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32)).astype(q.dtype)
+
+
+def chunked_attention_ref(
+    q: jax.Array,  # (B, Hq, Sq, D)
+    k: jax.Array,  # (B, Hkv, Sk, D)
+    v: jax.Array,  # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    sm_scale: Optional[float] = None,
+    q_offset: int = 0,
+    blk: int = 1024,
+) -> jax.Array:
+    """Flash attention in pure jnp: lax.scan over key blocks with an online
+    softmax, body rematerialized (jax.checkpoint) so fwd AND bwd memory are
+    O(Sq x blk), never O(Sq x Sk).
+
+    This is the differentiable flash implementation the training path uses
+    and the implementation of record for dry-run compiles: interpret-mode
+    Pallas lowers to a grid-sized while loop whose HLO misrepresents the
+    kernel's true cost, while this lowering has the same FLOPs/bytes shape a
+    real fused kernel has (see DESIGN.md §8). Matches attention_ref exactly
+    (tests/test_kernels.py).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    G = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(D)
+    pad_k = (-Sk) % blk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nk = (Sk + pad_k) // blk
+    qf = q.astype(jnp.float32) * sm_scale
+    qi = q_offset + jnp.arange(Sq)[:, None]  # (Sq, 1)
+
+    # scan xs: k/v blocks stacked on a leading axis
+    kb = k.reshape(B, Hkv, nk, blk, D).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(B, Hkv, nk, blk, D).transpose(2, 0, 1, 3, 4)
+
+    def body(carry, xs):
+        acc, m, l = carry  # (B,Hq,Sq,D), (B,Hq,Sq), (B,Hq,Sq)
+        j, kj, vj = xs  # (), (B,Hkv,blk,D), (B,Hkv,blk,D)
+        kg = jnp.repeat(kj.astype(jnp.float32), G, axis=1)
+        vg = jnp.repeat(vj.astype(jnp.float32), G, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kg)  # (B,Hq,Sq,blk)
+        kpos = j * blk + jnp.arange(blk)[None, :]  # (1, blk)
+        mask = kpos < Sk
+        if causal:
+            mask = mask & (kpos <= qi)
+        if window > 0:
+            mask = mask & (qi - kpos < window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vg)
+        return (acc, m_new, l_new), None
+
+    init = (
+        jnp.zeros((B, Hq, Sq, D), jnp.float32),
+        jnp.full((B, Hq, Sq), NEG_INF, jnp.float32),
+        jnp.zeros((B, Hq, Sq), jnp.float32),
+    )
+    (acc, m, l), _ = jax.lax.scan(
+        jax.checkpoint(body), init, (jnp.arange(nk), kb, vb))
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l[..., None]).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,        # (B, Hq, D)
+    k_cache: jax.Array,  # (B, Hkv, S, D)
+    v_cache: jax.Array,  # (B, Hkv, S, D)
+    lengths: jax.Array,  # (B,)
+    *,
+    sm_scale: Optional[float] = None,
+    window: int = 0,
+    return_stats: bool = False,
+):
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    G = Hq // Hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(D)
+    kx = jnp.repeat(k_cache, G, axis=1)
+    vx = jnp.repeat(v_cache, G, axis=1)
+    s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * sm_scale
+    valid = jnp.arange(S)[None, :] < lengths[:, None]  # (B, S)
+    if window > 0:
+        valid = jnp.logical_and(valid, jnp.arange(S)[None, :] >= lengths[:, None] - window)
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    m = s.max(axis=-1)  # (B, Hq)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[:, None, :], p, 0.0)
+    l = p.sum(axis=-1)  # (B, Hq)
+    lsafe = jnp.where(l == 0.0, 1.0, l)
+    o = (jnp.einsum("bhs,bhsd->bhd", p, vx.astype(jnp.float32))
+         / lsafe[..., None]).astype(q.dtype)
+    if return_stats:
+        return o, m, l
+    return o
+
+
+# --------------------------------------------------------------------- SSD
+
+
+def ssd_chunk_ref(
+    x: jax.Array,    # (BC, H, T, P)
+    b: jax.Array,    # (BC, G, T, N)
+    c: jax.Array,    # (BC, G, T, N)
+    dta: jax.Array,  # (BC, H, T)
+    dt: jax.Array,   # (BC, H, T)
+) -> Tuple[jax.Array, jax.Array]:
+    """Intra-chunk SSD terms; semantics documented in ssd_scan.py."""
+    BC, H, T, P = x.shape
+    G = b.shape[1]
+    ratio = H // G
+    bh = jnp.repeat(b, ratio, axis=1).astype(jnp.float32)  # (BC, H, T, N)
+    ch = jnp.repeat(c, ratio, axis=1).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    a = jnp.cumsum(dta.astype(jnp.float32), axis=-1)  # (BC, H, T)
+
+    logl = a[..., :, None] - a[..., None, :]  # (BC, H, T, T)
+    causal = jnp.tril(jnp.ones((T, T), bool))
+    L = jnp.where(causal, jnp.exp(logl), 0.0)
+    scores = jnp.einsum("bhin,bhjn->bhij", ch, bh) * L
+    y = jnp.einsum("bhij,bhjp->bhip", scores, xf * dt[..., None])
+
+    decay_to_end = jnp.exp(a[..., -1:] - a)  # (BC, H, T)
+    bw = bh * (decay_to_end * dt)[..., None]  # (BC, H, T, N)
+    state = jnp.einsum("bhtn,bhtp->bhnp", bw, xf)
+    return y.astype(x.dtype), state
+
+
+def ssd_sequential_ref(
+    x: jax.Array,    # (B, S, H, P)
+    b: jax.Array,    # (B, S, G, N)
+    c: jax.Array,    # (B, S, G, N)
+    dta: jax.Array,  # (B, S, H)
+    dt: jax.Array,   # (B, S, H)
+    init_state: Optional[jax.Array] = None,  # (B, H, N, P)
+) -> Tuple[jax.Array, jax.Array]:
+    """Token-by-token recurrence — the ground-truth oracle for chunked SSD.
+
+      S_t = exp(dtA_t) S_{t-1} + dt_t * B_t (outer) x_t ;   y_t = C_t . S_t
+    """
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    ratio = H // G
+    bh = jnp.repeat(b, ratio, axis=2).astype(jnp.float32)
+    ch = jnp.repeat(c, ratio, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    if init_state is None:
+        init_state = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def step(state, inp):
+        xt, bt, ct, dtat, dtt = inp  # (B,H,P) (B,H,N) (B,H,N) (B,H) (B,H)
+        decay = jnp.exp(dtat)[..., None, None]  # (B,H,1,1)
+        state = decay * state + jnp.einsum("bhn,bhp->bhnp", bt * dtt[..., None], xt)
+        y = jnp.einsum("bhn,bhnp->bhp", ct, state)
+        return state, y
+
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(bh, 1, 0),
+        jnp.moveaxis(ch, 1, 0),
+        jnp.moveaxis(dta.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+    )
+    final, ys = jax.lax.scan(step, init_state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final

@@ -1,0 +1,58 @@
+"""Fused RMSNorm Pallas kernel.
+
+y = x * rsqrt(mean(x^2) + eps) * w — one VMEM pass instead of XLA's
+reduce + broadcast + mul chain. Rows are tiled over the grid; the feature
+dim stays whole in VMEM (d_model up to ~8k fits comfortably: 8k x 4B x
+block_rows(8) = 256 KiB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float, d: int):
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    # mean over the true feature count d (padding columns are zero)
+    ms = (x * x).sum(axis=-1, keepdims=True) / d
+    y = x * jax.lax.rsqrt(ms + eps) * w
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eps", "block_rows", "interpret")
+)
+def rmsnorm_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    eps: float = 1e-6,
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """RMSNorm over the last dim. x: (rows, d), w: (d,)."""
+    rows, d = x.shape
+    pad_d = (-d) % LANE
+    pad_r = (-rows) % block_rows
+    xp = jnp.pad(x, ((0, pad_r), (0, pad_d)))
+    wp = jnp.pad(w, (0, pad_d))[None, :]  # keep 2D for TPU layout
+    rp, dp = xp.shape
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps, d=d),
+        grid=(rp // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, dp), lambda i: (i, 0)),
+            pl.BlockSpec((1, dp), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, dp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, dp), x.dtype),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:rows, :d]

@@ -1,0 +1,114 @@
+"""Mamba-2 SSD intra-chunk kernel (state-space duality, arXiv:2405.21060).
+
+SSD evaluates the selective-SSM recurrence chunk-parallel: within a chunk of
+T tokens the output decomposes into an intra-chunk quadratic part (this
+kernel — the compute hot spot, three MXU matmuls per (chunk, head)) and an
+inter-chunk linear recurrence over per-chunk states (tiny, handled by a
+lax.scan in ops.py/ref.py).
+
+Per (batch*chunk, head) grid cell, with T tokens, state size N, head dim P:
+
+  a      = cumsum(dtA)                          (T,)   log-decay within chunk
+  L_ij   = exp(a_i - a_j) * [j <= i]            (T,T)  causal decay mask
+  scores = (C @ B^T) * L                        (T,T)
+  Y      = scores @ (X * dt)                    (T,P)  intra-chunk output
+  S      = (B * exp(a_T - a) * dt)^T @ X        (N,P)  chunk state contribution
+
+The (T,T) intermediate lives entirely in VMEM (T=128 -> 64 KiB f32), which is
+the reason to fuse: XLA would materialize it in HBM per (chunk, head).
+Grouped B/C (n_groups < heads) is expressed in the BlockSpec index map.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+NEG_INF = -1e30
+
+
+def _ssd_chunk_kernel(x_ref, b_ref, c_ref, dta_ref, dt_ref, y_ref, s_ref):
+    x = x_ref[0, 0].astype(jnp.float32)    # (T, P)
+    bm = b_ref[0, 0].astype(jnp.float32)   # (T, N)
+    cm = c_ref[0, 0].astype(jnp.float32)   # (T, N)
+    dta = dta_ref[0, 0].astype(jnp.float32)  # (T, 1)
+    dt = dt_ref[0, 0].astype(jnp.float32)    # (T, 1)
+
+    a = jnp.cumsum(dta, axis=0)  # (T, 1)
+    T = x.shape[0]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (T, T), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)
+    # exp(a_i - a_j) for j <= i; dtA <= 0 so a is non-increasing -> exp <= 1
+    logl = a - a.T  # broadcast (T,1)-(1,T)
+    L = jnp.where(ii >= jj, jnp.exp(logl), 0.0)
+
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * L  # (T, T)
+    xdt = x * dt
+    y = jax.lax.dot_general(
+        scores, xdt, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (T, P)
+
+    a_last = a[-1:, :]  # (1,1)
+    decay_to_end = jnp.exp(a_last - a)  # (T, 1)
+    bw = bm * decay_to_end * dt  # (T, N)
+    state = jax.lax.dot_general(
+        bw, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (N, P)
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    s_ref[0, 0] = state.astype(s_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_pallas(
+    x: jax.Array,    # (BC, H, T, P)   BC = batch * n_chunks
+    b: jax.Array,    # (BC, G, T, N)   G groups, H % G == 0
+    c: jax.Array,    # (BC, G, T, N)
+    dta: jax.Array,  # (BC, H, T)      dt * A  (<= 0)
+    dt: jax.Array,   # (BC, H, T)
+    *,
+    interpret: bool = False,
+):
+    """Returns (y: (BC,H,T,P), state: (BC,H,N,P)) — intra-chunk terms."""
+    BC, H, T, P = x.shape
+    _, G, _, N = b.shape
+    if H % G:
+        raise ValueError(f"H={H} not a multiple of groups G={G}")
+    ratio = H // G
+
+    pad_p = (-P) % LANE
+    pad_n = (-N) % LANE
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pad_p)))
+    bp = jnp.pad(b, ((0, 0), (0, 0), (0, 0), (0, pad_n)))
+    cp = jnp.pad(c, ((0, 0), (0, 0), (0, 0), (0, pad_n)))
+    dtap = dta[..., None]  # (BC, H, T, 1)
+    dtp = dt[..., None]
+    Pp, Np = P + pad_p, N + pad_n
+
+    grid = (BC, H)
+    y, state = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, T, Pp), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1, T, Np), lambda i, h, r=ratio: (i, h // r, 0, 0)),
+            pl.BlockSpec((1, 1, T, Np), lambda i, h, r=ratio: (i, h // r, 0, 0)),
+            pl.BlockSpec((1, 1, T, 1), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1, T, 1), lambda i, h: (i, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, T, Pp), lambda i, h: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1, Np, Pp), lambda i, h: (i, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BC, H, T, Pp), x.dtype),
+            jax.ShapeDtypeStruct((BC, H, Np, Pp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, bp, cp, dtap, dtp)
+    return y[..., :P], state[:, :, :N, :P]

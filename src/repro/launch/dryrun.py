@@ -1,0 +1,325 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this entrypoint:
+  1. builds the production mesh (single-pod 16x16 or multi-pod 2x16x16 over
+     512 forced host devices),
+  2. constructs the cell's step function (train_step / prefill_step /
+     serve_step) under the cell's ShardingPolicy,
+  3. ``jax.jit(step, in_shardings=..., out_shardings=...).lower(**specs)``
+     with ShapeDtypeStruct inputs (no allocation),
+  4. ``.compile()`` — success proves the sharding config is coherent (no
+     mismatched collectives, fits per-device HBM at compile time),
+  5. records memory_analysis(), cost_analysis(), and the collective-traffic
+     census (hlo_analysis.py) as one JSON artifact per cell under
+     ``artifacts/dryrun/``.
+
+EXPERIMENTS.md §Dry-run / §Roofline are assembled from these artifacts by
+benchmarks/roofline.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--jobs N]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.registry import ARCHS, cells, get_config, get_shape
+from repro.distributed.api import sharding_context
+from repro.distributed.sharding import ShardingPolicy
+from repro.launch import steps as steps_lib
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    make_production_mesh,
+)
+from repro.models.model import Model
+from repro.optim.optimizer import AdamW
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+#: Gradient-accumulation (microbatch) factors for train_4k, chosen so peak
+#: per-chip memory fits 16 GiB (global batch 256 stays identical — grads
+#: are averaged before the single optimizer update). A production launcher
+#: would pick these from the same dry-run memory_analysis loop.
+ACCUM = {
+    "llama-3.2-vision-90b": 16,
+    "granite-moe-3b-a800m": 16,
+    "mixtral-8x7b": 16,
+    "minitron-8b": 16,
+    "gemma3-4b": 4,
+    "hymba-1.5b": 4,
+    "musicgen-medium": 2,
+    "stablelm-3b": 2,
+    "internlm2-1.8b": 2,
+}
+
+
+def _artifact_path(arch: str, shape: str, mesh_tag: str) -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    return os.path.join(ARTIFACT_DIR, f"{arch}__{shape}__{mesh_tag}.json")
+
+
+# --------------------------------------------------------------------------
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               policy: Optional[ShardingPolicy] = None):
+    """Returns (jitted_step, kwargs-of-ShapeDtypeStructs) for the cell.
+
+    use_flash=False for the compile of record: Mosaic cannot lower on this
+    CPU container, and interpret-mode Pallas lowers to a grid-sized while
+    loop whose HLO misrepresents the kernel's cost by orders of magnitude.
+    The jnp implementations (chunked flash attention, chunked SSD) have the
+    same FLOPs/bytes shape as the fused kernels; tests pin their numerical
+    equivalence (DESIGN.md §8).
+
+    Serving cells (prefill/decode) store params in bf16 — f32 masters are a
+    training-only artifact, and they dominated decode HBM at baseline.
+    Train cells use per-arch gradient accumulation (ACCUM) to fit
+    activations in 16 GiB/chip (§Perf #5).
+    """
+    cfg = dataclasses.replace(cfg, use_flash=False)
+    if shape.kind in ("prefill", "decode"):
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    if shape.kind == "decode":
+        cfg = dataclasses.replace(cfg, kv_quant=True)  # §Perf #6
+    model = Model(cfg)
+    if policy is None:
+        policy = ShardingPolicy.for_step(cfg, shape, mesh)
+    specs = steps_lib.input_specs(cfg, shape)
+
+    abstract_params = steps_lib.abstract_params(cfg)
+    p_shardings = policy.param_shardings(abstract_params)
+
+    if shape.kind == "train":
+        opt = AdamW()
+        abstract_opt = jax.eval_shape(opt.init, abstract_params)
+        opt_shardings = opt.state_shardings(policy, abstract_params)
+        # microbatch must stay divisible by the DP shard count, or the
+        # batch dim replicates (divisibility guard) and activations blow up
+        import math as _m
+
+        dp = policy.rules.resolve("batch")
+        dp_size = (mesh.shape[dp] if isinstance(dp, str)
+                   else _m.prod(mesh.shape[a] for a in dp)) if dp else 1
+        accum = min(ACCUM.get(cfg.name, 1),
+                    max(shape.global_batch // dp_size, 1))
+        step = steps_lib.make_train_step(
+            model, opt, accum=accum,
+            grad_shardings=opt_shardings.m if accum > 1 else None)
+
+        def wrapped(params, opt_state, batch):
+            with sharding_context(mesh, policy.rules):
+                return step(params, opt_state, batch)
+
+        jitted = jax.jit(
+            wrapped,
+            in_shardings=(p_shardings, opt_shardings,
+                          policy.batch_shardings(specs["batch"])),
+            out_shardings=(p_shardings, opt_shardings, None),
+            donate_argnums=(0, 1),
+        )
+        args = (abstract_params, abstract_opt, specs["batch"])
+        return jitted, args, policy
+
+    if shape.kind == "prefill":
+        step = steps_lib.make_prefill_step(model)
+
+        def wrapped(params, batch):
+            with sharding_context(mesh, policy.rules):
+                return step(params, batch)
+
+        jitted = jax.jit(
+            wrapped,
+            in_shardings=(p_shardings, policy.batch_shardings(specs["batch"])),
+        )
+        args = (abstract_params, specs["batch"])
+        return jitted, args, policy
+
+    # decode
+    step = steps_lib.make_serve_step(model)
+    cache_shardings = policy.cache_shardings(specs["caches"])
+
+    def wrapped(params, batch, lengths, caches):
+        with sharding_context(mesh, policy.rules):
+            return step(params, batch, lengths, caches)
+
+    jitted = jax.jit(
+        wrapped,
+        in_shardings=(p_shardings, policy.batch_shardings(specs["batch"]),
+                      policy.replicated(), cache_shardings),
+        out_shardings=(None, cache_shardings),
+        donate_argnums=(3,),
+    )
+    args = (abstract_params, specs["batch"], specs["lengths"], specs["caches"])
+    return jitted, args, policy
+
+
+# --------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             save: bool = True, verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+
+    runnable = shape.name != "long_500k" or cfg.supports_long_context
+    if not runnable:
+        result = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+            "status": "skip",
+            "reason": "pure full-attention arch x long-context decode "
+                      "(DESIGN.md §Arch-applicability)",
+        }
+        if save:
+            with open(_artifact_path(arch, shape_name, mesh_tag), "w") as f:
+                json.dump(result, f, indent=2)
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.perf_counter()
+    jitted, args, policy = build_cell(cfg, shape, mesh)
+    lowered = jitted.lower(*args)
+    t_lower = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    # post-SPMD per-device program census (trip-adjusted; XLA's own
+    # cost_analysis counts while bodies once — see hlo_analysis.py)
+    census = analyze_hlo(compiled.as_text())
+
+    flops_per_dev = census.flops
+    bytes_per_dev = census.hbm_bytes
+    model_flops = steps_lib.step_flops_estimate(cfg, shape)
+
+    # roofline terms (seconds) — per-device critical path
+    compute_s = flops_per_dev / PEAK_FLOPS_BF16
+    memory_s = bytes_per_dev / HBM_BW
+    collective_s = census.collective_wire_bytes / ICI_BW
+
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)),
+        key=lambda kv: kv[1],
+    )[0]
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_tag,
+        "status": "ok",
+        "chips": n_chips,
+        "step_kind": shape.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+            + (getattr(mem, "temp_size_in_bytes", 0) or 0)
+            + (getattr(mem, "output_size_in_bytes", 0) or 0),
+        },
+        "cost": {
+            "flops_per_device": flops_per_dev,
+            "dot_flops_per_device": census.dot_flops,
+            "bytes_per_device": bytes_per_dev,
+            "xla_cost_flops_unadjusted": float(cost.get("flops", 0.0)),
+            "xla_cost_bytes_unadjusted": float(
+                cost.get("bytes accessed", 0.0)
+            ),
+        },
+        "collectives": {
+            "wire_bytes_by_kind": census.collective_bytes_by_kind,
+            "wire_bytes_by_group": census.collective_bytes_by_group,
+            "wire_bytes_per_device": census.collective_wire_bytes,
+            "op_counts": census.collective_ops_by_kind,
+        },
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "dominant": dominant,
+            "model_flops": model_flops,
+            "hlo_flops_global": flops_per_dev * n_chips,
+            "useful_flops_ratio": (
+                model_flops / (flops_per_dev * n_chips)
+                if flops_per_dev else None
+            ),
+        },
+        "fsdp": policy.fsdp,
+    }
+    if save:
+        with open(_artifact_path(arch, shape_name, mesh_tag), "w") as f:
+            json.dump(result, f, indent=2)
+    if verbose:
+        r = result["roofline"]
+        print(
+            f"[ok] {arch:24s} {shape_name:12s} {mesh_tag:10s} "
+            f"compile {t_compile:6.1f}s  "
+            f"C/M/X = {r['compute_s']*1e3:8.2f} / {r['memory_s']*1e3:8.2f} / "
+            f"{r['collective_s']*1e3:8.2f} ms  dom={r['dominant']:10s} "
+            f"useful={r['useful_flops_ratio'] and round(r['useful_flops_ratio'],3)}",
+            flush=True,
+        )
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2x16x16 multi-pod mesh (default: 16x16 single pod)")
+    ap.add_argument("--no-save", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.all:
+        failures = []
+        for cfg, shape, runnable in cells():
+            try:
+                run_cell(cfg.name, shape.name, multi_pod=args.multi_pod,
+                         save=not args.no_save)
+            except Exception as e:  # noqa: BLE001 — report, keep sweeping
+                failures.append((cfg.name, shape.name, repr(e)))
+                traceback.print_exc()
+                print(f"[FAIL] {cfg.name} {shape.name}: {e}", flush=True)
+        if failures:
+            print(f"\n{len(failures)} cells failed:")
+            for a, s, e in failures:
+                print(f"  {a} x {s}: {e}")
+            return 1
+        print("\nall cells compiled.")
+        return 0
+
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    res = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   save=not args.no_save)
+    print(json.dumps(res, indent=2))
+    return 0 if res["status"] in ("ok", "skip") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,483 @@
+"""Post-SPMD HLO census for the roofline: FLOPs, HBM bytes, collective bytes.
+
+Why not ``compiled.cost_analysis()``? Verified on this container (see
+EXPERIMENTS.md §Dry-run): XLA's cost analysis counts a ``while`` body ONCE,
+not x trip-count — a 10-step scan of matmuls reports 1/10th of the FLOPs
+actually executed. Since every model here scans over layers, we walk the HLO
+text ourselves:
+
+  * computations are parsed with a per-computation symbol table
+    (result name -> shape) so operand shapes of ``dot``/collective ops
+    resolve even though call sites print bare ``%name`` refs;
+  * ``while`` bodies are multiplied by the trip count from the op's
+    ``backend_config={"known_trip_count":{"n":...}}`` (fallback: the largest
+    integer constant in the condition computation);
+  * ``fusion``/``call``/``to_apply`` recurse into their callees for FLOPs;
+    ``conditional`` takes the max over branches (one branch executes);
+  * FLOPs: 2 x numel(result) x prod(lhs contracting dims) per ``dot``, plus
+    numel(result) per elementwise arithmetic/transcendental op (VPU work —
+    matters for the SSM/taskbench bodies);
+  * HBM bytes: operand + result bytes of every *top-level* op per
+    computation except free ops (parameter/tuple/gte/bitcast/constant) and
+    control ops (their bodies are counted separately) — post-optimization
+    top-level ops are fusions/dots/copies/collectives, so this approximates
+    HBM traffic per device;
+  * collective wire bytes per device use ring models on the operand size
+    ``b`` with group size ``g``:
+      all-reduce 2b(g-1)/g | all-gather (g-1)/g x result | reduce-scatter
+      b(g-1)/g | all-to-all b(g-1)/g | collective-permute b
+    async ``-start``/``-done`` pairs are counted once (on the start).
+
+Byte counts are PER DEVICE (the SPMD module is the per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+# elementwise ops counted as 1 FLOP/element (VPU estimate)
+_EW_OPS = frozenset(
+    "add subtract multiply divide maximum minimum abs negate compare select "
+    "and or xor not exponential exponential-minus-one log log-plus-one rsqrt "
+    "sqrt tanh logistic sine cosine power remainder atan2 sign floor ceil "
+    "round-nearest-afz round-nearest-even clamp".split()
+)
+_FREE_OPS = frozenset(
+    "parameter tuple get-tuple-element bitcast constant iota "
+    "after-all partition-id replica-id".split()
+)
+_CONTROL_OPS = frozenset("while conditional call fusion async-start".split())
+
+_SHAPE_TOK = re.compile(
+    r"(pred|s4|u4|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128|"
+    r"f8e4m3fn|f8e5m2)\[([\d,]*)\]"
+)
+# "%name = TYPE opcode(" — TYPE is a tuple "(...)" or a single token
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+    r"(\((?:[^()]|\([^()]*\))*\)|[^\s(]+)\s+"
+    r"([\w\-]+)(?:-start|-done)?\("
+)
+_OP_LINE_FULL = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+    r"(\((?:[^()]|\([^()]*\))*\)|[^\s(]+)\s+"
+    r"([\w\-]+)\("
+)
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_HDR_PARAM = re.compile(r"([\w.\-]+):\s*(\((?:[^()]|\([^()]*\))*\)|[^\s,]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_BDIMS = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_REPL_GROUPS_ARR = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_REPL_GROUPS_LIST = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CALLED = re.compile(
+    r"(?:calls|to_apply|body|condition)=\{?%?([\w.\-]+)"
+)
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _shape_bytes(type_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_TOK.findall(type_text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_numel(type_text: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_TOK.findall(type_text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _first_shape_dims(type_text: str) -> List[int]:
+    m = _SHAPE_TOK.search(type_text)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    lines: List[str]
+    symbols: Dict[str, str]  # %name -> type text
+
+
+@dataclasses.dataclass
+class HloCensus:
+    flops: float  # trip-adjusted, per device
+    dot_flops: float
+    hbm_bytes: float  # trip-adjusted top-level operand+result bytes
+    collective_wire_bytes: float  # ring-model bytes on the wire per device
+    collective_bytes_by_kind: Dict[str, float]
+    collective_ops_by_kind: Dict[str, int]  # static counts
+    collective_bytes_by_group: Dict[str, float]  # "kind@g<size>" -> bytes
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes_by_kind.values())
+
+
+def _split_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[str] = None
+    header_line = ""
+    lines: List[str] = []
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            if line.endswith("{"):
+                m = _HEADER.match(line.strip())
+                if m:
+                    cur = m.group(1)
+                    header_line = line
+                    lines = []
+        else:
+            if line.strip() == "}":
+                comp = Computation(cur, lines, {})
+                # symbol table: results + header params
+                hm = _HEADER.match(header_line.strip())
+                if hm:
+                    for pname, ptype in _HDR_PARAM.findall(hm.group(2)):
+                        comp.symbols[pname] = ptype
+                for ln in lines:
+                    om = _OP_LINE_FULL.match(ln)
+                    if om:
+                        comp.symbols[om.group(1)] = om.group(2)
+                comps[cur] = comp
+                cur = None
+            else:
+                lines.append(line)
+    return comps
+
+
+def _entry_name(hlo: str) -> Optional[str]:
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+    return m.group(1) if m else None
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = _REPL_GROUPS_ARR.search(line)
+    if m:  # replica_groups=[num_groups,group_size]<=[total]
+        return int(m.group(2))
+    m = _REPL_GROUPS_LIST.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _opcode(line: str) -> Optional[Tuple[str, str, str, bool, bool]]:
+    """Returns (result_name, type_text, opcode, is_start, is_done)."""
+    m = _OP_LINE_FULL.match(line)
+    if not m:
+        return None
+    name, type_text, op = m.groups()
+    is_start = op.endswith("-start")
+    is_done = op.endswith("-done")
+    base = op[:-6] if is_start else (op[:-5] if is_done else op)
+    return name, type_text, base, is_start, is_done
+
+
+def _dot_flops(line: str, type_text: str, comp: Computation) -> float:
+    numel = _shape_numel(type_text)
+    # operands appear inside the op parens before ", lhs_..." metadata
+    paren = line.find("(", line.find(" dot("))
+    operands = _OPERANDS.findall(line[paren:line.find(")", paren)])
+    contracting = 1
+    m = _LHS_CDIMS.search(line)
+    if m and operands:
+        lhs_type = comp.symbols.get(operands[0])
+        if lhs_type:
+            dims = _first_shape_dims(lhs_type)
+            idxs = [int(i) for i in m.group(1).split(",") if i]
+            for i in idxs:
+                if i < len(dims):
+                    contracting *= dims[i]
+    return 2.0 * numel * contracting
+
+
+_SLICE_OPS = ("dynamic-slice", "slice", "gather")
+
+
+def _fusion_param_effective(comp: Computation) -> Dict[int, float]:
+    """Effective HBM bytes per fusion parameter index.
+
+    A fused computation that reads parameter i ONLY through
+    dynamic-slice/slice/gather ops touches just the sliced window, not the
+    whole buffer — e.g. the backward layer-scan reads one layer's slice of
+    the (n_layers, ...) stacked saved-activation carry. Charging the full
+    stack inflated memory terms ~5x (EXPERIMENTS.md §Perf #1d).
+    Returns {param_index: effective_bytes} for params where the cap applies.
+    """
+    # param name -> index, and collect uses
+    params: Dict[str, int] = {}
+    for ln in comp.lines:
+        m = re.match(r"\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*\S+\s+parameter\((\d+)\)",
+                     ln)
+        if m:
+            params[m.group(1)] = int(m.group(2))
+    if not params:
+        return {}
+    eff: Dict[int, float] = {}
+    use_ok: Dict[str, bool] = {p: True for p in params}
+    use_bytes: Dict[str, float] = {p: 0.0 for p in params}
+    for ln in comp.lines:
+        parsed = _opcode(ln)
+        if not parsed:
+            continue
+        rname, type_text, op, _, _ = parsed
+        if op == "parameter":
+            continue
+        paren = ln.find("(")
+        ops_txt = ln[paren + 1: ln.find(")", paren)] if paren > 0 else ""
+        for o in _OPERANDS.findall(ops_txt):
+            if o in params:
+                if op in _SLICE_OPS:
+                    use_bytes[o] = max(use_bytes[o], _shape_bytes(type_text))
+                elif op == "bitcast":
+                    pass  # free; the bitcast result's uses are not chased —
+                    # conservative: treat as non-slice use
+                else:
+                    use_ok[o] = False
+    for pname, idx in params.items():
+        if use_ok[pname] and use_bytes[pname] > 0:
+            eff[idx] = use_bytes[pname]
+    return eff
+
+
+def analyze_hlo(hlo: str) -> HloCensus:
+    comps = _split_computations(hlo)
+    entry = _entry_name(hlo)
+    fusion_eff_memo: Dict[str, Dict[int, float]] = {}
+
+    def fusion_eff(callee: str) -> Dict[int, float]:
+        if callee not in fusion_eff_memo:
+            fusion_eff_memo[callee] = (
+                _fusion_param_effective(comps[callee])
+                if callee in comps else {})
+        return fusion_eff_memo[callee]
+
+    def trip_count(line: str, cond_name: Optional[str]) -> int:
+        m = _TRIP.search(line)
+        if m:
+            return int(m.group(1))
+        best = 1
+        if cond_name and cond_name in comps:
+            for ln in comps[cond_name].lines:
+                for c in _CONST_INT.findall(ln):
+                    best = max(best, int(c))
+        return best
+
+    # memoized per-computation census (flops, dot_flops, bytes, coll dicts)
+    memo: Dict[str, Tuple] = {}
+
+    def walk(name: str, stack=()) -> Tuple:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return (0.0, 0.0, 0.0, {}, {}, {})
+        comp = comps[name]
+        flops = dot_flops = bytes_ = 0.0
+        coll_bytes: Dict[str, float] = {}
+        coll_ops: Dict[str, int] = {}
+        coll_group: Dict[str, float] = {}
+
+        def merge(res, mult=1.0):
+            nonlocal flops, dot_flops, bytes_
+            f, df, b, cb, co, cg = res
+            flops += f * mult
+            dot_flops += df * mult
+            bytes_ += b * mult
+            for k, v in cb.items():
+                coll_bytes[k] = coll_bytes.get(k, 0.0) + v * mult
+            for k, v in co.items():
+                coll_ops[k] = coll_ops.get(k, 0) + v
+            for k, v in cg.items():
+                coll_group[k] = coll_group.get(k, 0.0) + v * mult
+
+        for line in comp.lines:
+            parsed = _opcode(line)
+            if not parsed:
+                continue
+            _, type_text, op, is_start, is_done = parsed
+
+            # ---- control flow ------------------------------------------
+            if op == "while":
+                called = dict(re.findall(r"(body|condition)=\{?%?([\w.\-]+)",
+                                         line))
+                t = trip_count(line, called.get("condition"))
+                if called.get("body"):
+                    merge(walk(called["body"], stack + (name,)), t)
+                if called.get("condition"):
+                    merge(walk(called["condition"], stack + (name,)), t)
+                continue
+            if op == "conditional":
+                bm = _BRANCHES.search(line)
+                if bm:
+                    results = [walk(b.strip().lstrip("%"), stack + (name,))
+                               for b in bm.group(1).split(",")]
+                    if results:
+                        best = max(results, key=lambda r: r[0] + r[2])
+                        merge(best)
+                continue
+            if op in ("fusion", "call", "async"):
+                for callee in _CALLED.findall(line):
+                    merge(walk(callee, stack + (name,)))
+                # fusion operands+result still move HBM bytes:
+                if op == "fusion":
+                    paren = line.find("(", line.find("fusion("))
+                    ops_txt = line[paren + 1: line.find(")", paren)]
+                    ob = [_shape_bytes(comp.symbols.get(o, ""))
+                          for o in _OPERANDS.findall(ops_txt)]
+                    callees = _CALLED.findall(line)
+                    eff = fusion_eff(callees[0]) if callees else {}
+                    ob = [min(b, eff[i]) if i in eff else b
+                          for i, b in enumerate(ob)]
+                    rb = _shape_bytes(type_text)
+                    if "dynamic-update-slice" in parsed[0] and ob:
+                        # in-place DUS: the aliased destination buffer is not
+                        # re-streamed; traffic = the updated slice (readback +
+                        # write), i.e. operands minus the largest (aliased).
+                        bytes_ += 2.0 * (sum(ob) - max(ob))
+                    else:
+                        bytes_ += sum(ob) + rb
+                continue
+
+            # ---- collectives --------------------------------------------
+            if op in COLLECTIVES:
+                if is_done:
+                    continue  # counted on the start (or sync) op
+                g = _group_size(line, default=2)
+                paren = line.find(f"{op}{'-start' if is_start else ''}(")
+                paren = line.find("(", paren)
+                ops_txt = line[paren + 1: line.find(")", paren)]
+                operand_names = _OPERANDS.findall(ops_txt)
+                in_bytes = sum(
+                    _shape_bytes(comp.symbols.get(o, "")) for o in operand_names
+                )
+                out_bytes = _shape_bytes(type_text)
+                if is_start and out_bytes > in_bytes:
+                    # start result tuples carry (operand, result[, ...])
+                    out_bytes = max(out_bytes - in_bytes, in_bytes)
+                frac = (g - 1) / g if g > 1 else 0.0
+                wire = {
+                    "all-reduce": 2.0 * in_bytes * frac,
+                    "all-gather": out_bytes * frac,
+                    "reduce-scatter": in_bytes * frac,
+                    "all-to-all": in_bytes * frac,
+                    "ragged-all-to-all": in_bytes * frac,
+                    "collective-permute": float(in_bytes),
+                }[op]
+                coll_bytes[op] = coll_bytes.get(op, 0.0) + wire
+                coll_ops[op] = coll_ops.get(op, 0) + 1
+                key = f"{op}@g{g}"
+                coll_group[key] = coll_group.get(key, 0.0) + wire
+                bytes_ += in_bytes + out_bytes  # collectives also touch HBM
+                continue
+
+            # ---- compute / data movement ---------------------------------
+            if op == "dot":
+                flops_d = _dot_flops(line, type_text, comp)
+                flops += flops_d
+                dot_flops += flops_d
+                # dot reads operands, writes result
+                paren = line.find("(", line.find(" dot("))
+                ops_txt = line[paren + 1: line.find(")", paren)]
+                for o in _OPERANDS.findall(ops_txt):
+                    bytes_ += _shape_bytes(comp.symbols.get(o, ""))
+                bytes_ += _shape_bytes(type_text)
+                continue
+            if op == "convolution":
+                # rough: 2 * numel(result) * kernel numel / output channels
+                flops_c = 2.0 * _shape_numel(type_text)
+                flops += flops_c
+                dot_flops += flops_c
+                bytes_ += _shape_bytes(type_text) * 2
+                continue
+            if op in _EW_OPS:
+                flops += _shape_numel(type_text)
+                if name == entry or not name.startswith("fused"):
+                    bytes_ += _shape_bytes(type_text) * 2
+                continue
+            if op in _FREE_OPS or op in _CONTROL_OPS:
+                continue
+            # other top-level data ops (copy, reduce, broadcast, reshape,
+            # transpose, scatter, gather, dynamic-slice, pad, ...): bytes only
+            if not name.startswith("fused"):
+                paren = line.find("(")
+                ops_txt = line[paren + 1: line.find(")", paren)] if paren > 0 else ""
+                ob = [_shape_bytes(comp.symbols.get(o, ""))
+                      for o in _OPERANDS.findall(ops_txt)]
+                if op == "dynamic-update-slice" and ob:
+                    bytes_ += 2.0 * (sum(ob) - max(ob))  # in-place aliasing
+                elif op in _SLICE_OPS:
+                    # reads only the sliced window, not the source buffer
+                    bytes_ += 2.0 * _shape_bytes(type_text)
+                else:
+                    bytes_ += sum(ob) + _shape_bytes(type_text)
+            if op == "reduce":
+                flops += _shape_numel(type_text)
+
+        memo[name] = (flops, dot_flops, bytes_, coll_bytes, coll_ops,
+                      coll_group)
+        return memo[name]
+
+    if entry is None:
+        return HloCensus(0, 0, 0, 0, {}, {}, {})
+    f, df, b, cb, co, cg = walk(entry)
+    return HloCensus(
+        flops=f,
+        dot_flops=df,
+        hbm_bytes=b,
+        collective_wire_bytes=sum(cb.values()),
+        collective_bytes_by_kind=cb,
+        collective_ops_by_kind=co,
+        collective_bytes_by_group=cg,
+    )
+
+
+# --------------------------------------------------------------- back-compat
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    operand_bytes: Dict[str, float]
+    wire_bytes: float
+    op_counts: Dict[str, int]
+
+    @property
+    def total_operand_bytes(self) -> float:
+        return sum(self.operand_bytes.values())
+
+
+def analyze_collectives(hlo: str) -> CollectiveStats:
+    census = analyze_hlo(hlo)
+    return CollectiveStats(
+        operand_bytes=census.collective_bytes_by_kind,
+        wire_bytes=census.collective_wire_bytes,
+        op_counts=census.collective_ops_by_kind,
+    )

@@ -1,0 +1,36 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state. The dry-run entrypoint (dryrun.py) sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE importing jax;
+everything else sees the real (single-CPU) device set.
+
+Topology model (TPU v5e-class): one pod = 16 x 16 = 256 chips on ICI
+(~50 GB/s/link); the multi-pod mesh adds a leading "pod" axis whose
+collectives cross the slower DCI — the hierarchical gradient reduction in
+train_step keeps that hop to 1/16 of the gradient bytes.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape, axes) -> Mesh:
+    """Arbitrary mesh over host devices (tests / reduced dry-runs)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+# Hardware constants for the roofline (TPU v5e-class, per chip)
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+CHIP_HBM_BYTES = 16 * 1024**3

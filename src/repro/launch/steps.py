@@ -1,0 +1,163 @@
+"""Step builders + abstract input specs shared by dryrun/train/serve.
+
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins for every model
+input of the cell — weak-type-correct, shardable, no device allocation — and
+`abstract_state` does the same for params/optimizer/caches via eval_shape.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model
+from repro.optim.optimizer import AdamW
+
+
+def _act_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                batch_override: Optional[int] = None,
+                seq_override: Optional[int] = None) -> Dict[str, Any]:
+    """Abstract batch for the cell's step function."""
+    B = batch_override or shape.global_batch
+    S = seq_override or shape.seq_len
+    dt = _act_dtype(cfg)
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {
+            "tokens": sds((B, S), jnp.int32),
+            "labels": sds((B, S), jnp.int32),
+        }
+        if cfg.embed_inputs:
+            batch["embeds"] = sds((B, S, cfg.d_model), dt)
+        if cfg.n_image_tokens:
+            batch["image_embeds"] = sds((B, cfg.n_image_tokens, cfg.d_model), dt)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": sds((B, S), jnp.int32)}
+        if cfg.embed_inputs:
+            batch["embeds"] = sds((B, S, cfg.d_model), dt)
+        if cfg.n_image_tokens:
+            batch["image_embeds"] = sds((B, cfg.n_image_tokens, cfg.d_model), dt)
+        return {"batch": batch}
+    # decode: one new token against a cache of length S
+    batch = {"tokens": sds((B, 1), jnp.int32)}
+    if cfg.embed_inputs:
+        batch["embeds"] = sds((B, 1, cfg.d_model), dt)
+    return {
+        "batch": batch,
+        "lengths": sds((B,), jnp.int32),
+        "caches": abstract_caches(cfg, B, S),
+    }
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    model = Model(cfg)
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, capacity: int) -> Any:
+    model = Model(cfg)
+    return jax.eval_shape(lambda: model.init_caches(batch, capacity))
+
+
+def abstract_opt_state(cfg: ModelConfig) -> Any:
+    model = Model(cfg)
+    opt = AdamW()
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return jax.eval_shape(opt.init, params)
+
+
+# ------------------------------------------------------------------ steps
+
+
+def make_train_step(model: Model, optimizer: AdamW, accum: int = 1,
+                    grad_shardings: Optional[Any] = None):
+    """One optimizer step; with accum > 1 the global batch is split into
+    `accum` microbatches scanned with gradient accumulation — peak
+    activation memory scales 1/accum while the maths are identical (grads
+    averaged before the single optimizer update). This is how the >8B
+    train cells fit 16 GiB/chip (EXPERIMENTS.md §Perf #5).
+
+    grad_shardings (a pytree of NamedShardings, typically the ZeRO-1
+    moment shardings): constrains the accumulated-grad scan carry to a
+    DP-sharded layout so each microbatch's weight-grad reduction lowers as
+    reduce-scatter (half the all-reduce wire) into the shard this device
+    owns, with one gather at the optimizer update (§Perf #5b)."""
+
+    def _constrain_grads(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            g, grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        if accum <= 1:
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), batch)
+
+            def body(carry, mb):
+                l, g = carry
+                li, gi = jax.value_and_grad(model.loss)(params, mb)
+                g = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g,
+                                 _constrain_grads(gi))
+                return (l + li, _constrain_grads(g)), None
+
+            zero = (jnp.zeros((), jnp.float32),
+                    _constrain_grads(jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params)))
+            (loss, grads), _ = jax.lax.scan(body, zero, mbs)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+        params, opt_state, metrics = optimizer.update(grads, opt_state, params)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        logits, caches = model.prefill(params, batch)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    """One decode step: append token, read cache, emit next token greedily."""
+
+    def serve_step(params, batch, lengths, caches):
+        logits, caches = model.decode_step(params, batch, lengths, caches)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, caches
+
+    return serve_step
+
+
+def step_flops_estimate(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS for the roofline: 6ND train, 2ND prefill, 2N_active x B
+    decode (N = params, N_active = params with only top-k experts counted)."""
+    n = cfg.param_count()
+    if cfg.n_experts:
+        ff = cfg.d_ff_expert or cfg.d_ff
+        expert_params = cfg.n_experts * 3 * cfg.d_model * ff * cfg.n_layers
+        active = n - expert_params + expert_params * cfg.top_k / cfg.n_experts
+    else:
+        active = n
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * active * tokens
+    return 2.0 * active * shape.global_batch  # decode: one token per seq

@@ -1,0 +1,2 @@
+"""Model zoo: config-driven decoder stacks (dense/moe/ssm/hybrid/audio/vlm)."""
+from repro.models.model import Model, build_model  # noqa: F401

@@ -1,0 +1,217 @@
+"""Attention module: GQA + RoPE + SWA/local:global + KV cache + cross-attn.
+
+Modes:
+  train    full-sequence causal attention, no cache, differentiable (jnp ref)
+  prefill  same forward, also returns the populated KV cache (flash kernel)
+  decode   one token: cache update at `lengths` + flash-decode read; when the
+           active sharding rules put the cache's sequence dim on mesh axes,
+           reads go through sequence-parallel lse-combine (collectives.py)
+
+Self- and cross-attention share this module; cross (VLM image layers) skips
+RoPE/causality and caches the projected image K/V at prefill.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import api as dapi
+from repro.distributed.collectives import sequence_parallel_decode_attention
+from repro.kernels import ops, ref
+from repro.models.layers import dense_init, rmsnorm_fwd
+
+Params = Dict[str, jax.Array]
+
+
+def attn_init(key, cfg: ModelConfig, dtype) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim_
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ko, cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.use_qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _window_for(cfg: ModelConfig, kind: str) -> int:
+    if kind == "local":
+        return cfg.local_window
+    if kind == "global":
+        return 0
+    return cfg.window  # attn / hybrid-attn: arch-wide setting (0 = full)
+
+
+def _project_qkv(p: Params, x: jax.Array, kv_src: jax.Array, cfg: ModelConfig):
+    B, S = x.shape[0], x.shape[1]
+    hd = cfg.head_dim_
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (kv_src @ p["wk"]).reshape(B, kv_src.shape[1], cfg.n_kv_heads, hd)
+    v = (kv_src @ p["wv"]).reshape(B, kv_src.shape[1], cfg.n_kv_heads, hd)
+    if cfg.use_qk_norm:
+        q = rmsnorm_fwd(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm_fwd(p["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def attn_fwd(
+    p: Params,
+    x: jax.Array,  # (B, S, D); S == 1 in decode
+    *,
+    cfg: ModelConfig,
+    kind: str,  # attn | local | global | xattn
+    mode: str,  # train | prefill | decode
+    positions: Optional[jax.Array] = None,  # (B, S) absolute positions
+    cache: Optional[Params] = None,  # {"k","v"}: (B, Hkv, S_max, hd)
+    lengths: Optional[jax.Array] = None,  # (B,) tokens already in cache
+    kv_src: Optional[jax.Array] = None,  # cross-attn source (B, I, D)
+) -> Tuple[jax.Array, Optional[Params]]:
+    from repro.models.layers import rope
+
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    cross = kind == "xattn"
+    window = 0 if cross else _window_for(cfg, kind)
+    causal = not cross
+    differentiable = mode == "train"
+    use_kernel = cfg.use_flash and not differentiable
+
+    # ---------------------------------------------------------- decode path
+    if mode == "decode":
+        assert cache is not None and lengths is not None
+        q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+        if cfg.use_qk_norm:
+            q = rmsnorm_fwd(p["q_norm"], q, cfg.norm_eps)
+        if cross:
+            kc, vc = cache["k"], cache["v"]  # static image K/V from prefill
+            new_cache = cache
+            read_len = jnp.full((B,), kc.shape[2], jnp.int32)
+        else:
+            q = rope(q, positions, cfg.rope_theta)
+            t_k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+            t_v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+            if cfg.use_qk_norm:
+                t_k = rmsnorm_fwd(p["k_norm"], t_k, cfg.norm_eps)
+            t_k = rope(t_k, positions, cfg.rope_theta)
+            t_k = t_k.transpose(0, 2, 1, 3)  # (B, Hkv, 1, hd)
+            t_v = t_v.transpose(0, 2, 1, 3)
+            # write the new token at its position (per-sequence scatter)
+            upd = jax.vmap(
+                lambda c, t, l: jax.lax.dynamic_update_slice_in_dim(c, t, l, 1)
+            )
+            if "k_scale" in cache:  # int8 cache: quantize the new token
+                qk, sk = _quantize_kv(t_k)
+                qv, sv = _quantize_kv(t_v)
+                new_cache = {
+                    "k": upd(cache["k"], qk, lengths),
+                    "v": upd(cache["v"], qv, lengths),
+                    "k_scale": upd(cache["k_scale"], sk, lengths),
+                    "v_scale": upd(cache["v_scale"], sv, lengths),
+                }
+                kc = _dequantize_kv(new_cache["k"], new_cache["k_scale"],
+                                    x.dtype)
+                vc = _dequantize_kv(new_cache["v"], new_cache["v_scale"],
+                                    x.dtype)
+            else:
+                kc = upd(cache["k"], t_k, lengths)
+                vc = upd(cache["v"], t_v, lengths)
+                new_cache = {"k": kc, "v": vc}
+            read_len = lengths + 1
+
+        qd = q.reshape(B, cfg.n_heads, hd)
+        mesh = dapi.current_mesh()
+        rules = dapi.current_rules()
+        seq_axes = rules.resolve("cache_seq") if rules else None
+        if mesh is not None and seq_axes is not None \
+                and kc.shape[2] % _axprod(mesh, seq_axes) == 0:
+            out = sequence_parallel_decode_attention(
+                qd, kc, vc, read_len,
+                mesh=mesh, seq_axes=seq_axes,
+                batch_axis=rules.resolve("batch")
+                if kc.shape[0] % _axprod(mesh, rules.resolve("batch")) == 0
+                else None,
+                window=window, use_kernel=use_kernel,
+            )
+        else:
+            out = ops.decode_attention(qd, kc, vc, read_len, window=window,
+                                       use_kernel=use_kernel)
+        out = out.reshape(B, 1, cfg.n_heads * hd)
+        return out @ p["wo"], new_cache
+
+    # ---------------------------------------------------- train / prefill
+    src = kv_src if cross else x
+    q, k, v = _project_qkv(p, x, src, cfg)
+    if not cross:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    qh = dapi.constrain(q.transpose(0, 2, 1, 3), "batch", "heads", "seq_q", None)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+
+    out = ops.flash_attention(qh, kh, vh, causal=causal, window=window,
+                              use_kernel=use_kernel)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * hd)
+    # row-parallel wo: partial sums over the model axis — constrain straight
+    # to the seq-sharded residual layout so XLA emits reduce-scatter
+    out = dapi.constrain(out @ p["wo"], "batch", "seq", None)
+
+    new_cache = None
+    if mode == "prefill":
+        if cross:
+            new_cache = {"k": kh, "v": vh}  # (B, Hkv, I, hd) image K/V
+        elif cfg.kv_quant:
+            qk, sk = _quantize_kv(kh)
+            qv, sv = _quantize_kv(vh)
+            new_cache = {"k": qk, "v": qv, "k_scale": sk, "v_scale": sv}
+        else:
+            new_cache = {"k": kh, "v": vh}  # (B, Hkv, S, hd); capacity == S
+    return out, new_cache
+
+
+def _axprod(mesh, ref_) -> int:
+    if ref_ is None:
+        return 1
+    if isinstance(ref_, str):
+        return mesh.shape[ref_]
+    import math
+
+    return math.prod(mesh.shape[a] for a in ref_)
+
+
+def init_cache(cfg: ModelConfig, kind: str, batch: int, capacity: int,
+               dtype) -> Params:
+    hd = cfg.head_dim_
+    cap = cfg.n_image_tokens if kind == "xattn" else capacity
+    shape = (batch, cfg.n_kv_heads, cap, hd)
+    if cfg.kv_quant and kind != "xattn":
+        # int8 storage + per-(batch, head, position) bf16 scales:
+        # hd=128 -> 132 B/position vs 256 B bf16 (~1.9x cache shrink and
+        # halved read traffic; EXPERIMENTS.md §Perf #6)
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros((batch, cfg.n_kv_heads, cap, 1),
+                                 jnp.bfloat16),
+            "v_scale": jnp.zeros((batch, cfg.n_kv_heads, cap, 1),
+                                 jnp.bfloat16),
+        }
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _quantize_kv(x: jax.Array):
+    """x: (B, Hkv, S, hd) -> (int8 values, (B, Hkv, S, 1) bf16 scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def _dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)

@@ -1,0 +1,162 @@
+"""Decoder blocks: one per layer kind, composed by model.py's layer plan.
+
+Kinds:
+  attn / local / global   pre-norm self-attention + pre-norm SwiGLU MLP
+  moe                     pre-norm self-attention + pre-norm MoE FFN
+  ssm                     pre-norm Mamba-2 mixer (+ MLP only if d_ff > 0)
+  hybrid                  Hymba: attention and SSM heads in parallel on the
+                          same normed input, outputs normed + averaged; + MLP
+  xattn                   Llama-Vision gated cross-attention layer + MLP
+
+Every block returns (x, cache', aux) with a cache pytree whose STRUCTURE is
+static per kind — required for lax.scan over stacked per-kind params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.api import constrain
+from repro.models.attention import attn_fwd, attn_init, init_cache
+from repro.models.layers import mlp_fwd, mlp_init, rmsnorm_fwd, rmsnorm_init
+from repro.models.moe import moe_fwd, moe_init
+from repro.models.ssm import ssm_cache_init, ssm_fwd, ssm_init
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass
+class BlockCtx:
+    mode: str  # train | prefill | decode
+    positions: Optional[jax.Array] = None  # (B, S)
+    lengths: Optional[jax.Array] = None  # (B,)
+    image_embeds: Optional[jax.Array] = None  # (B, I, D)
+
+
+def block_init(key, cfg: ModelConfig, kind: str, dtype) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    p: Params = {"norm1": rmsnorm_init(d, dtype)}
+    if kind in ("attn", "local", "global", "moe", "xattn", "hybrid"):
+        p["attn"] = attn_init(ks[0], cfg, dtype)
+    if kind == "hybrid":
+        p["ssm"] = ssm_init(ks[1], cfg, dtype)
+        p["fuse_norm_a"] = rmsnorm_init(d, dtype)
+        p["fuse_norm_s"] = rmsnorm_init(d, dtype)
+        p["fuse_a"] = jnp.asarray(0.5, jnp.float32)
+        p["fuse_s"] = jnp.asarray(0.5, jnp.float32)
+    if kind == "ssm":
+        p["ssm"] = ssm_init(ks[1], cfg, dtype)
+    if kind == "xattn":
+        p["gate_attn"] = jnp.zeros((), jnp.float32)
+        p["gate_mlp"] = jnp.zeros((), jnp.float32)
+    # FFN sublayer
+    if kind == "moe":
+        p["norm2"] = rmsnorm_init(d, dtype)
+        p["moe"] = moe_init(ks[2], cfg, dtype)
+    elif kind == "ssm":
+        if cfg.d_ff:
+            p["norm2"] = rmsnorm_init(d, dtype)
+            p["mlp"] = mlp_init(ks[2], d, cfg.d_ff, dtype)
+    else:
+        p["norm2"] = rmsnorm_init(d, dtype)
+        p["mlp"] = mlp_init(ks[2], d, cfg.d_ff, dtype)
+    return p
+
+
+def block_cache_init(cfg: ModelConfig, kind: str, batch: int, capacity: int,
+                     dtype) -> Optional[Params]:
+    if kind in ("attn", "local", "global", "moe", "xattn"):
+        return {"attn": init_cache(cfg, kind, batch, capacity, dtype)}
+    if kind == "ssm":
+        return {"ssm": ssm_cache_init(cfg, batch, dtype)}
+    if kind == "hybrid":
+        return {
+            "attn": init_cache(cfg, kind, batch, capacity, dtype),
+            "ssm": ssm_cache_init(cfg, batch, dtype),
+        }
+    raise ValueError(kind)
+
+
+def block_fwd(
+    p: Params,
+    x: jax.Array,
+    *,
+    cfg: ModelConfig,
+    kind: str,
+    ctx: BlockCtx,
+    cache: Optional[Params] = None,
+) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    eps = cfg.norm_eps
+    aux = jnp.zeros((), jnp.float32)
+    x = constrain(x, "batch", "seq", None)
+
+    # ---------------------------------------------------------- mixer(s)
+    h = rmsnorm_fwd(p["norm1"], x, eps)
+    new_cache: Optional[Params] = None
+
+    if kind in ("attn", "local", "global", "moe"):
+        a, c_attn = attn_fwd(
+            p["attn"], h, cfg=cfg, kind=kind, mode=ctx.mode,
+            positions=ctx.positions, lengths=ctx.lengths,
+            cache=cache.get("attn") if cache else None,
+        )
+        x = x + a
+        if c_attn is not None:
+            new_cache = {"attn": c_attn}
+    elif kind == "xattn":
+        a, c_attn = attn_fwd(
+            p["attn"], h, cfg=cfg, kind=kind, mode=ctx.mode,
+            positions=ctx.positions, lengths=ctx.lengths,
+            cache=cache.get("attn") if cache else None,
+            kv_src=ctx.image_embeds,
+        )
+        x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * a
+        if c_attn is not None:
+            new_cache = {"attn": c_attn}
+    elif kind == "ssm":
+        s, c_ssm = ssm_fwd(p["ssm"], h, cfg=cfg, mode=ctx.mode,
+                           cache=cache.get("ssm") if cache else None,
+                           lengths=ctx.lengths)
+        x = x + s
+        if c_ssm is not None:
+            new_cache = {"ssm": c_ssm}
+    elif kind == "hybrid":
+        a, c_attn = attn_fwd(
+            p["attn"], h, cfg=cfg, kind="attn", mode=ctx.mode,
+            positions=ctx.positions, lengths=ctx.lengths,
+            cache=cache.get("attn") if cache else None,
+        )
+        s, c_ssm = ssm_fwd(p["ssm"], h, cfg=cfg, mode=ctx.mode,
+                           cache=cache.get("ssm") if cache else None,
+                           lengths=ctx.lengths)
+        fused = (
+            p["fuse_a"].astype(jnp.float32)
+            * rmsnorm_fwd(p["fuse_norm_a"], a, eps).astype(jnp.float32)
+            + p["fuse_s"].astype(jnp.float32)
+            * rmsnorm_fwd(p["fuse_norm_s"], s, eps).astype(jnp.float32)
+        ).astype(x.dtype)
+        x = x + fused
+        if c_attn is not None or c_ssm is not None:
+            new_cache = {"attn": c_attn, "ssm": c_ssm}
+    else:
+        raise ValueError(kind)
+
+    # ------------------------------------------------------------- FFN
+    if "moe" in p:
+        h2 = rmsnorm_fwd(p["norm2"], x, eps)
+        m, aux = moe_fwd(p["moe"], h2, cfg, mode=ctx.mode)
+        x = x + m
+    elif "mlp" in p:
+        h2 = rmsnorm_fwd(p["norm2"], x, eps)
+        m = mlp_fwd(p["mlp"], h2)
+        if kind == "xattn":
+            m = jnp.tanh(p["gate_mlp"]).astype(x.dtype) * m
+        x = x + m
+
+    x = constrain(x, "batch", "seq", None)
+    return x, new_cache, aux

@@ -1,0 +1,240 @@
+"""Top-level model: embedding -> scanned layer groups -> norm -> LM head.
+
+Layer groups come from ModelConfig.layer_plan(): each group is a repeated
+block of per-kind sub-layers and lowers as ONE lax.scan over stacked params,
+so HLO size is O(#groups), not O(#layers) — llama-90B compiles as a 20-step
+scan of 5 sub-layers. Train mode remats each scan body (per-layer-block
+activation checkpointing).
+
+Forward modes return:
+  train    (logits-or-loss-inputs path) hidden states; loss() computes CE,
+           optionally chunked over sequence for 256k-vocab heads
+  prefill  (logits_last, caches)
+  decode   (logits, caches') — one token
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.api import constrain
+from repro.models.blocks import BlockCtx, block_cache_init, block_fwd, block_init
+from repro.models.layers import _dtype, embed_init, rmsnorm_fwd, rmsnorm_init
+
+Params = Dict[str, Any]
+
+
+def _cast_group(params: Any, act_dtype) -> Any:
+    """Mixed precision: weight MATRICES compute in the activation dtype
+    (bf16 on the MXU); vectors/scalars (norms, A_log, dt_bias, gates) and the
+    MoE router stay in storage dtype (f32 master copies live in the
+    optimizer)."""
+
+    def leaf(path, w):
+        name = str(getattr(path[-1], "key", getattr(path[-1], "name", "")))
+        if name == "router":
+            return w
+        if hasattr(w, "ndim") and w.ndim >= 2 and jnp.issubdtype(
+            w.dtype, jnp.floating
+        ):
+            return w.astype(act_dtype)
+        return w
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.plan = cfg.layer_plan()
+
+    # ------------------------------------------------------------- init
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dtype = _dtype(cfg.param_dtype)
+        keys = jax.random.split(key, len(self.plan) + 2)
+        params: Params = {}
+        if not cfg.embed_inputs or cfg.tie_embeddings:
+            params["embed"] = embed_init(keys[0], cfg.vocab, cfg.d_model, dtype)
+        if not cfg.tie_embeddings:
+            params["head"] = embed_init(keys[1], cfg.vocab, cfg.d_model, dtype).T
+        params["final_norm"] = rmsnorm_init(cfg.d_model, dtype)
+
+        for gi, (kinds, reps) in enumerate(self.plan):
+            gkey = keys[2 + gi]
+
+            def init_block_seq(k):
+                ks = jax.random.split(k, len(kinds))
+                return {
+                    f"sub{i}": block_init(ks[i], cfg, kind, dtype)
+                    for i, kind in enumerate(kinds)
+                }
+
+            params[f"group{gi}"] = jax.vmap(init_block_seq)(
+                jax.random.split(gkey, reps)
+            )
+        return params
+
+    def init_caches(self, batch: int, capacity: int) -> List[Any]:
+        cfg = self.cfg
+        dtype = _dtype(cfg.dtype)
+        caches = []
+        for kinds, reps in self.plan:
+            per_sub = tuple(
+                jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (reps,) + x.shape),
+                    block_cache_init(cfg, kind, batch, capacity, dtype),
+                )
+                for kind in kinds
+            )
+            caches.append(per_sub)
+        return caches
+
+    # ---------------------------------------------------------- forward
+
+    def _embed(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        cfg = self.cfg
+        if cfg.embed_inputs:
+            x = batch["embeds"]
+        else:
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        return constrain(x.astype(_dtype(cfg.dtype)), "batch", "seq", None)
+
+    def _head(self, params: Params, x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        w = params["embed"].T if cfg.tie_embeddings else params["head"]
+        logits = x.astype(jnp.float32) @ w.astype(jnp.float32)
+        return constrain(logits, "batch", "seq", "vocab")
+
+    def forward(
+        self,
+        params: Params,
+        batch: Dict[str, jax.Array],
+        *,
+        mode: str,
+        lengths: Optional[jax.Array] = None,
+        caches: Optional[List[Any]] = None,
+    ) -> Tuple[jax.Array, Optional[List[Any]], jax.Array]:
+        """Returns (hidden, caches', aux_loss). hidden: (B, S, D) post-norm."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        B, S, _ = x.shape
+        if mode == "decode":
+            assert lengths is not None
+            positions = lengths[:, None]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        ctx = BlockCtx(
+            mode=mode,
+            positions=positions,
+            lengths=lengths,
+            image_embeds=batch.get("image_embeds"),
+        )
+
+        aux = jnp.zeros((), jnp.float32)
+        new_caches: Optional[List[Any]] = [] if mode != "train" else None
+        act = _dtype(cfg.dtype)
+        for gi, (kinds, reps) in enumerate(self.plan):
+            gp = _cast_group(params[f"group{gi}"], act)
+            gc = caches[gi] if caches is not None else None
+
+            def body(carry, xs, kinds=kinds):
+                xc, auxc = carry
+                if gc is not None:
+                    p_blk, cache_blk = xs
+                else:
+                    p_blk, cache_blk = xs, None
+                outs = []
+                for i, kind in enumerate(kinds):
+                    xc, c_new, a = block_fwd(
+                        p_blk[f"sub{i}"], xc, cfg=cfg, kind=kind, ctx=ctx,
+                        cache=cache_blk[i] if cache_blk is not None else None,
+                    )
+                    outs.append(c_new)
+                    auxc = auxc + a
+                ys = tuple(outs) if mode != "train" else None
+                return (xc, auxc), ys
+
+            if mode == "train":
+                # save MXU dots AND the named mixer outputs: the latter sit
+                # downstream of TP partial-sum all-reduces, so saving them
+                # keeps remat from re-firing collectives in the backward
+                # (EXPERIMENTS.md §Perf #2)
+                body = jax.checkpoint(
+                    body,
+                    policy=jax.checkpoint_policies.save_from_both_policies(
+                        jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                        jax.checkpoint_policies.save_only_these_names(
+                            "mixer_out"),
+                    ),
+                )
+            xs = (gp, gc) if gc is not None else gp
+            (x, aux), ys = jax.lax.scan(body, (x, aux), xs)
+            if new_caches is not None:
+                new_caches.append(ys)
+
+        x = rmsnorm_fwd(params["final_norm"], x, cfg.norm_eps)
+        return x, new_caches, aux
+
+    # -------------------------------------------------------------- loss
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        """Mean next-token cross entropy (labels pre-shifted by the pipeline),
+        plus 0.01 x MoE aux loss."""
+        cfg = self.cfg
+        hidden, _, aux = self.forward(params, batch, mode="train")
+        labels = batch["labels"]  # (B, S) int32
+        B, S, D = hidden.shape
+        chunk = cfg.loss_chunk if cfg.loss_chunk and S % cfg.loss_chunk == 0 else S
+
+        def ce_of(h, y):  # h (B, c, D), y (B, c)
+            logits = self._head(params, h)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+            return (lse - ll).sum()
+
+        if chunk == S:
+            total = ce_of(hidden, labels)
+        else:
+            hc = hidden.reshape(B, S // chunk, chunk, D).transpose(1, 0, 2, 3)
+            yc = labels.reshape(B, S // chunk, chunk).transpose(1, 0, 2)
+
+            def body(acc, xs):
+                h, y = xs
+                return acc + ce_of(h, y), None
+
+            total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, yc))
+        nll = total / (B * S)
+        return nll + 0.01 * aux
+
+    def logits(self, params: Params, hidden: jax.Array) -> jax.Array:
+        return self._head(params, hidden)
+
+    # ------------------------------------------------------- serve steps
+
+    def prefill(self, params: Params, batch: Dict[str, jax.Array]):
+        """Run the full prompt; returns (last-token logits, caches)."""
+        hidden, caches, _ = self.forward(params, batch, mode="prefill")
+        logits = self._head(params, hidden[:, -1:, :])
+        return logits[:, 0], caches
+
+    def decode_step(
+        self,
+        params: Params,
+        token_batch: Dict[str, jax.Array],  # tokens/embeds of ONE position
+        lengths: jax.Array,
+        caches: List[Any],
+    ):
+        hidden, caches, _ = self.forward(
+            params, token_batch, mode="decode", lengths=lengths, caches=caches
+        )
+        logits = self._head(params, hidden)
+        return logits[:, 0], caches
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

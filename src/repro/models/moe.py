@@ -1,0 +1,155 @@
+"""Mixture-of-Experts layer: top-k router + capacity dispatch.
+
+Dispatch is sort-free capacity bucketing (GShard-style positions computed by
+a cumsum over expert one-hots, then a bounded scatter into (E, C, d) buckets),
+so the O(N x E x C) one-hot dispatch tensor is never materialized. Expert FFNs
+run as one batched einsum over stacked expert weights.
+
+Sharding: expert weights are tensor-sharded over the per-expert hidden dim
+("expert_ff" -> model axis) — robust for any expert count (40 experts on a
+16-way axis can't expert-shard evenly). When n_experts divides the model axis
+an expert-parallel variant ("experts" -> model) turns the bucket constraint
+into an all_to_all dispatch; the sharding policy picks per arch.
+
+Load-balancing aux loss (Switch-style) is returned for the trainer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.api import constrain
+from repro.models.layers import dense_init
+
+Params = Dict[str, jax.Array]
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    ff = cfg.d_ff_expert or cfg.d_ff
+    E = cfg.n_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d)
+    return {
+        "router": dense_init(kr, d, E, jnp.float32),  # router math stays f32
+        "gate": (jax.random.normal(kg, (E, d, ff), jnp.float32) * scale
+                 ).astype(dtype),
+        "up": (jax.random.normal(ku, (E, d, ff), jnp.float32) * scale
+               ).astype(dtype),
+        "down": (jax.random.normal(kd, (E, ff, d), jnp.float32)
+                 / math.sqrt(ff)).astype(dtype),
+    }
+
+
+def _dispatch_groups(cfg: ModelConfig, N: int, mode: str) -> int:
+    """Dispatch-group count: bucketing is computed independently per group
+    so the scatter/gather stays LOCAL to each data shard (GShard-style
+    per-group capacity). Without grouping, every token's bucket slot
+    depends on a global cumsum and XLA lowers the dispatch to distributed
+    scatter/gather — measured at 2.3 TB/device/step of all-reduce +
+    collective-permute on mixtral train_4k (EXPERIMENTS.md §Perf #1)."""
+    if mode == "decode":
+        return 1
+    from repro.distributed import api as dapi
+
+    mesh = dapi.current_mesh()
+    rules = dapi.current_rules()
+    if mesh is None or rules is None:
+        return 1
+    ref = rules.resolve("batch")
+    if ref is None:
+        return 1
+    axes = (ref,) if isinstance(ref, str) else ref
+    g = 1
+    for a in axes:
+        g *= mesh.shape[a]
+    return g if N % g == 0 else 1
+
+
+def moe_fwd(p: Params, x: jax.Array, cfg: ModelConfig, mode: str = "train"
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss).
+
+    Grouped capacity dispatch: tokens are split into G groups (G = the DP
+    shard count under a mesh, else 1); each group routes and buckets its
+    own tokens with capacity C_g = ceil(N_g*K/E * capacity_factor), so
+    dispatch indices never cross a group and the scatter/gather lower to
+    purely local ops. Train/prefill use cfg.capacity_factor (token
+    dropping under routing skew, as in GShard/Switch); decode uses exact
+    no-drop capacity.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    N = B * S
+    G = _dispatch_groups(cfg, N, mode)
+    Ng = N // G
+    xt = x.reshape(G, Ng, D)
+    xt = constrain(xt, "batch", None, None)
+
+    logits = xt.astype(jnp.float32) @ p["router"]  # (G, Ng, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_v, top_e = jax.lax.top_k(logits, K)  # (G, Ng, K)
+    gates = jax.nn.softmax(top_v, axis=-1).astype(x.dtype)
+
+    # Switch aux loss: E * sum_e fraction_tokens_e * mean_prob_e
+    assign_onehot = jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32)
+    aux = E * jnp.mean(
+        jnp.mean(assign_onehot, (0, 1)) * jnp.mean(probs, (0, 1)))
+
+    # ---- per-group capacity bucketing -----------------------------------
+    if mode == "decode":
+        C = Ng * K  # exact: no drops possible
+    else:
+        C = int(math.ceil(Ng * K / E * cfg.capacity_factor))
+    C = max(8, -(-C // 8) * 8)  # sublane-align
+    flat_e = top_e.reshape(G, Ng * K)  # token-major assignment order
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (G, Ng*K, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1  # position within expert, per group
+    slot = jnp.take_along_axis(pos, flat_e[..., None], 2)[..., 0]
+    keep = slot < C
+
+    tok_ids = jnp.arange(Ng * K) // K  # (Ng*K,) group-local
+    e_idx = jnp.where(keep, flat_e, E)  # out-of-range rows drop
+    s_idx = jnp.where(keep, slot, C)
+
+    def bucketize(xg, eg, sg):  # per group: (Ng,D), (Ng*K,), (Ng*K,)
+        b = jnp.zeros((E, C, D), x.dtype)
+        # token k-copies are contiguous: xg[tok_ids] == repeat (broadcast +
+        # reshape, no gather op)
+        xk = jnp.broadcast_to(xg[:, None, :], (Ng, K, D)).reshape(Ng * K, D)
+        return b.at[eg, sg].set(xk, mode="drop")
+
+    buckets = jax.vmap(bucketize)(xt, e_idx, s_idx)  # (G, E, C, D)
+    buckets = constrain(buckets, "batch", "experts", "cap", None)
+
+    # ---- expert FFN (batched over G, E) ---------------------------------
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buckets, p["gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", buckets, p["up"])
+    h = constrain(h, "batch", "experts", "cap", "expert_ff")
+    y = jnp.einsum("gecf,efd->gecd", h, p["down"])  # (G, E, C, D)
+    # the down-proj contracts the model-sharded ff dim -> its output carries
+    # a partial-sum all-reduce; it has batch dims (g, e) so the dots policy
+    # will NOT save it — name it so remat keeps the AR result instead of
+    # re-firing the collective in the backward (EXPERIMENTS.md §Perf #2)
+    from jax.ad_checkpoint import checkpoint_name
+
+    y = checkpoint_name(y, "mixer_out")
+    y = constrain(y, "batch", "experts", "cap", None)
+
+    # ---- combine back (group-local gather) ------------------------------
+    def degroup(yg, eg, sg, gg):  # (E,C,D), (Ng*K,), (Ng*K,), (Ng*K,)
+        rows = yg[eg.clip(0, E - 1), sg.clip(0, C - 1)]  # (Ng*K, D)
+        # tok_ids are contiguous K-blocks: segment_sum == reshape + sum —
+        # a plain reduce instead of an f32 scatter-add (whose VJP is another
+        # gather); measured 5+ TB/step of HBM traffic on granite top-8
+        # (EXPERIMENTS.md §Perf #1c)
+        return (rows * gg[:, None]).reshape(Ng, K, D).sum(axis=1)
+
+    w = (gates.reshape(G, Ng * K)
+         * keep.astype(x.dtype).reshape(G, Ng * K))
+    out = jax.vmap(degroup)(y, e_idx, s_idx, w)  # (G, Ng, D)
+    return out.reshape(B, S, D).astype(x.dtype), aux

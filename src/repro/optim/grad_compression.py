@@ -1,0 +1,65 @@
+"""Gradient compression for the slow inter-pod hop (distributed-opt trick).
+
+Scheme: hierarchical reduction — gradients reduce-scatter/all-reduce in-pod
+over the fast ICI ("data" axis) in bf16, then the *inter-pod* exchange is
+int8 with per-tensor scale, stochastic rounding, and error feedback (the
+quantization residual is carried to the next step, Seide et al. 1-bit SGD /
+Dettmers 8-bit). The DCI hop carries 4x fewer bytes than an f32 all-reduce.
+
+All pieces are pure functions + one shard_map'd collective, tested
+numerically on virtual meshes (tests/test_distributed.py): with error
+feedback the compressed path's cumulative bias vanishes.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array, key: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 with stochastic rounding."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    y = x / scale
+    lo = jnp.floor(y)
+    frac = y - lo
+    rnd = jax.random.uniform(key, x.shape)
+    q = lo + (rnd < frac).astype(y.dtype)
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(
+    g: jax.Array, ef: jax.Array, key: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (q, scale, new_ef): quantize (g + ef); ef' = input - dequant."""
+    target = g.astype(jnp.float32) + ef
+    q, scale = quantize_int8(target, key)
+    new_ef = target - dequantize_int8(q, scale)
+    return q, scale, new_ef
+
+
+def cross_pod_mean_int8(
+    g: jax.Array, ef: jax.Array, key: jax.Array, axis: str = "pod"
+) -> Tuple[jax.Array, jax.Array]:
+    """Inside shard_map: mean of g across `axis` with int8 transport + EF.
+
+    The int8 payload is all-gathered over the (small, e.g. 2-way) pod axis
+    and summed after dequantization — int8 summation would overflow and ring
+    all-reduce cannot re-quantize per hop without compounding error.
+    """
+    q, scale, new_ef = compress_with_feedback(g, ef, key)
+    qs = jax.lax.all_gather(q, axis)  # (npod, ...) int8 — the DCI payload
+    ss = jax.lax.all_gather(scale, axis)  # (npod,) f32
+    total = jnp.tensordot(ss, qs.astype(jnp.float32), axes=((0,), (0,)))
+    npod = qs.shape[0]
+    return (total / npod).astype(g.dtype), new_ef
+
+
+def compression_ratio(g_dtype=jnp.bfloat16) -> float:
+    return jnp.dtype(g_dtype).itemsize / jnp.dtype(jnp.int8).itemsize

@@ -1,0 +1,142 @@
+"""AdamW + cosine schedule + global-norm clipping, ZeRO-1-shardable states.
+
+Hand-rolled (no optax in this container). Moments are stored in f32
+regardless of param dtype; when a ShardingPolicy is supplied, moment trees
+get the param specs PLUS data-axis sharding on the leading dim where it
+divides (ZeRO-1: optimizer state sharded over the DP axes, params gathered
+for compute as usual).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # ()
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_schedule(cfg: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+        prog = jnp.clip(
+            (step - cfg.warmup_steps)
+            / max(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+    return lr
+
+
+class AdamW:
+    def __init__(self, cfg: AdamWConfig = AdamWConfig()):
+        self.cfg = cfg
+        self.schedule = cosine_schedule(cfg)
+
+    def init(self, params: Any) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def update(self, grads: Any, state: AdamWState, params: Any
+               ) -> Tuple[Any, AdamWState, dict]:
+        cfg = self.cfg
+        b1, b2 = cfg.betas
+
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads))
+        )
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+        step = state.step + 1
+        lr = self.schedule(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + cfg.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.m)
+        flat_v = tdef.flatten_up_to(state.v)
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_p, AdamWState(step, new_m, new_v), metrics
+
+    # --------------------------------------------------------- sharding
+
+    def state_shardings(self, policy, params: Any):
+        """ZeRO-1: moments take the param spec, with the leading dim
+        additionally sharded over the DP axes when divisible."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        specs = policy.param_specs(params)
+        dp = policy.rules.resolve("batch")
+        mesh = policy.mesh
+        import math as _m
+
+        dp_size = (_m.prod(mesh.shape[a] for a in dp)
+                   if isinstance(dp, tuple) else mesh.shape[dp]) if dp else 1
+
+        dp_axes = set()
+        if dp:
+            dp_axes = {dp} if isinstance(dp, str) else set(dp)
+
+        def zero1(p, spec):
+            parts = list(spec) + [None] * (p.ndim - len(spec))
+            # a mesh axis may appear once per spec: if FSDP already put the
+            # DP axes on some dim (e.g. MoE expert weights), skip ZeRO-1's
+            # extra sharding for this leaf
+            used = set()
+            for cur in parts:
+                if cur is not None:
+                    used |= {cur} if isinstance(cur, str) else set(cur)
+            if not (used & dp_axes):
+                for i, (dim, cur) in enumerate(zip(p.shape, parts)):
+                    if cur is None and dp and dim % dp_size == 0:
+                        parts[i] = dp
+                        break
+            while parts and parts[-1] is None:
+                parts.pop()
+            return NamedSharding(mesh, P(*parts))
+
+        m_sh = jax.tree.map(zero1, params, specs)
+        return AdamWState(
+            step=NamedSharding(mesh, P()), m=m_sh, v=m_sh
+        )

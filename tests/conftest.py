@@ -1,0 +1,17 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single-CPU device set (the 512-device forcing belongs ONLY to
+launch/dryrun.py). Tests that need multi-device meshes spawn subprocesses
+(see test_distributed.py) or use what `jax.devices()` offers.
+"""
+import os
+
+import jax
+import pytest
+
+# determinism + quieter logs
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

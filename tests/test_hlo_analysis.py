@@ -1,0 +1,164 @@
+"""HLO census unit tests: trip-count multiplication, dot FLOPs, collectives.
+
+The census is the roofline's foundation, so its key behaviours are pinned
+against hand-written HLO snippets AND against live-compiled programs with
+analytically known costs (in a multi-device subprocess).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.launch.hlo_analysis import analyze_collectives, analyze_hlo
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+SNIPPET = """
+HloModule test
+
+%body (p: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %p = (s32[], f32[128,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128,128] get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  %y = f32[128,128]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,128]{1,0} all-reduce(%y), replica_groups=[1,4]<=[4], to_apply=%sum
+  ROOT %t = (s32[], f32[128,128]) tuple(%ni, %ar)
+}
+
+%cond (p: (s32[], f32[128,128])) -> pred[] {
+  %p = (s32[], f32[128,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[128,128]) -> f32[128,128] {
+  %x = f32[128,128] parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[128,128]) tuple(%zero, %x)
+  %w = (s32[], f32[128,128]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[128,128] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_while_trip_count_multiplies():
+    c = analyze_hlo(SNIPPET)
+    # 5 iterations x 2*128^3 dot flops
+    assert c.dot_flops == pytest.approx(5 * 2 * 128 ** 3)
+    # all-reduce: 5 x 2 x 64KiB x 3/4
+    want = 5 * 2 * (128 * 128 * 4) * 3 / 4
+    assert c.collective_bytes_by_kind["all-reduce"] == pytest.approx(want)
+    assert c.collective_ops_by_kind["all-reduce"] == 1  # static count
+
+
+def test_backend_config_trip_count_wins():
+    txt = SNIPPET.replace(
+        "condition=%cond, body=%body",
+        'condition=%cond, body=%body, backend_config='
+        '{"known_trip_count":{"n":"7"}}')
+    c = analyze_hlo(txt)
+    assert c.dot_flops == pytest.approx(7 * 2 * 128 ** 3)
+
+
+def test_group_size_parsing_variants():
+    base = SNIPPET.replace("replica_groups=[1,4]<=[4]",
+                           "replica_groups={{0,1},{2,3}}")
+    c = analyze_hlo(base)
+    want = 5 * 2 * (128 * 128 * 4) * 1 / 2  # g=2
+    assert c.collective_bytes_by_kind["all-reduce"] == pytest.approx(want)
+
+
+def test_collective_kinds_wire_models():
+    hlo = """
+HloModule m
+
+ENTRY %main (x: f32[64,64]) -> f32[64,64] {
+  %x = f32[64,64] parameter(0)
+  %ag = f32[256,64]{1,0} all-gather(%x), replica_groups=[1,4]<=[4], dimensions={0}
+  %rs = f32[64,64]{1,0} reduce-scatter(%ag), replica_groups=[1,4]<=[4], dimensions={0}, to_apply=%s
+  %cp = f32[64,64]{1,0} collective-permute(%rs), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  ROOT %aa = f32[64,64]{1,0} all-to-all(%cp), replica_groups=[1,4]<=[4], dimensions={0}
+}
+"""
+    c = analyze_hlo(hlo)
+    kb = 64 * 64 * 4
+    assert c.collective_bytes_by_kind["all-gather"] == pytest.approx(
+        4 * kb * 3 / 4)  # result 4x shard, (g-1)/g
+    assert c.collective_bytes_by_kind["reduce-scatter"] == pytest.approx(
+        4 * kb * 3 / 4)  # operand is the gathered tensor
+    assert c.collective_bytes_by_kind["collective-permute"] == pytest.approx(
+        kb)
+    assert c.collective_bytes_by_kind["all-to-all"] == pytest.approx(
+        kb * 3 / 4)
+
+
+def test_async_pairs_counted_once():
+    hlo = """
+HloModule m
+
+ENTRY %main (x: f32[64,64]) -> f32[256,64] {
+  %x = f32[64,64] parameter(0)
+  %s = (f32[64,64], f32[256,64]) all-gather-start(%x), replica_groups=[1,4]<=[4], dimensions={0}
+  ROOT %d = f32[256,64]{1,0} all-gather-done(%s)
+}
+"""
+    c = analyze_hlo(hlo)
+    assert c.collective_ops_by_kind["all-gather"] == 1
+    kb = 64 * 64 * 4
+    assert c.collective_bytes_by_kind["all-gather"] == pytest.approx(
+        4 * kb * 3 / 4)
+
+
+def test_live_compiled_program_census():
+    """Live end-to-end: compile a sharded scan with known analytic cost and
+    check the census against it (subprocess owns the 8 host devices)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.hlo_analysis import analyze_hlo
+        mesh = jax.make_mesh((8,), ("d",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+        def f(v):
+            def body(c, _):
+                c = c @ c
+                c = jax.lax.with_sharding_constraint(
+                    c, NamedSharding(mesh, P("d", None)))
+                return c, None
+            c, _ = jax.lax.scan(body, v, None, length=10)
+            return c
+        with mesh:
+            comp = jax.jit(
+                f, in_shardings=NamedSharding(mesh, P("d", None))
+            ).lower(x).compile()
+        c = analyze_hlo(comp.as_text())
+        want = 10 * 2 * 1024**3 / 8  # 10 steps, sharded 8 ways
+        assert abs(c.dot_flops - want) / want < 0.01, (c.dot_flops, want)
+        assert c.collective_ops_by_kind.get("all-gather", 0) >= 1
+        print("OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=480, env=env)
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout
+
+
+def test_backcompat_analyze_collectives():
+    stats = analyze_collectives(SNIPPET)
+    assert stats.wire_bytes > 0
+    assert stats.op_counts["all-reduce"] == 1

@@ -1,0 +1,310 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.ssd_scan import ssd_chunk_pallas
+from repro.kernels.taskbench_compute import taskbench_compute_pallas
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------- taskbench
+
+
+@pytest.mark.parametrize("rows,payload", [(4, 16), (32, 64), (100, 130),
+                                          (7, 5), (256, 128)])
+@pytest.mark.parametrize("iters", [0, 1, 7, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_taskbench_compute_sweep(rows, payload, iters, dtype):
+    x = jax.random.uniform(jax.random.PRNGKey(0), (rows, payload),
+                           jnp.float32).astype(dtype)
+    got = taskbench_compute_pallas(x, iters, interpret=True)
+    want = ref.taskbench_compute_ref(x, iters)
+    assert got.shape == x.shape and got.dtype == x.dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **tol(dtype))
+
+
+def test_taskbench_block_rows_invariance():
+    x = jax.random.uniform(jax.random.PRNGKey(1), (64, 96))
+    a = taskbench_compute_pallas(x, 9, block_rows=8, interpret=True)
+    b = taskbench_compute_pallas(x, 9, block_rows=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+# ----------------------------------------------------------------- rmsnorm
+
+
+@pytest.mark.parametrize("rows,d", [(8, 64), (33, 100), (5, 1536), (128, 257)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(rows, d, dtype):
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (rows, d), jnp.float32).astype(dtype)
+    w = jax.random.uniform(jax.random.PRNGKey(3), (d,), jnp.float32,
+                           0.5, 1.5).astype(dtype)
+    got = rmsnorm_pallas(x, w, interpret=True)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **tol(dtype))
+
+
+# --------------------------------------------------------------- attention
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Sk,D", [
+    (1, 4, 4, 32, 32, 32),     # MHA
+    (2, 8, 2, 64, 64, 16),     # GQA 4:1
+    (1, 2, 1, 40, 72, 64),     # ragged lengths (padding paths)
+    (1, 4, 2, 128, 128, 128),  # hardware-aligned
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 16), (False, 0)])
+def test_flash_attention_sweep(B, Hq, Hkv, Sq, Sk, D, causal, window):
+    if not causal and Sq != Sk:
+        pytest.skip("non-causal ragged not used (cross-attn is Sq!=Sk but "
+                    "handled below)")
+    keys = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(keys[0], (B, Hq, Sq, D), jnp.float32)
+    k = jax.random.normal(keys[1], (B, Hkv, Sk, D), jnp.float32)
+    v = jax.random.normal(keys[2], (B, Hkv, Sk, D), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 blk_q=32, blk_k=32, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_cross_no_causal():
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(keys[0], (2, 4, 48, 32))
+    k = jax.random.normal(keys[1], (2, 2, 80, 32))
+    v = jax.random.normal(keys[2], (2, 2, 80, 32))
+    got = flash_attention_pallas(q, k, v, causal=False, blk_q=16, blk_k=32,
+                                 interpret=True)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    keys = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(keys[0], (1, 2, 64, 64)).astype(jnp.bfloat16)
+    k = jax.random.normal(keys[1], (1, 2, 64, 64)).astype(jnp.bfloat16)
+    v = jax.random.normal(keys[2], (1, 2, 64, 64)).astype(jnp.bfloat16)
+    got = flash_attention_pallas(q, k, v, interpret=True)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+# ----------------------------------------------------- chunked attention
+
+
+@pytest.mark.parametrize("Sq,Sk,blk", [(64, 64, 16), (48, 80, 32),
+                                       (128, 128, 128), (100, 36, 16)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 24), (False, 0)])
+def test_chunked_attention_matches_dense(Sq, Sk, blk, causal, window):
+    B, Hq, Hkv, D = 2, 4, 2, 16
+    keys = jax.random.split(jax.random.PRNGKey(21), 3)
+    q = jax.random.normal(keys[0], (B, Hq, Sq, D))
+    k = jax.random.normal(keys[1], (B, Hkv, Sk, D))
+    v = jax.random.normal(keys[2], (B, Hkv, Sk, D))
+    got = ref.chunked_attention_ref(q, k, v, causal=causal, window=window,
+                                    blk=blk)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_attention_gradients_match_dense():
+    """The chunked path is the TRAIN implementation for long sequences — its
+    gradients must match the dense oracle's."""
+    B, Hq, Hkv, S, D = 1, 2, 1, 64, 16
+    keys = jax.random.split(jax.random.PRNGKey(22), 3)
+    q = jax.random.normal(keys[0], (B, Hq, S, D))
+    k = jax.random.normal(keys[1], (B, Hkv, S, D))
+    v = jax.random.normal(keys[2], (B, Hkv, S, D))
+
+    def loss_chunked(q, k, v):
+        return jnp.sum(ref.chunked_attention_ref(q, k, v, blk=16) ** 2)
+
+    def loss_dense(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v) ** 2)
+
+    g1 = jax.grad(loss_chunked, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_dense, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_chunked_attention_q_offset():
+    """q_offset shifts causal/window masks (cached decode prefill chunks)."""
+    B, H, S, D = 1, 2, 32, 8
+    keys = jax.random.split(jax.random.PRNGKey(23), 3)
+    q = jax.random.normal(keys[0], (B, H, 8, D))
+    k = jax.random.normal(keys[1], (B, H, S, D))
+    v = jax.random.normal(keys[2], (B, H, S, D))
+    got = ref.chunked_attention_ref(q, k, v, q_offset=24, blk=8)
+    want = ref.attention_ref(q, k, v, q_offset=24)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------- decode attention
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D", [
+    (2, 4, 4, 64, 32),
+    (3, 8, 2, 100, 64),
+    (1, 4, 1, 513, 128),
+])
+@pytest.mark.parametrize("window", [0, 32])
+def test_decode_attention_sweep(B, Hq, Hkv, S, D, window):
+    keys = jax.random.split(jax.random.PRNGKey(7), 4)
+    q = jax.random.normal(keys[0], (B, Hq, D))
+    kc = jax.random.normal(keys[1], (B, Hkv, S, D))
+    vc = jax.random.normal(keys[2], (B, Hkv, S, D))
+    lengths = jax.random.randint(keys[3], (B,), 1, S + 1, jnp.int32)
+    got, m, l = decode_attention_pallas(q, kc, vc, lengths, window=window,
+                                        blk_s=64, interpret=True)
+    want, m_ref, l_ref = ref.decode_attention_ref(
+        q, kc, vc, lengths, window=window, return_stats=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    # softmax stats must match too (they feed the cross-shard combine)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(m_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(l_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_attention_zero_length_is_safe():
+    B, Hq, Hkv, S, D = 2, 2, 2, 32, 16
+    keys = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(keys[0], (B, Hq, D))
+    kc = jax.random.normal(keys[1], (B, Hkv, S, D))
+    vc = jax.random.normal(keys[2], (B, Hkv, S, D))
+    lengths = jnp.array([0, 5], jnp.int32)
+    got, m, l = decode_attention_pallas(q, kc, vc, lengths, interpret=True)
+    assert np.isfinite(np.asarray(got)).all()
+    assert float(l[0].sum()) == 0.0  # fully-masked row signals empty
+
+
+# ----------------------------------------------------------------------- SSD
+
+
+@pytest.mark.parametrize("BC,H,G,T,P,N", [
+    (2, 2, 1, 16, 8, 8),
+    (3, 4, 2, 32, 64, 16),
+    (1, 2, 2, 128, 64, 128),
+])
+def test_ssd_chunk_sweep(BC, H, G, T, P, N):
+    keys = jax.random.split(jax.random.PRNGKey(9), 5)
+    x = jax.random.normal(keys[0], (BC, H, T, P))
+    b = jax.random.normal(keys[1], (BC, G, T, N)) * 0.3
+    c = jax.random.normal(keys[2], (BC, G, T, N)) * 0.3
+    dta = -jax.random.uniform(keys[3], (BC, H, T), minval=0.01, maxval=0.3)
+    dt = jax.random.uniform(keys[4], (BC, H, T), minval=0.1, maxval=1.0)
+    y, s = ssd_chunk_pallas(x, b, c, dta, dt, interpret=True)
+    y_ref, s_ref = ref.ssd_chunk_ref(x, b, c, dta, dt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_ssd_chunked_equals_sequential(chunk):
+    """Chunked SSD (the paper-of-the-arch's core identity) == token-by-token
+    recurrence, for any chunk size."""
+    B, S, H, G, P, N = 2, 64, 2, 1, 8, 8
+    keys = jax.random.split(jax.random.PRNGKey(10), 5)
+    x = jax.random.normal(keys[0], (B, S, H, P))
+    b = jax.random.normal(keys[1], (B, S, G, N)) * 0.3
+    c = jax.random.normal(keys[2], (B, S, G, N)) * 0.3
+    dta = -jax.random.uniform(keys[3], (B, S, H), minval=0.01, maxval=0.3)
+    dt = jax.random.uniform(keys[4], (B, S, H), minval=0.1, maxval=1.0)
+    y, s = ops.ssd(x, b, c, dta, dt, chunk=chunk, use_kernel=True)
+    y_ref, s_ref = ref.ssd_sequential_ref(x, b, c, dta, dt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_decode_step_matches_sequential():
+    """Running ssd_decode_step token-by-token == full-sequence oracle."""
+    B, S, H, G, P, N = 1, 16, 2, 1, 8, 8
+    keys = jax.random.split(jax.random.PRNGKey(11), 5)
+    x = jax.random.normal(keys[0], (B, S, H, P))
+    b = jax.random.normal(keys[1], (B, S, G, N)) * 0.3
+    c = jax.random.normal(keys[2], (B, S, G, N)) * 0.3
+    dta = -jax.random.uniform(keys[3], (B, S, H), minval=0.01, maxval=0.3)
+    dt = jax.random.uniform(keys[4], (B, S, H), minval=0.1, maxval=1.0)
+    y_ref, s_ref = ref.ssd_sequential_ref(x, b, c, dta, dt)
+
+    state = jnp.zeros((B, H, N, P), jnp.float32)
+    ys = []
+    for t in range(S):
+        state, y = ops.ssd_decode_step(
+            state, x[:, t], b[:, t], c[:, t], dta[:, t], dt[:, t])
+        ys.append(y)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_init_state_carries():
+    """ops.ssd with init_state == running the two halves back to back."""
+    B, S, H, G, P, N = 1, 32, 2, 1, 8, 8
+    keys = jax.random.split(jax.random.PRNGKey(12), 5)
+    x = jax.random.normal(keys[0], (B, S, H, P))
+    b = jax.random.normal(keys[1], (B, S, G, N)) * 0.3
+    c = jax.random.normal(keys[2], (B, S, G, N)) * 0.3
+    dta = -jax.random.uniform(keys[3], (B, S, H), minval=0.01, maxval=0.3)
+    dt = jax.random.uniform(keys[4], (B, S, H), minval=0.1, maxval=1.0)
+    y_full, s_full = ops.ssd(x, b, c, dta, dt, chunk=16)
+    h = S // 2
+    y1, s1 = ops.ssd(x[:, :h], b[:, :h], c[:, :h], dta[:, :h], dt[:, :h],
+                     chunk=16)
+    y2, s2 = ops.ssd(x[:, h:], b[:, h:], c[:, h:], dta[:, h:], dt[:, h:],
+                     chunk=16, init_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ------------------------------------------------------------- ops wrappers
+
+
+def test_ops_dispatch_kernel_vs_ref_paths():
+    x = jax.random.normal(jax.random.PRNGKey(13), (16, 32))
+    w = jnp.ones((32,))
+    a = ops.rmsnorm(x, w, use_kernel=True)
+    b = ops.rmsnorm(x, w, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_ops_taskbench_nd_shapes():
+    x = jax.random.uniform(jax.random.PRNGKey(14), (3, 5, 7))
+    got = ops.taskbench_compute(x, 5)
+    want = ref.taskbench_compute_ref(x, 5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)

@@ -1,0 +1,119 @@
+"""Optimizer + gradient-compression units (including hypothesis properties)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.optim.grad_compression import (
+    compress_with_feedback,
+    dequantize_int8,
+    quantize_int8,
+)
+from repro.optim.optimizer import AdamW, AdamWConfig, cosine_schedule
+
+
+def test_adamw_decreases_quadratic_loss():
+    opt = AdamW(AdamWConfig(lr=0.05, warmup_steps=1, total_steps=200,
+                            weight_decay=0.0))
+    params = {"w": jnp.array([3.0, -2.0, 1.5])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.update(g, state, params)
+    assert float(loss(params)) < 1e-2 * l0
+
+
+def test_adamw_clipping_bounds_update():
+    opt = AdamW(AdamWConfig(lr=1.0, clip_norm=1.0, warmup_steps=1,
+                            weight_decay=0.0))
+    params = {"w": jnp.zeros((4,))}
+    state = opt.init(params)
+    huge = {"w": jnp.full((4,), 1e6)}
+    new, state, metrics = opt.update(huge, state, params)
+    assert float(metrics["grad_norm"]) == pytest.approx(2e6, rel=1e-3)
+    # effective grad after clipping has norm 1 -> adam step bounded by lr
+    assert np.abs(np.asarray(new["w"])).max() <= 1.1
+
+
+def test_schedule_warmup_and_decay():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    lr = cosine_schedule(cfg)
+    assert float(lr(jnp.int32(0))) == pytest.approx(0.0)
+    assert float(lr(jnp.int32(10))) == pytest.approx(1e-3, rel=1e-3)
+    assert float(lr(jnp.int32(100))) == pytest.approx(1e-4, rel=1e-2)
+    assert float(lr(jnp.int32(55))) < 1e-3
+
+
+def test_weight_decay_applies_to_matrices_only():
+    opt = AdamW(AdamWConfig(lr=0.1, weight_decay=0.5, warmup_steps=1))
+    params = {"mat": jnp.ones((2, 2)), "vec": jnp.ones((2,))}
+    state = opt.init(params)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    new, _, _ = opt.update(zeros, state, params)
+    assert np.all(np.asarray(new["mat"]) < 1.0)  # decayed
+    np.testing.assert_allclose(np.asarray(new["vec"]), 1.0)  # not decayed
+
+
+def test_moments_stay_f32_for_bf16_params():
+    opt = AdamW()
+    params = {"w": jnp.ones((3,), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state.m["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((3,), jnp.bfloat16)}
+    new, state, _ = opt.update(g, state, params)
+    assert new["w"].dtype == jnp.bfloat16
+    assert state.v["w"].dtype == jnp.float32
+
+
+# --------------------------------------------------------- int8 compression
+
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,))
+    q, scale = quantize_int8(x, jax.random.PRNGKey(1))
+    err = np.abs(np.asarray(dequantize_int8(q, scale) - x))
+    assert err.max() <= float(scale) + 1e-7
+
+
+def test_error_feedback_accumulates_residual():
+    x = jnp.full((16,), 0.41)
+    ef = jnp.zeros((16,))
+    q, scale, ef2 = compress_with_feedback(x, ef, jax.random.PRNGKey(0))
+    recon = dequantize_int8(q, scale)
+    np.testing.assert_allclose(np.asarray(recon + ef2), np.asarray(x),
+                               rtol=1e-6)
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_property_stochastic_rounding_unbiased(seed):
+    """E[quantized] == input when averaged over rounding keys."""
+    x = jnp.full((8,), 0.3)
+    recons = []
+    for i in range(64):
+        q, s = quantize_int8(x, jax.random.PRNGKey(seed * 64 + i))
+        recons.append(np.asarray(dequantize_int8(q, s)))
+    mean = np.stack(recons).mean(0)
+    scale = float(jnp.max(jnp.abs(x)) / 127.0)
+    assert np.abs(mean - 0.3).max() < 0.5 * scale
+
+
+@given(
+    shape=st.sampled_from([(8,), (4, 4), (2, 3, 5)]),
+    scale_exp=st.integers(-8, 8),
+)
+@settings(max_examples=30, deadline=None)
+def test_property_quantize_handles_scales(shape, scale_exp):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape) * (2.0 ** scale_exp)
+    q, s = quantize_int8(x, jax.random.PRNGKey(1))
+    assert q.dtype == jnp.int8
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) * 1.01 + 1e-12

@@ -1,0 +1,174 @@
+"""Unit + property tests for task-graph patterns (normative index math)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import patterns as P
+from repro.core.graph import TaskGraph
+from repro.core.task_kernels import KernelSpec
+
+
+def make(pattern, width=16, steps=8, **kw):
+    return TaskGraph(steps=steps, width=width, pattern=pattern,
+                     kernel=KernelSpec("empty"), **kw)
+
+
+# ------------------------------------------------------------------ shapes
+
+
+@pytest.mark.parametrize("pattern", P.PATTERNS)
+def test_dependency_arrays_shapes(pattern):
+    g = make(pattern)
+    idx, mask = g.dependency_arrays()
+    assert idx.shape == (g.period, g.width, g.max_deps)
+    assert mask.shape == idx.shape
+    assert idx.dtype == np.int32
+    assert ((idx >= 0) & (idx < g.width)).all()
+    assert set(np.unique(mask)) <= {0.0, 1.0}
+
+
+@pytest.mark.parametrize("pattern", P.PATTERNS)
+def test_dependencies_match_arrays(pattern):
+    """dependency_arrays must agree with the scalar dependencies() oracle."""
+    g = make(pattern)
+    idx, mask = g.dependency_arrays()
+    for t in range(1, g.steps):
+        s = (t - 1) % g.period
+        for p in range(g.width):
+            from_arrays = sorted(
+                int(i) for i, m in zip(idx[s, p], mask[s, p]) if m > 0
+            )
+            assert from_arrays == sorted(set(g.dependencies(t, p))), (
+                pattern, t, p)
+
+
+# --------------------------------------------------------------- specifics
+
+
+def test_stencil_edges_clip():
+    g = make("stencil_1d", width=8)
+    assert g.dependencies(1, 0) == (0, 1)
+    assert g.dependencies(1, 7) == (6, 7)
+    assert g.dependencies(1, 3) == (2, 3, 4)
+
+
+def test_stencil_periodic_wraps():
+    g = make("stencil_1d_periodic", width=8)
+    assert sorted(g.dependencies(1, 0)) == [0, 1, 7]
+
+
+def test_dom_is_lower_triangular():
+    g = make("dom", width=8)
+    for p in range(8):
+        assert all(q <= p for q in g.dependencies(1, p))
+
+
+def test_fft_butterfly_strides():
+    g = make("fft", width=8, steps=7)
+    # stride 1, 2, 4 cycling
+    assert set(g.dependencies(1, 0)) == {0, 1}
+    assert set(g.dependencies(2, 0)) == {0, 2}
+    assert set(g.dependencies(3, 0)) == {0, 4}
+    assert set(g.dependencies(4, 0)) == {0, 1}  # period wraps
+
+
+def test_tree_rises_then_falls():
+    g = make("tree", width=8, steps=13)
+    L = 3
+    strides = []
+    for t in range(1, 1 + 2 * L):
+        deps = set(g.dependencies(t, 0)) - {0}
+        strides.append(deps.pop() if deps else 0)
+    assert strides == [1, 2, 4, 4, 2, 1]
+
+
+def test_all_to_all_full_fanin():
+    g = make("all_to_all", width=8)
+    assert g.dependencies(1, 3) == tuple(range(8))
+
+
+def test_nearest_radius():
+    g = make("nearest", width=16, radius=3)
+    assert sorted(g.dependencies(1, 8)) == list(range(5, 12))
+    assert len(g.dependencies(1, 0)) == 7  # periodic wrap keeps count
+
+
+def test_random_nearest_deterministic_and_contains_self():
+    g1 = make("random_nearest", width=16, radius=2, seed=7)
+    g2 = make("random_nearest", width=16, radius=2, seed=7)
+    g3 = make("random_nearest", width=16, radius=2, seed=8)
+    d1 = [g1.dependencies(1, p) for p in range(16)]
+    assert d1 == [g2.dependencies(1, p) for p in range(16)]
+    assert any(d1[p] != g3.dependencies(1, p) for p in range(16))
+    for p in range(16):
+        assert p in d1[p]
+    # fixed across timesteps (period 1)
+    assert d1 == [g1.dependencies(5, p) for p in range(16)]
+
+
+def test_spread_fanout_count():
+    g = make("spread", width=16, fanout=4)
+    for t in (1, 2, 9):
+        for p in range(16):
+            deps = g.dependencies(t, p)
+            assert 1 <= len(deps) <= 4
+            assert all(0 <= d < 16 for d in deps)
+
+
+# ------------------------------------------------------------- validation
+
+
+def test_pow2_required_for_butterflies():
+    with pytest.raises(ValueError):
+        make("fft", width=12)
+    with pytest.raises(ValueError):
+        make("tree", width=6)
+
+
+def test_unknown_pattern_rejected():
+    with pytest.raises(ValueError):
+        make("nope")
+
+
+def test_reverse_dependencies_inverts():
+    g = make("stencil_1d", width=8)
+    for p in range(8):
+        for q in g.reverse_dependencies(1, p):
+            assert p in g.dependencies(2, q)
+
+
+# ------------------------------------------------------------- properties
+
+
+@given(
+    pattern=st.sampled_from([p for p in P.PATTERNS]),
+    wexp=st.integers(2, 6),
+    t=st.integers(1, 40),
+)
+@settings(max_examples=120, deadline=None)
+def test_property_deps_in_range_and_nonempty(pattern, wexp, t):
+    W = 1 << wexp
+    g = TaskGraph(steps=t + 1, width=W, pattern=pattern,
+                  kernel=KernelSpec("empty"))
+    for p in (0, W // 2, W - 1):
+        deps = g.dependencies(t, p)
+        assert all(0 <= d < W for d in deps)
+        assert len(set(deps)) == len(deps)  # no duplicates
+        if pattern != "trivial":
+            assert deps, f"{pattern} must have deps at t>=1"
+        assert len(deps) <= g.max_deps
+
+
+@given(wexp=st.integers(2, 5), steps=st.integers(2, 12))
+@settings(max_examples=40, deadline=None)
+def test_property_num_dependencies_consistent(wexp, steps):
+    W = 1 << wexp
+    g = TaskGraph(steps=steps, width=W, pattern="stencil_1d",
+                  kernel=KernelSpec("empty"))
+    manual = sum(
+        len(g.dependencies(t, p)) for t in range(1, steps) for p in range(W)
+    )
+    assert g.num_dependencies == manual
