@@ -11,8 +11,8 @@ def main() -> int:
     spec_dict = json.loads(sys.stdin.read())
     from benchmarks.common import SweepSpec, run_sweep_inproc
 
-    spec = SweepSpec(**{k: tuple(v) if k == "grains" else v
-                        for k, v in spec_dict.items()})
+    spec = SweepSpec(**{k: tuple(v) if k in ("grains", "compare_runtimes")
+                        else v for k, v in spec_dict.items()})
     rows = run_sweep_inproc(spec)
     print(json.dumps(rows))
     return 0

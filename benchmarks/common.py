@@ -43,6 +43,17 @@ class SweepSpec:
     grains: Tuple[int, ...] = (1, 16, 256, 4096, 16384)
     reps: int = 3
     warmup: int = 1
+    #: K > 1 runs a GraphEnsemble of K independent graphs (distinct seeds,
+    #: same pattern/grain) concurrently instead of one graph.
+    ensemble: int = 1
+    #: with ensemble > 1: also time each member alone, back-to-back, and
+    #: report the summed serial wall ("serial_wall") as the no-concurrency
+    #: baseline for the same process/devices/compile state.
+    serial_baseline: bool = False
+    #: measure these runtimes back-to-back in ONE worker process (rows carry
+    #: a "runtime" key). Cross-backend wall ratios from a single process are
+    #: far less noisy than ratios across separately scheduled workers.
+    compare_runtimes: Tuple[str, ...] = ()
     options: Dict = dataclasses.field(default_factory=dict)
 
     def resolved_width(self) -> int:
@@ -53,37 +64,65 @@ def run_sweep_inproc(spec: SweepSpec) -> List[Dict]:
     """Run inside the current process (uses existing jax device set)."""
     import jax
 
-    from repro.core import KernelSpec, TaskGraph, get_runtime
+    from repro.core import GraphEnsemble, KernelSpec, TaskGraph, get_runtime
 
     devs = jax.devices()[: spec.devices]
     if len(devs) < spec.devices:
         raise RuntimeError(
             f"need {spec.devices} devices, have {len(jax.devices())}")
     rows = []
+    runtimes = spec.compare_runtimes or (spec.runtime,)
     for grain in spec.grains:
-        g = TaskGraph(
-            steps=spec.steps,
-            width=spec.resolved_width(),
-            pattern=spec.pattern,
-            payload=spec.payload,
-            kernel=KernelSpec("compute_bound", grain),
-        )
-        rt = get_runtime(spec.runtime, devices=devs, **spec.options)
-        ok, why = rt.supports(g)
-        if not ok:
-            rows.append({"grain": grain, "skip": why})
-            continue
-        sample, stats = rt.measure(g, reps=spec.reps, warmup=spec.warmup)
-        rows.append({
-            "grain": grain,
-            "wall": sample.wall_time,
-            "flops": sample.total_flops,
-            "tasks": sample.num_tasks,
-            "cores": sample.cores,
-            "gran_us": sample.granularity_us,
-            "rate": sample.flops_per_second,
-            "dispatches": stats.dispatches,
-        })
+        members = [
+            TaskGraph(
+                steps=spec.steps,
+                width=spec.resolved_width(),
+                pattern=spec.pattern,
+                payload=spec.payload,
+                kernel=KernelSpec("compute_bound", grain),
+                seed=k,
+            )
+            for k in range(max(spec.ensemble, 1))
+        ]
+        for name in runtimes:
+            rt = get_runtime(name, devices=devs, **spec.options)
+            serial_wall = None
+            if spec.ensemble > 1:
+                ens = GraphEnsemble(members)
+                ok, why = rt.supports_ensemble(ens)
+                if not ok:
+                    rows.append({"runtime": name, "grain": grain, "skip": why})
+                    continue
+                sample, stats = rt.measure_ensemble(
+                    ens, reps=spec.reps, warmup=spec.warmup)
+                if spec.serial_baseline:
+                    # members differ only in seed (same traced program), so
+                    # time ONE member and scale — avoids K redundant compiles
+                    serial_wall = spec.ensemble * rt.measure(
+                        members[0], reps=spec.reps,
+                        warmup=spec.warmup)[0].wall_time
+            else:
+                g = members[0]
+                ok, why = rt.supports(g)
+                if not ok:
+                    rows.append({"runtime": name, "grain": grain, "skip": why})
+                    continue
+                sample, stats = rt.measure(g, reps=spec.reps,
+                                           warmup=spec.warmup)
+            row = {
+                "runtime": name,
+                "grain": grain,
+                "wall": sample.wall_time,
+                "flops": sample.total_flops,
+                "tasks": sample.num_tasks,
+                "cores": sample.cores,
+                "gran_us": sample.granularity_us,
+                "rate": sample.flops_per_second,
+                "dispatches": stats.dispatches,
+            }
+            if serial_wall is not None:
+                row["serial_wall"] = serial_wall
+            rows.append(row)
     return rows
 
 

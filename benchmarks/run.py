@@ -4,6 +4,7 @@
   table2  METG x overdecomposition {1,8,16} (paper Table 2)
   fig2    METG vs device count (paper Fig 2)
   fig3    build-option/transport ablation (paper Fig 3)
+  fig4    latency hiding vs ensemble size K (paper §6.2, `-and` graphs)
   roofline  assemble dry-run artifacts (framework §Roofline)
 
 `python -m benchmarks.run` runs the quick preset of everything;
@@ -16,7 +17,7 @@ import argparse
 import sys
 import time
 
-ALL = ("fig1", "table2", "fig2", "fig3", "roofline")
+ALL = ("fig1", "table2", "fig2", "fig3", "fig4", "roofline")
 
 
 def main(argv=None) -> int:
@@ -58,6 +59,15 @@ def main(argv=None) -> int:
         print("=" * 72)
         from benchmarks.fig3_variants import run as fig3
         fig3(devices=8, od=8, steps=steps, reps=max(reps, 5))
+
+    if "fig4" in chosen:
+        print("=" * 72)
+        print("Fig 4: latency hiding — wall vs K concurrent graphs")
+        print("=" * 72)
+        from benchmarks.fig4_latency_hiding import run as fig4
+        # fig4 needs enough steps for per-dispatch cost to rise above timing
+        # noise; use its own tuned default unless running the paper protocol.
+        fig4(devices=4, **({"steps": 1000, "reps": 5} if a.paper else {}))
 
     if "roofline" in chosen:
         print("=" * 72)

@@ -4,14 +4,16 @@ Shows the full Task Bench surface the framework implements: 11 dependence
 patterns (stencil, FFT butterflies, tree reductions, all-to-all, random
 graphs, ...) executed by 5 interchangeable runtime backends, with
 bit-compatible results (asserted here — the system's core invariant) and
-per-backend overhead characteristics (printed).
+per-backend overhead characteristics (printed). A second sweep runs a
+mixed-pattern GraphEnsemble (Task Bench's `-and` composition) concurrently
+on every backend and asserts per-member equivalence.
 
   PYTHONPATH=src python examples/taskbench_sweep.py
 """
 import numpy as np
 
-from repro.core import PATTERNS, KernelSpec, TaskGraph, available_runtimes, \
-    get_runtime
+from repro.core import PATTERNS, GraphEnsemble, KernelSpec, TaskGraph, \
+    available_runtimes, get_runtime
 
 
 def main():
@@ -47,6 +49,34 @@ def main():
         print(f"{pattern:22s}" + "".join(cells))
 
     print("\nAll backends produced identical final states per pattern "
+          "(asserted).")
+
+    # ---- concurrent multi-graph ensemble (Task Bench `-and`, paper §6.2)
+    ensemble = GraphEnsemble([
+        TaskGraph(steps=10, width=16, pattern="stencil_1d", payload=32,
+                  kernel=KernelSpec("compute_bound", 256), seed=0),
+        TaskGraph(steps=10, width=16, pattern="nearest", payload=32,
+                  kernel=KernelSpec("compute_bound", 64), radius=2, seed=1),
+        TaskGraph(steps=10, width=16, pattern="fft", payload=32,
+                  kernel=KernelSpec("compute_bound", 16), seed=2),
+    ])
+    print(f"\nensemble: {ensemble.describe()}")
+    refs = [get_runtime("fused").execute(g) for g in ensemble]
+    for backend in available_runtimes():
+        rt = get_runtime(backend)
+        ok, why = rt.supports_ensemble(ensemble)
+        if not ok:
+            print(f"  {backend:12s} — ({why.split(':')[-1].strip()})")
+            continue
+        sample, stats = rt.measure_ensemble(ensemble, reps=2, warmup=1)
+        outs = rt.execute_ensemble(ensemble)
+        for k, (out, ref) in enumerate(zip(outs, refs)):
+            err = float(np.abs(out - ref).max())
+            assert err < 1e-5, (backend, k, err)
+        print(f"  {backend:12s} {sample.wall_time * 1e3:8.1f}ms "
+              f"({stats.dispatches} dispatches, K={len(ensemble)} graphs "
+              f"concurrent)")
+    print("Per-member states match single-graph fused on every backend "
           "(asserted).")
 
 

@@ -1,0 +1,39 @@
+"""Version-compat shims for the jax API surface this repo uses.
+
+The code targets current jax but must also run on 0.4.x (this container
+pins jax 0.4.37). Differences papered over here:
+
+  * ``jax.shard_map`` is ``jax.experimental.shard_map.shard_map`` on 0.4.x.
+  * ``jax.lax.pcast`` (varying-manual-axes re-marking) does not exist on
+    0.4.x — there is no VMA type system there, so identity is correct.
+  * ``jax.sharding.AxisType`` / ``jax.make_mesh(..., axis_types=...)`` are
+    handled in ``repro.launch.mesh`` (the only place meshes are built with
+    explicit axis types).
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+    def shard_map(f, **kwargs):
+        # newer jax renamed check_rep -> check_vma (the VMA type system);
+        # translate so callers can uniformly pass check_vma.
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _experimental_shard_map(f, **kwargs)
+
+
+def pcast_varying(x, axis_name):
+    """Re-mark a shard-invariant value as varying over ``axis_name``.
+
+    Newer jax's shard_map tracks varying-manual-axes types, so e.g. psum
+    outputs must be pcast back to "varying" before joining a scan carry.
+    Old jax has no VMA typing and needs nothing.
+    """
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, axis_name, to="varying")
+    return x

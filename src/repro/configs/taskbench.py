@@ -21,6 +21,9 @@ class TaskBenchConfig:
     grains: Tuple[int, ...] = (1, 4, 16, 64, 256, 1024, 4096, 16384)
     reps: int = 5
     runtimes: Tuple[str, ...] = ("fused", "serialized", "bsp", "bsp_scan", "overlap")
+    #: K values for concurrent multi-graph ensembles (Task Bench `-and`,
+    #: paper §6.2): K independent graphs per run, each width = devices x od.
+    ensemble_sizes: Tuple[int, ...] = (1, 2, 4, 8)
 
 
 # The paper's protocol (1000 steps, 5 reps) — heavyweight on 1 CPU core.
@@ -35,6 +38,20 @@ QUICK = TaskBenchConfig(
     grains=(1, 16, 256, 4096, 65536),
     reps=3,
     runtimes=("fused", "serialized", "bsp", "bsp_scan", "overlap"),
+    ensemble_sizes=(1, 2, 4),
 )
 
-PRESETS = {c.name: c for c in (PAPER, QUICK)}
+# Latency-hiding sweep (benchmarks/fig4_latency_hiding.py): smallest grains
+# so per-step overhead is NOT negligible, enough steps that per-dispatch cost
+# dominates timing noise, K = 1..8 concurrent graphs, overlap-vs-bsp.
+FIG4 = TaskBenchConfig(
+    name="fig4",
+    steps=100,
+    overdecomposition=(8,),
+    grains=(1, 8, 64),
+    reps=5,
+    runtimes=("overlap", "bsp", "bsp_scan"),
+    ensemble_sizes=(1, 2, 4, 8),
+)
+
+PRESETS = {c.name: c for c in (PAPER, QUICK, FIG4)}

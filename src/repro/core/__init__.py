@@ -2,17 +2,20 @@
 
 Public API:
     TaskGraph, KernelSpec           workload definition
+    GraphEnsemble                   K concurrent graphs (Task Bench `-and`)
     PATTERNS                        dependence pattern names
     get_runtime, available_runtimes execution backends (the systems under test)
     compute_metg, GrainSample       the METG metric
+    combine_grain_samples           ensemble-aggregate samples for METG
     OverheadProfiler                the methodology applied to production loops
 """
-from repro.core.graph import TaskGraph
+from repro.core.graph import GraphEnsemble, TaskGraph
 from repro.core.instrumentation import OverheadProfiler, measure_dispatch_overhead
 from repro.core.metg import (
     DEFAULT_THRESHOLD,
     GrainSample,
     MetgResult,
+    combine_grain_samples,
     compute_metg,
     default_grain_schedule,
     efficiency_curve,
@@ -29,7 +32,9 @@ from repro.core.runtimes import overlap as _overlap  # noqa: F401
 
 __all__ = [
     "TaskGraph",
+    "GraphEnsemble",
     "KernelSpec",
+    "combine_grain_samples",
     "PATTERNS",
     "Runtime",
     "get_runtime",

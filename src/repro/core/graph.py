@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import cached_property
-from typing import Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 
@@ -151,3 +151,111 @@ class TaskGraph:
             f"@{self.kernel.iterations}it, deps<= {self.max_deps}, "
             f"period={self.period})"
         )
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphEnsemble:
+    """K independent task graphs executed concurrently (Task Bench ``-and``).
+
+    This is the paper's §6.2 latency-hiding workload: give each core more
+    than one graph's worth of tasks so the runtime can execute a ready task
+    from graph A while graph B's messages are in flight. Members may differ
+    in pattern, grain, payload, and width; they share ``steps`` so the
+    interleaved backends can drive all members from ONE timestep loop (the
+    lockstep composition Task Bench itself uses for ``-and``).
+
+    There is no dataflow between members — every runtime backend must
+    produce, for each member, exactly the final state that running that
+    member alone under ``fused`` would produce. Backends differ only in how
+    much scheduling freedom they grant across members:
+
+      fused / bsp_scan / overlap   all K graphs inside one jitted timestep
+                                   loop: XLA's latency-hiding scheduler may
+                                   interleave members freely (AMT analogue).
+      bsp / serialized             round-robin host dispatch per step (per
+                                   task): one program per superstep/task, so
+                                   the compiler can never overlap members —
+                                   the BSP analogue.
+    """
+
+    members: Tuple[TaskGraph, ...]
+
+    def __init__(self, members: Sequence[TaskGraph]):
+        object.__setattr__(self, "members", tuple(members))
+        if not self.members:
+            raise ValueError("ensemble needs at least one member graph")
+        steps = {g.steps for g in self.members}
+        if len(steps) > 1:
+            raise ValueError(
+                f"ensemble members must share steps for lockstep execution; "
+                f"got {sorted(steps)}"
+            )
+
+    def __len__(self) -> int:
+        return len(self.members)
+
+    def __iter__(self):
+        return iter(self.members)
+
+    @property
+    def steps(self) -> int:
+        return self.members[0].steps
+
+    @property
+    def num_tasks(self) -> int:
+        return sum(g.num_tasks for g in self.members)
+
+    def total_flops(self) -> int:
+        return sum(g.total_flops() for g in self.members)
+
+    @cached_property
+    def stackable(self) -> bool:
+        """Whether members can share one (K, W, payload) state tensor.
+
+        True when every member has the same width and payload; the stacked
+        layout lets the fused backend drive all members through ONE
+        vmapped gather/combine per timestep (maximal interleaving freedom).
+        """
+        return (
+            len({g.width for g in self.members}) == 1
+            and len({g.payload for g in self.members}) == 1
+        )
+
+    def dependency_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Member dep arrays padded to a common (K, Pmax, W, Dmax) shape.
+
+        Only defined for ``stackable`` ensembles (uniform width). Each
+        member's (period, W, max_deps) arrays are tiled cyclically along the
+        period axis up to Pmax = max member period, so slice
+        ``idx[k, (t - 1) % Pmax]`` is correct for every member whose period
+        divides Pmax, and ``(t - 1) % periods[k]`` indexing stays correct
+        otherwise (consumers index per member with ``periods``).
+
+        Returns:
+          idx:     int32 (K, Pmax, W, Dmax)
+          mask:    float32 (K, Pmax, W, Dmax)
+          periods: int32 (K,) — each member's true period.
+        """
+        if not self.stackable:
+            raise ValueError(
+                "dependency_arrays requires a stackable ensemble "
+                "(uniform width/payload)"
+            )
+        K = len(self.members)
+        W = self.members[0].width
+        Pmax = max(g.period for g in self.members)
+        Dmax = max(g.max_deps for g in self.members)
+        idx = np.zeros((K, Pmax, W, Dmax), dtype=np.int32)
+        mask = np.zeros((K, Pmax, W, Dmax), dtype=np.float32)
+        periods = np.array([g.period for g in self.members], dtype=np.int32)
+        for k, g in enumerate(self.members):
+            gi, gm = g.dependency_arrays()  # (period, W, D_k)
+            P, _, D = gi.shape
+            for s in range(Pmax):
+                idx[k, s, :, :D] = gi[s % P]
+                mask[k, s, :, :D] = gm[s % P]
+        return idx, mask, periods
+
+    def describe(self) -> str:
+        inner = "; ".join(g.describe() for g in self.members)
+        return f"GraphEnsemble(K={len(self.members)}, T={self.steps}: {inner})"

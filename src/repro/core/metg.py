@@ -47,6 +47,37 @@ class GrainSample:
         return self.wall_time * self.cores / self.num_tasks * 1e6
 
 
+def combine_grain_samples(
+    samples: Sequence[GrainSample], wall_time: Optional[float] = None
+) -> GrainSample:
+    """Aggregate per-member samples of one concurrently executed ensemble.
+
+    The members of a GraphEnsemble run inside a single measured execution,
+    so the aggregate keeps ONE wall time (by default the max across inputs;
+    pass ``wall_time`` when the ensemble wall was measured directly) while
+    FLOPs and task counts sum. ``iterations`` becomes the task-weighted mean
+    grain, so the aggregate lands at the ensemble's *average task
+    granularity* — the x-axis Task Bench uses, which is well-defined even
+    for mixed-grain ensembles. ``cores`` must agree across members (they
+    share the device set).
+    """
+    if not samples:
+        raise ValueError("cannot combine an empty sample list")
+    cores = {s.cores for s in samples}
+    if len(cores) > 1:
+        raise ValueError(f"members ran on different core counts: {sorted(cores)}")
+    tasks = sum(s.num_tasks for s in samples)
+    mean_iters = sum(s.iterations * s.num_tasks for s in samples) / tasks
+    return GrainSample(
+        iterations=int(round(mean_iters)),
+        wall_time=wall_time if wall_time is not None
+        else max(s.wall_time for s in samples),
+        total_flops=sum(s.total_flops for s in samples),
+        num_tasks=tasks,
+        cores=cores.pop(),
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class EfficiencyPoint:
     iterations: int

@@ -90,11 +90,12 @@ def max_deps(g: "TaskGraph") -> int:
     }[g.pattern]
 
 
-def _rng_for(g: "TaskGraph", t: int, p: int) -> np.random.Generator:
-    # Stable per-(graph, t%period, p) stream; period for random_nearest is 1,
-    # i.e. the random neighborhood is fixed across timesteps (matches Task
-    # Bench's use of a fixed random graph rather than fresh randomness each
-    # step, which would defeat caching in real runtimes too).
+def _rng_for(g: "TaskGraph", p: int) -> np.random.Generator:
+    # Stable per-(graph, point) stream: the random_nearest neighborhood is
+    # fixed across timesteps (matches Task Bench's use of a fixed random
+    # graph rather than fresh randomness each step, which would defeat
+    # caching in real runtimes too). Timestep-independence is why the
+    # pattern's period is 1.
     return np.random.default_rng((g.seed * 1_000_003 + p) & 0x7FFFFFFF)
 
 
@@ -129,7 +130,7 @@ def dependencies(g: "TaskGraph", t: int, p: int) -> Tuple[int, ...]:
         stride = max(1, W // g.fanout)
         return tuple(sorted({(p + i * stride + (t - 1)) % W for i in range(g.fanout)}))
     if pat == "random_nearest":
-        rng = _rng_for(g, t, p)
+        rng = _rng_for(g, p)
         window = [(p + d) % W for d in range(-g.radius, g.radius + 1)]
         keep = rng.random(len(window)) < 0.5
         keep[g.radius] = True  # always keep self so graphs stay connected

@@ -23,8 +23,8 @@ from typing import Any, Callable, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
-from repro.core.graph import TaskGraph
-from repro.core.metg import GrainSample
+from repro.core.graph import GraphEnsemble, TaskGraph
+from repro.core.metg import GrainSample, combine_grain_samples
 
 
 def _fresh(x: jax.Array) -> jax.Array:
@@ -58,10 +58,23 @@ class Runtime(abc.ABC):
         """Whether this backend can run the graph (and why not, if not)."""
         return True, ""
 
+    def supports_ensemble(self, ensemble: GraphEnsemble) -> Tuple[bool, str]:
+        """Whether this backend can run every member of the ensemble."""
+        for i, g in enumerate(ensemble.members):
+            ok, why = self.supports(g)
+            if not ok:
+                return False, f"member {i} ({g.describe()}): {why}"
+        return True, ""
+
     def _require_support(self, graph: TaskGraph) -> None:
         ok, why = self.supports(graph)
         if not ok:
             raise ValueError(f"runtime {self.name} cannot run {graph.describe()}: {why}")
+
+    def _require_ensemble_support(self, ensemble: GraphEnsemble) -> None:
+        ok, why = self.supports_ensemble(ensemble)
+        if not ok:
+            raise ValueError(f"runtime {self.name} cannot run ensemble: {why}")
 
     # -- execution ---------------------------------------------------------
 
@@ -69,9 +82,35 @@ class Runtime(abc.ABC):
     def build(self, graph: TaskGraph) -> Callable[[jax.Array], Any]:
         """Compile an executor: initial (W, payload) state -> final state."""
 
+    @abc.abstractmethod
+    def build_ensemble(
+        self, ensemble: GraphEnsemble
+    ) -> Callable[[Tuple[jax.Array, ...]], Tuple[jax.Array, ...]]:
+        """Compile a concurrent executor for K independent member graphs.
+
+        Takes / returns one (W_k, payload_k) state per member. Member
+        dataflows never mix; the backend only decides how much cross-member
+        scheduling freedom exists (see GraphEnsemble docstring).
+        """
+
     def dispatches_per_run(self, graph: TaskGraph) -> int:
         """Host->device dispatch count for one execution (overhead model)."""
         return 1
+
+    def ensemble_dispatches_per_run(self, ensemble: GraphEnsemble) -> int:
+        """Dispatch count for one ensemble execution.
+
+        Round-robin backends pay every member's dispatches; single-program
+        backends override this to 1.
+        """
+        return sum(self.dispatches_per_run(g) for g in ensemble.members)
+
+    def _ensemble_inits(self, ensemble: GraphEnsemble) -> Tuple[jax.Array, ...]:
+        from repro.core.task_kernels import initial_state
+
+        return tuple(
+            initial_state(g.width, g.payload, g.seed) for g in ensemble.members
+        )
 
     def execute(self, graph: TaskGraph, init: Optional[jax.Array] = None) -> np.ndarray:
         """Run the graph once, returning the final (width, payload) state."""
@@ -83,6 +122,25 @@ class Runtime(abc.ABC):
         fn = self.build(graph)
         out = fn(_fresh(init))
         return np.asarray(jax.block_until_ready(out))
+
+    def execute_ensemble(
+        self,
+        ensemble: GraphEnsemble,
+        inits: Optional[Sequence[jax.Array]] = None,
+    ) -> Tuple[np.ndarray, ...]:
+        """Run all members concurrently; returns each member's final state."""
+        self._require_ensemble_support(ensemble)
+        if inits is None:
+            inits = self._ensemble_inits(ensemble)
+        elif len(inits) != len(ensemble.members):
+            raise ValueError(
+                f"got {len(inits)} initial states for "
+                f"{len(ensemble.members)} ensemble members"
+            )
+        fn = self.build_ensemble(ensemble)
+        outs = fn(tuple(_fresh(x) for x in inits))
+        outs = jax.block_until_ready(outs)
+        return tuple(np.asarray(o) for o in outs)
 
     # -- measurement -------------------------------------------------------
 
@@ -128,6 +186,52 @@ class Runtime(abc.ABC):
             cores=len(self.devices),
         )
         return sample, stats
+
+    def measure_ensemble(
+        self,
+        ensemble: GraphEnsemble,
+        *,
+        reps: int = 3,
+        warmup: int = 1,
+    ) -> Tuple[GrainSample, TimingStats]:
+        """Timed concurrent execution of all members -> one aggregate sample.
+
+        The aggregate GrainSample (see metg.combine_grain_samples) sums
+        FLOPs/tasks across members against the single measured ensemble
+        wall, so `compute_metg` works unchanged on ensemble sweeps.
+        """
+        self._require_ensemble_support(ensemble)
+        inits = tuple(
+            jax.block_until_ready(jax.device_put(x))
+            for x in self._ensemble_inits(ensemble)
+        )
+        fn = self.build_ensemble(ensemble)
+        for _ in range(max(warmup, 1)):
+            jax.block_until_ready(fn(tuple(_fresh(x) for x in inits)))
+        walls: List[float] = []
+        for _ in range(reps):
+            args = jax.block_until_ready(tuple(_fresh(x) for x in inits))
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(args))
+            walls.append(time.perf_counter() - t0)
+
+        stats = TimingStats(
+            best=min(walls),
+            mean=sum(walls) / len(walls),
+            walls=tuple(walls),
+            dispatches=self.ensemble_dispatches_per_run(ensemble),
+        )
+        members = [
+            GrainSample(
+                iterations=g.kernel.iterations,
+                wall_time=stats.best,
+                total_flops=float(g.total_flops()),
+                num_tasks=g.num_tasks,
+                cores=len(self.devices),
+            )
+            for g in ensemble.members
+        ]
+        return combine_grain_samples(members, wall_time=stats.best), stats
 
 
 # ----------------------------------------------------------------- registry

@@ -27,8 +27,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import pcast_varying, shard_map
 from repro.core import patterns as _patterns
-from repro.core.graph import TaskGraph
+from repro.core.graph import GraphEnsemble, TaskGraph
 from repro.core.runtimes import _halo
 from repro.core.runtimes.base import Runtime, register
 from repro.core.task_kernels import apply_kernel
@@ -127,7 +128,7 @@ class _BspBase(Runtime):
                 x = jnp.broadcast_to(mean[None, :], local.shape)
                 # psum output is shard-invariant; re-mark as varying so scan
                 # carries keep a consistent VMA type under shard_map.
-                x = jax.lax.pcast(x, AXIS, to="varying")
+                x = pcast_varying(x, AXIS)
                 return apply_kernel(x, spec, use_pallas=use_pallas)
 
             return step
@@ -155,21 +156,56 @@ class _BspBase(Runtime):
 
         raise ValueError(graph.pattern)
 
+    def _make_member_step(self, graph: TaskGraph, use_pallas: bool) -> Callable:
+        """Uniform step(local, t) for one graph, period branching included.
+
+        This is the building block both the fused-loop ensembles (bsp_scan /
+        overlap carry a tuple of these in one scan) and the single-graph
+        scan body share.
+        """
+        pat = graph.pattern
+        if pat in _patterns.HALO_PATTERNS or pat == "random_nearest":
+            body = self._make_halo_step(graph, use_pallas)
+            return lambda local, t: body(local)
+        if pat in _patterns.BUTTERFLY_PATTERNS:
+            bodies = self._make_butterfly_steps(graph, use_pallas)
+            if len(bodies) == 1:
+                return lambda local, t: bodies[0](local)
+            period = graph.period
+
+            def step(local, t):
+                slot = jax.lax.rem(t - 1, period)
+                return jax.lax.switch(
+                    slot, [lambda s, b=b: b(s) for b in bodies], local
+                )
+
+            return step
+        return self._make_global_step(graph, use_pallas)
+
     def _shard_map(self, mesh: Mesh, fn: Callable, n_in: int = 1) -> Callable:
-        return jax.shard_map(
+        return shard_map(
             fn,
             mesh=mesh,
             in_specs=tuple([P(AXIS)] * n_in) if n_in > 1 else P(AXIS),
             out_specs=P(AXIS),
         )
 
+    def _shard_map_tuple(self, mesh: Mesh, fn: Callable, k: int) -> Callable:
+        """shard_map over a function taking/returning a K-tuple of states."""
+        return shard_map(
+            fn,
+            mesh=mesh,
+            in_specs=(tuple([P(AXIS)] * k),),
+            out_specs=tuple([P(AXIS)] * k),
+        )
+
 
 @register
 class BspRuntime(_BspBase):
     name = "bsp"
-    loop_in_jit = False
 
-    def build(self, graph: TaskGraph) -> Callable[[jax.Array], jax.Array]:
+    def _build_stepper(self, graph: TaskGraph):
+        """(kernel_only, pick, sharding): the per-dispatch pieces of one graph."""
         use_pallas = bool(self.options.get("use_pallas", False))
         donate = bool(self.options.get("donate", True))
         mesh = self._mesh()
@@ -196,7 +232,7 @@ class BspRuntime(_BspBase):
         else:  # global patterns take (local, t): t rides in replicated
             body = self._make_global_step(graph, use_pallas)
             stepped = jax.jit(
-                jax.shard_map(
+                shard_map(
                     body, mesh=mesh, in_specs=(P(AXIS), P()), out_specs=P(AXIS)
                 ),
                 donate_argnums=(0,) if donate else (),
@@ -205,16 +241,37 @@ class BspRuntime(_BspBase):
             def pick(t):
                 return lambda s: stepped(s, jnp.int32(t))
 
-        sharding = NamedSharding(mesh, P(AXIS))
+        return kernel_only, pick, NamedSharding(mesh, P(AXIS))
 
-        if self.loop_in_jit:
-            raise AssertionError("use BspScanRuntime")
+    def build(self, graph: TaskGraph) -> Callable[[jax.Array], jax.Array]:
+        kernel_only, pick, sharding = self._build_stepper(graph)
 
         def run(init):
             state = kernel_only(jax.device_put(init, sharding))
             for t in range(1, graph.steps):
                 state = pick(t)(state)
             return state
+
+        return run
+
+    def build_ensemble(self, ensemble: GraphEnsemble) -> Callable:
+        """Round-robin host dispatch: per timestep, one dispatch per member,
+        in member order. Models an MPI-style runtime: each member superstep
+        is its own program, so no compiler may interleave one member's
+        compute with another's exchange, and every superstep pays its own
+        dispatch. (jax's async device queue may still pipeline adjacent
+        dispatches; the denied freedom is compiler-level scheduling, which
+        is what separates this rung from bsp_scan/overlap.)"""
+        parts = [self._build_stepper(g) for g in ensemble.members]
+
+        def run(inits):
+            states = [
+                ko(jax.device_put(x, sh))
+                for (ko, _, sh), x in zip(parts, inits)
+            ]
+            for t in range(1, ensemble.steps):
+                states = [pick(t)(s) for (_, pick, _), s in zip(parts, states)]
+            return tuple(states)
 
         return run
 
@@ -233,18 +290,7 @@ class BspScanRuntime(_BspBase):
         unroll = int(self.options.get("unroll", 1))
         mesh = self._mesh()
         spec = graph.kernel
-        pat = graph.pattern
-        period = graph.period
-
-        if pat in _patterns.HALO_PATTERNS or pat == "random_nearest":
-            body = self._make_halo_step(graph, use_pallas)
-            branches = [lambda local, t, b=body: b(local)]
-        elif pat in _patterns.BUTTERFLY_PATTERNS:
-            bodies = self._make_butterfly_steps(graph, use_pallas)
-            branches = [lambda local, t, b=b: b(local) for b in bodies]
-        else:
-            gbody = self._make_global_step(graph, use_pallas)
-            branches = [gbody]
+        step = self._make_member_step(graph, use_pallas)
 
         def local_run(local):  # (B, payload) per device
             local = apply_kernel(local, spec, use_pallas=use_pallas)
@@ -252,15 +298,7 @@ class BspScanRuntime(_BspBase):
                 return local
 
             def scan_body(state, t):
-                if len(branches) == 1:
-                    new = branches[0](state, t)
-                else:
-                    slot = jax.lax.rem(t - 1, period)
-                    new = jax.lax.switch(
-                        slot, [lambda s, tt=t, br=br: br(s, tt) for br in branches],
-                        state,
-                    )
-                return new, None
+                return step(state, t), None
 
             local, _ = jax.lax.scan(
                 scan_body, local, jnp.arange(1, graph.steps), unroll=unroll
@@ -271,5 +309,43 @@ class BspScanRuntime(_BspBase):
         sharding = NamedSharding(mesh, P(AXIS))
         return lambda init: fn(jax.device_put(init, sharding))
 
+    def build_ensemble(self, ensemble: GraphEnsemble) -> Callable:
+        """All members advance inside ONE jitted scan (tuple carry): a
+        single host dispatch runs the whole ensemble, and XLA may interleave
+        member supersteps — the amortized-dispatch MPI bound with full
+        cross-member freedom."""
+        use_pallas = bool(self.options.get("use_pallas", False))
+        unroll = int(self.options.get("unroll", 1))
+        mesh = self._mesh()
+        members = ensemble.members
+        specs = [g.kernel for g in members]
+        member_steps = [self._make_member_step(g, use_pallas) for g in members]
+
+        def local_run(locals_):  # tuple of (B_k, payload_k) per device
+            locals_ = tuple(
+                apply_kernel(x, sp, use_pallas=use_pallas)
+                for x, sp in zip(locals_, specs)
+            )
+            if ensemble.steps == 1:
+                return locals_
+
+            def scan_body(states, t):
+                return (
+                    tuple(st(s, t) for st, s in zip(member_steps, states)),
+                    None,
+                )
+
+            locals_, _ = jax.lax.scan(
+                scan_body, locals_, jnp.arange(1, ensemble.steps), unroll=unroll
+            )
+            return locals_
+
+        fn = jax.jit(self._shard_map_tuple(mesh, local_run, len(members)))
+        sharding = NamedSharding(mesh, P(AXIS))
+        return lambda inits: fn(tuple(jax.device_put(x, sharding) for x in inits))
+
     def dispatches_per_run(self, graph: TaskGraph) -> int:
+        return 1
+
+    def ensemble_dispatches_per_run(self, ensemble: GraphEnsemble) -> int:
         return 1

@@ -15,13 +15,16 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import TaskGraph
+from repro.core.graph import GraphEnsemble, TaskGraph
 from repro.core.runtimes.base import Runtime, register
 from repro.core.task_kernels import (
     apply_kernel,
     combine_all_to_all,
     combine_dependencies,
 )
+
+#: refuse dependency-array materializations beyond this many cells
+_MAX_DEP_CELLS = 64 << 20
 
 
 @register
@@ -33,28 +36,33 @@ class FusedRuntime(Runtime):
             return True, ""
         # (period, W, max_deps) index arrays; refuse absurd materializations.
         cells = graph.period * graph.width * graph.max_deps
-        if cells > 64 << 20:
+        if cells > _MAX_DEP_CELLS:
             return False, f"dependency array too large ({cells} cells)"
         return True, ""
+
+    @staticmethod
+    def _make_combine(graph: TaskGraph) -> Callable:
+        """combine(state, t) -> per-point kernel inputs for timestep t."""
+        if graph.pattern == "all_to_all":
+            return lambda state, t: combine_all_to_all(state)
+        idx_np, mask_np = graph.dependency_arrays()
+        idx = jnp.asarray(idx_np)
+        mask = jnp.asarray(mask_np)
+        period = graph.period
+
+        def combine(state, t):
+            s = jax.lax.rem(t - 1, period)
+            i = jax.lax.dynamic_index_in_dim(idx, s, 0, keepdims=False)
+            m = jax.lax.dynamic_index_in_dim(mask, s, 0, keepdims=False)
+            return combine_dependencies(state, i, m)
+
+        return combine
 
     def build(self, graph: TaskGraph) -> Callable[[jax.Array], jax.Array]:
         spec = graph.kernel
         use_pallas = bool(self.options.get("use_pallas", False))
         unroll = int(self.options.get("unroll", 1))
-
-        if graph.pattern == "all_to_all":
-            combine = lambda state, t: combine_all_to_all(state)
-        else:
-            idx_np, mask_np = graph.dependency_arrays()
-            idx = jnp.asarray(idx_np)
-            mask = jnp.asarray(mask_np)
-            period = graph.period
-
-            def combine(state, t):
-                s = jax.lax.rem(t - 1, period)
-                i = jax.lax.dynamic_index_in_dim(idx, s, 0, keepdims=False)
-                m = jax.lax.dynamic_index_in_dim(mask, s, 0, keepdims=False)
-                return combine_dependencies(state, i, m)
+        combine = self._make_combine(graph)
 
         def step(state, t):
             x = combine(state, t)
@@ -72,5 +80,95 @@ class FusedRuntime(Runtime):
 
         return run
 
+    # ------------------------------------------------------------- ensembles
+
+    def build_ensemble(self, ensemble: GraphEnsemble) -> Callable:
+        """All K member graphs inside ONE jitted timestep loop.
+
+        Stackable ensembles (uniform width/payload) share a (K, W, payload)
+        state tensor and the padded (K, Pmax, W, Dmax) dependency arrays, so
+        each timestep is one vmapped gather/combine over all members — XLA
+        sees a single dataflow and interleaves members at will. Heterogeneous
+        ensembles fall back to a tuple-of-states scan carry with per-member
+        combine closures; still one program, same scheduling freedom.
+        """
+        use_pallas = bool(self.options.get("use_pallas", False))
+        unroll = int(self.options.get("unroll", 1))
+        members = ensemble.members
+        specs = [g.kernel for g in members]
+        steps = ensemble.steps
+
+        stacked = (
+            ensemble.stackable
+            and len(members)
+            * max(g.period for g in members)
+            * members[0].width
+            * max(g.max_deps for g in members)
+            <= _MAX_DEP_CELLS
+        )
+
+        if stacked:
+            idx_np, mask_np, periods_np = ensemble.dependency_arrays()
+            idx = jnp.asarray(idx_np)
+            mask = jnp.asarray(mask_np)
+            periods = jnp.asarray(periods_np)
+            take = jax.vmap(
+                lambda a, s: jax.lax.dynamic_index_in_dim(a, s, 0, keepdims=False)
+            )
+
+            def apply_all(x):  # (K, W, payload)
+                if len(set(specs)) == 1:
+                    return apply_kernel(x, specs[0], use_pallas=use_pallas)
+                return jnp.stack(
+                    [
+                        apply_kernel(x[k], sp, use_pallas=use_pallas)
+                        for k, sp in enumerate(specs)
+                    ]
+                )
+
+            def step(state, t):
+                s = jax.lax.rem(t - 1, periods)  # (K,) per-member slot
+                x = jax.vmap(combine_dependencies)(state, take(idx, s), take(mask, s))
+                return apply_all(x), None
+
+            @jax.jit
+            def run(inits):
+                state = apply_all(jnp.stack(inits))
+                if steps > 1:
+                    state, _ = jax.lax.scan(
+                        step, state, jnp.arange(1, steps), unroll=unroll
+                    )
+                return tuple(state[k] for k in range(len(members)))
+
+            return run
+
+        combines = [self._make_combine(g) for g in members]
+
+        def step(states, t):
+            return (
+                tuple(
+                    apply_kernel(c(s, t), sp, use_pallas=use_pallas)
+                    for s, c, sp in zip(states, combines, specs)
+                ),
+                None,
+            )
+
+        @jax.jit
+        def run(inits):
+            states = tuple(
+                apply_kernel(x, sp, use_pallas=use_pallas)
+                for x, sp in zip(inits, specs)
+            )
+            if steps > 1:
+                states, _ = jax.lax.scan(
+                    step, states, jnp.arange(1, steps), unroll=unroll
+                )
+            return states
+
+        return run
+
     def dispatches_per_run(self, graph: TaskGraph) -> int:
+        return 1
+
+    def ensemble_dispatches_per_run(self, ensemble: GraphEnsemble) -> int:
         return 1

@@ -23,27 +23,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import TaskGraph
+from repro.core.graph import GraphEnsemble, TaskGraph
 from repro.core.runtimes.base import Runtime, register
 from repro.core.task_kernels import apply_kernel
 
 
-@register
-class SerializedRuntime(Runtime):
-    name = "serialized"
+class _TaskDispatcher:
+    """Per-graph dispatch machinery: jitted task bodies + host dep lists.
 
-    MAX_TASKS = 200_000  # refuse graphs whose python loop would take forever
+    The task body jit is compiled ONCE per (deps, payload) shape and reused
+    by all T*W tasks, so what we time is dispatch, not compilation. One
+    dispatcher per ensemble member keeps distinct kernels/payloads from
+    sharing (and thus hiding) each other's compile cache.
+    """
 
-    def supports(self, graph: TaskGraph):
-        if graph.num_tasks > self.MAX_TASKS:
-            return False, f"too many tasks for per-task dispatch ({graph.num_tasks})"
-        if graph.pattern == "all_to_all" and graph.width > 1024:
-            return False, "all_to_all fan-in too wide for per-task gather"
-        return True, ""
-
-    def build(self, graph: TaskGraph) -> Callable[[jax.Array], jax.Array]:
+    def __init__(self, graph: TaskGraph, use_pallas: bool):
         spec = graph.kernel
-        use_pallas = bool(self.options.get("use_pallas", False))
 
         @partial(jax.jit, static_argnums=())
         def task_no_deps(x):  # (payload,)
@@ -54,6 +49,10 @@ class SerializedRuntime(Runtime):
             w = mask[:, None]
             combined = (deps * w).sum(0) / jnp.maximum(mask.sum(), 1.0)
             return apply_kernel(combined, spec, use_pallas=use_pallas)
+
+        self.graph = graph
+        self.task_no_deps = task_no_deps
+        self.task_with_deps = task_with_deps
 
         # Host-side dependency lists, precomputed (the "graph build" phase —
         # Task Bench likewise excludes graph construction from timing).
@@ -69,24 +68,78 @@ class SerializedRuntime(Runtime):
                     pad_masks[n] = jnp.asarray(
                         np.concatenate([np.ones(n), np.zeros(D - n)]).astype(np.float32)
                     )
+        self.dep_ids = dep_ids
+        self.pad = D
+        self.pad_masks = pad_masks
+
+    def initial(self, init: jax.Array) -> List[jax.Array]:
+        return [self.task_no_deps(init[p]) for p in range(self.graph.width)]
+
+    def advance(self, state: List[jax.Array], t: int) -> List[jax.Array]:
+        """Dispatch every point of timestep t (one host dispatch per task)."""
+        zero = jnp.zeros_like(state[0])
+        nxt = []
+        for p in range(self.graph.width):
+            deps = self.dep_ids[t][p]
+            if not deps:
+                nxt.append(self.task_no_deps(state[p]))
+                continue
+            stack = jnp.stack(
+                [state[d] for d in deps] + [zero] * (self.pad - len(deps))
+            )
+            nxt.append(self.task_with_deps(stack, self.pad_masks[len(deps)]))
+        return nxt
+
+
+@register
+class SerializedRuntime(Runtime):
+    name = "serialized"
+
+    MAX_TASKS = 200_000  # refuse graphs whose python loop would take forever
+
+    def supports(self, graph: TaskGraph):
+        if graph.num_tasks > self.MAX_TASKS:
+            return False, f"too many tasks for per-task dispatch ({graph.num_tasks})"
+        if graph.pattern == "all_to_all" and graph.width > 1024:
+            return False, "all_to_all fan-in too wide for per-task gather"
+        return True, ""
+
+    def supports_ensemble(self, ensemble: GraphEnsemble):
+        ok, why = super().supports_ensemble(ensemble)
+        if not ok:
+            return ok, why
+        if ensemble.num_tasks > self.MAX_TASKS:
+            return False, (
+                f"too many total tasks for per-task dispatch ({ensemble.num_tasks})"
+            )
+        return True, ""
+
+    def build(self, graph: TaskGraph) -> Callable[[jax.Array], jax.Array]:
+        use_pallas = bool(self.options.get("use_pallas", False))
+        disp = _TaskDispatcher(graph, use_pallas)
 
         def run(init):
-            state = [init[p] for p in range(graph.width)]
-            state = [task_no_deps(x) for x in state]  # t = 0
-            zero = jnp.zeros_like(state[0])
+            state = disp.initial(init)
             for t in range(1, graph.steps):
-                nxt = []
-                for p in range(graph.width):
-                    deps = dep_ids[t][p]
-                    if not deps:
-                        nxt.append(task_no_deps(state[p]))
-                        continue
-                    stack = jnp.stack(
-                        [state[d] for d in deps] + [zero] * (D - len(deps))
-                    )
-                    nxt.append(task_with_deps(stack, pad_masks[len(deps)]))
-                state = nxt
+                state = disp.advance(state, t)
             return jnp.stack(state)
+
+        return run
+
+    def build_ensemble(self, ensemble: GraphEnsemble) -> Callable:
+        """Round-robin per timestep: member 0's tasks are dispatched, then
+        member 1's, ... — the minimal-scheduling-freedom rung. Every task is
+        still its own host dispatch and no program spans two tasks, so the
+        compiler can never overlap members; only jax's async dispatch queue
+        may pipeline adjacent task launches."""
+        use_pallas = bool(self.options.get("use_pallas", False))
+        dispatchers = [_TaskDispatcher(g, use_pallas) for g in ensemble.members]
+
+        def run(inits):
+            states = [d.initial(x) for d, x in zip(dispatchers, inits)]
+            for t in range(1, ensemble.steps):
+                states = [d.advance(s, t) for d, s in zip(dispatchers, states)]
+            return tuple(jnp.stack(s) for s in states)
 
         return run
 

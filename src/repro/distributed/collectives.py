@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.kernels import ops
 
 AxisRef = Union[str, Tuple[str, ...]]
@@ -87,7 +88,7 @@ def sequence_parallel_decode_attention(
         # out_spec (every shard returns the same combined attention output).
         return (num / den[..., None]).astype(qx.dtype)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(q_spec, cache_spec, cache_spec, len_spec),

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def pipeline_forward(
     stage_fn: Callable[[Any, jax.Array], jax.Array],
@@ -72,7 +74,7 @@ def pipeline_forward(
         )
         return outs
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(P(axis), P()),  # params stage-sharded; stream replicated

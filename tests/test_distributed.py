@@ -181,6 +181,7 @@ def test_grad_compression_int8_cross_pod():
     run_sub("""
         import jax, numpy as np, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.optim.grad_compression import cross_pod_mean_int8
         from repro.launch.mesh import make_host_mesh
 
@@ -193,7 +194,7 @@ def test_grad_compression_int8_cross_pod():
             out, new_ef = cross_pod_mean_int8(gs[0], efs[0], k, axis="pod")
             return out[None], new_ef[None]
 
-        fn = jax.jit(jax.shard_map(
+        fn = jax.jit(shard_map(
             local, mesh=mesh,
             in_specs=(P("pod"), P("pod"), P()), out_specs=(P("pod"), P("pod")),
         ))

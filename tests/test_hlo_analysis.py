@@ -131,8 +131,8 @@ def test_live_compiled_program_census():
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.launch.hlo_analysis import analyze_hlo
-        mesh = jax.make_mesh((8,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh((8,), ("d",))
         x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
         def f(v):
             def body(c, _):

@@ -7,6 +7,7 @@ from hypothesis import strategies as st
 
 from repro.core.metg import (
     GrainSample,
+    combine_grain_samples,
     compute_metg,
     default_grain_schedule,
     efficiency_curve,
@@ -83,6 +84,55 @@ def test_metg_first_sample_already_efficient():
 def test_empty_sweep():
     res = compute_metg([])
     assert res.metg_us is None
+
+
+# ------------------------------------------------- ensemble sample aggregation
+
+
+def test_combine_grain_samples_sums_work_keeps_wall():
+    """Members of a concurrently executed ensemble share one wall clock;
+    FLOPs and tasks sum; grain becomes the task-weighted mean."""
+    a = sample(8, wall=0.5, flops=1e9, tasks=100, cores=4)
+    b = sample(32, wall=0.4, flops=3e9, tasks=300, cores=4)
+    agg = combine_grain_samples([a, b])
+    assert agg.num_tasks == 400
+    assert agg.total_flops == pytest.approx(4e9)
+    assert agg.wall_time == 0.5  # max across members by default
+    assert agg.iterations == round((8 * 100 + 32 * 300) / 400)
+    assert agg.cores == 4
+    # explicit ensemble wall wins
+    agg2 = combine_grain_samples([a, b], wall_time=0.7)
+    assert agg2.wall_time == 0.7
+    # granularity follows from the aggregate: wall x cores / total tasks
+    assert agg2.granularity_us == pytest.approx(0.7 * 4 / 400 * 1e6)
+
+
+def test_combine_grain_samples_validates():
+    a = sample(8, wall=0.5, flops=1e9, tasks=100, cores=4)
+    bad = sample(8, wall=0.5, flops=1e9, tasks=100, cores=8)
+    with pytest.raises(ValueError):
+        combine_grain_samples([])
+    with pytest.raises(ValueError):
+        combine_grain_samples([a, bad])
+
+
+def test_metg_on_ensemble_sweep():
+    """compute_metg works unchanged on aggregated ensemble samples, and a
+    K=2 ensemble with the same per-task overhead model lands at the same
+    METG as K=1 (METG is intensive in ensemble size too)."""
+    def ensemble_sweep(K, ovh):
+        out = []
+        for s1 in synthetic_sweep(overhead_per_task=ovh):
+            members = [s1] * K
+            agg = combine_grain_samples(
+                members, wall_time=s1.wall_time * K)  # serial-equivalent wall
+            out.append(agg)
+        return out
+
+    m1 = compute_metg(ensemble_sweep(1, 1e-5)).metg_us
+    m2 = compute_metg(ensemble_sweep(2, 1e-5)).metg_us
+    assert m1 is not None and m2 is not None
+    assert m2 == pytest.approx(m1, rel=0.05)
 
 
 def test_grain_schedule_monotone():

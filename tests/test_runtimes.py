@@ -8,7 +8,13 @@ run in test_distributed.py subprocesses.
 import numpy as np
 import pytest
 
-from repro.core import TaskGraph, KernelSpec, available_runtimes, get_runtime
+from repro.core import (
+    GraphEnsemble,
+    KernelSpec,
+    TaskGraph,
+    available_runtimes,
+    get_runtime,
+)
 from repro.core.task_kernels import (
     apply_kernel,
     combine_all_to_all,
@@ -119,6 +125,120 @@ def test_unsupported_graph_raises():
     assert not ok and "radius" in why
     with pytest.raises(ValueError):
         rt.execute(g2)
+
+
+# ---------------------------------------------------------- graph ensembles
+
+
+def mixed_ensemble(**kw):
+    """Mixed patterns, grains, and seeds; stackable (uniform width/payload)."""
+    base = dict(steps=6, width=16, payload=8, seed=0)
+    base.update(kw)
+    return GraphEnsemble([
+        TaskGraph(pattern="stencil_1d",
+                  kernel=KernelSpec("compute_bound", 8), **base),
+        TaskGraph(pattern="nearest", radius=2,
+                  kernel=KernelSpec("compute_bound", 32),
+                  **{**base, "seed": base["seed"] + 1}),
+        TaskGraph(pattern="fft",
+                  kernel=KernelSpec("compute_bound", 4),
+                  **{**base, "seed": base["seed"] + 2}),
+    ])
+
+
+@pytest.mark.parametrize("backend", ["fused", "serialized", "bsp",
+                                     "bsp_scan", "overlap"])
+def test_ensemble_members_match_fused(backend):
+    """Core invariant, ensemble edition: every backend's concurrent run must
+    reproduce, per member, the state of running that member alone."""
+    ens = mixed_ensemble()
+    rt = get_runtime(backend)
+    ok, why = rt.supports_ensemble(ens)
+    if not ok:  # overlap refuses fft — swap in a halo-only ensemble for it
+        ens = GraphEnsemble([g for g in ens
+                             if rt.supports(g)[0]])
+        assert len(ens) >= 2, why
+    outs = rt.execute_ensemble(ens)
+    for k, (g, out) in enumerate(zip(ens.members, outs)):
+        ref = get_runtime("fused").execute(g)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"{backend} member {k}")
+
+
+def test_ensemble_heterogeneous_shapes():
+    """Non-stackable members (different width/payload) run via the
+    tuple-carry fallback and still match per-member fused."""
+    ens = GraphEnsemble([
+        TaskGraph(steps=5, width=16, payload=8, pattern="stencil_1d", seed=1),
+        TaskGraph(steps=5, width=8, payload=4, pattern="all_to_all", seed=2),
+        TaskGraph(steps=5, width=32, payload=8, pattern="spread", fanout=3,
+                  seed=3),
+    ])
+    assert not ens.stackable
+    for backend in ("fused", "serialized", "bsp", "bsp_scan"):
+        outs = get_runtime(backend).execute_ensemble(ens)
+        for g, out in zip(ens.members, outs):
+            ref = get_runtime("fused").execute(g)
+            np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6,
+                                       err_msg=backend)
+
+
+def test_ensemble_validation():
+    g = TaskGraph(steps=4, width=8)
+    with pytest.raises(ValueError):
+        GraphEnsemble([])
+    with pytest.raises(ValueError):
+        GraphEnsemble([g, TaskGraph(steps=5, width=8)])  # mismatched steps
+    with pytest.raises(ValueError):
+        GraphEnsemble([g, TaskGraph(steps=4, width=4)]).dependency_arrays()
+
+
+def test_ensemble_padded_dependency_arrays():
+    ens = mixed_ensemble()
+    idx, mask, periods = ens.dependency_arrays()
+    K, Pmax, W, Dmax = idx.shape
+    assert K == 3 and W == 16
+    assert Pmax == max(g.period for g in ens.members)
+    assert Dmax == max(g.max_deps for g in ens.members)
+    assert list(periods) == [g.period for g in ens.members]
+    # padded slices must reproduce each member's own arrays exactly
+    for k, g in enumerate(ens.members):
+        gi, gm = g.dependency_arrays()
+        D = gi.shape[2]
+        for s in range(Pmax):
+            np.testing.assert_array_equal(idx[k, s, :, :D], gi[s % g.period])
+            np.testing.assert_array_equal(mask[k, s, :, :D], gm[s % g.period])
+            assert (mask[k, s, :, D:] == 0).all()
+
+
+def test_ensemble_dispatch_accounting():
+    ens = mixed_ensemble(steps=7)
+    per_member_tasks = sum(g.num_tasks for g in ens.members)
+    assert get_runtime("fused").ensemble_dispatches_per_run(ens) == 1
+    assert get_runtime("bsp_scan").ensemble_dispatches_per_run(ens) == 1
+    assert get_runtime("bsp").ensemble_dispatches_per_run(ens) == 7 * 3
+    assert (get_runtime("serialized").ensemble_dispatches_per_run(ens)
+            == per_member_tasks)
+
+
+def test_ensemble_single_member_matches_single_graph():
+    g = graph("stencil_1d")
+    ens = GraphEnsemble([g])
+    for backend in available_runtimes():
+        out = get_runtime(backend).execute_ensemble(ens)[0]
+        ref = get_runtime(backend).execute(g)
+        np.testing.assert_allclose(out, ref, rtol=1e-6, err_msg=backend)
+
+
+def test_measure_ensemble_aggregates():
+    ens = mixed_ensemble(steps=4)
+    sample, stats = get_runtime("fused").measure_ensemble(ens, reps=2,
+                                                          warmup=1)
+    assert sample.num_tasks == sum(g.num_tasks for g in ens.members)
+    assert sample.total_flops == pytest.approx(
+        sum(g.total_flops() for g in ens.members))
+    assert sample.wall_time == stats.best > 0
+    assert len(stats.walls) == 2
 
 
 # ------------------------------------------------- combine primitive units
