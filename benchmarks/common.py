@@ -14,6 +14,7 @@ reading valid (documented in EXPERIMENTS.md §Reproduction).
 """
 from __future__ import annotations
 
+import argparse
 import csv
 import dataclasses
 import json
@@ -156,6 +157,37 @@ def metg_from_rows(rows: Sequence[Dict], threshold: float = 0.5,
         for r in rows if "skip" not in r
     ]
     return compute_metg(samples, threshold=threshold, peak=peak)
+
+
+def backend_options_args(ap: argparse.ArgumentParser) -> None:
+    """Attach the shared backend-option flags to a benchmark CLI.
+
+    Every figure accepts the same two knobs so Pallas variants can be swept
+    without code edits (they flow into ``SweepSpec.options`` and from there
+    into ``get_runtime(name, **options)``):
+
+      --pallas             shorthand for use_pallas=True (per-body kernels)
+      --backend-options    JSON dict of raw runtime options, e.g.
+                           '{"combine": "onehot", "unroll": 2}'
+    """
+    ap.add_argument("--pallas", action="store_true",
+                    help="use the Pallas task-body kernels (use_pallas=True)")
+    ap.add_argument("--backend-options", default=None, metavar="JSON",
+                    help="extra runtime options as a JSON dict")
+
+
+def parse_backend_options(args: argparse.Namespace) -> Dict:
+    """Decode --backend-options and fold --pallas in: the final options dict."""
+    if getattr(args, "backend_options", None):
+        opts = json.loads(args.backend_options)
+        if not isinstance(opts, dict):
+            raise SystemExit(
+                f"--backend-options must be a JSON object, got {opts!r}")
+    else:
+        opts = {}
+    if getattr(args, "pallas", False):
+        opts["use_pallas"] = True
+    return opts
 
 
 def write_csv(name: str, header: Sequence[str], rows: Sequence[Sequence]):

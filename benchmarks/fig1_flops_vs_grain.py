@@ -1,7 +1,8 @@
 """Fig 1 (a) FLOP/s vs grain size, (b) efficiency vs task granularity.
 
 Paper setup: stencil pattern, 1 node (48 cores), 48 tasks — one task per
-core. Ours: one "node" of D forced host devices, width = D, all backends.
+core. Ours: one "node" of D forced host devices, width = D, all backends
+(including `pallas_step`, the fused-timestep megakernel floor).
 Output: artifacts/bench/fig1.csv with one row per (backend, grain).
 """
 from __future__ import annotations
@@ -10,26 +11,30 @@ import argparse
 
 from benchmarks.common import (
     SweepSpec,
+    backend_options_args,
     fmt_us,
     metg_from_rows,
+    parse_backend_options,
     run_worker,
     write_csv,
 )
 
-BACKENDS = ("fused", "serialized", "bsp", "bsp_scan", "overlap")
+BACKENDS = ("fused", "serialized", "bsp", "bsp_scan", "overlap", "pallas_step")
 
 
 def run(devices: int = 4, steps: int = 50, reps: int = 3,
         grains=(1, 4, 16, 64, 256, 1024, 4096, 16384), payload: int = 64,
-        use_pallas: bool = False, verbose: bool = True):
+        use_pallas: bool = False, options=None, verbose: bool = True):
     rows_out = []
     summary = {}
+    opts = dict(options or {})
+    if use_pallas:
+        opts["use_pallas"] = True
     for backend in BACKENDS:
         spec = SweepSpec(
             runtime=backend, pattern="stencil_1d", devices=devices,
             overdecomposition=1, steps=steps, grains=tuple(grains),
-            reps=reps, payload=payload,
-            options={"use_pallas": use_pallas} if use_pallas else {},
+            reps=reps, payload=payload, options=opts,
         )
         rows = run_worker(spec)
         if all("skip" in r for r in rows):
@@ -67,10 +72,11 @@ def main(argv=None):
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--paper", action="store_true",
                     help="paper protocol: 1000 steps, 5 reps")
-    ap.add_argument("--pallas", action="store_true")
+    backend_options_args(ap)
     a = ap.parse_args(argv)
     steps, reps = (1000, 5) if a.paper else (a.steps, a.reps)
-    run(devices=a.devices, steps=steps, reps=reps, use_pallas=a.pallas)
+    run(devices=a.devices, steps=steps, reps=reps,
+        options=parse_backend_options(a))
     return 0
 
 

@@ -12,8 +12,10 @@ import argparse
 
 from benchmarks.common import (
     SweepSpec,
+    backend_options_args,
     fmt_us,
     metg_from_rows,
+    parse_backend_options,
     run_worker,
     write_csv,
 )
@@ -22,7 +24,7 @@ BACKENDS = ("bsp", "bsp_scan", "overlap", "fused")
 
 
 def run(device_counts=(1, 2, 4, 8), ods=(8, 16), steps: int = 50,
-        reps: int = 3, grains=(1, 16, 256, 4096, 16384),
+        reps: int = 3, grains=(1, 16, 256, 4096, 16384), options=None,
         verbose: bool = True):
     rows_csv = []
     for backend in BACKENDS:
@@ -31,7 +33,7 @@ def run(device_counts=(1, 2, 4, 8), ods=(8, 16), steps: int = 50,
                 spec = SweepSpec(
                     runtime=backend, pattern="stencil_1d", devices=d,
                     overdecomposition=od, steps=steps, grains=tuple(grains),
-                    reps=reps,
+                    reps=reps, options=dict(options or {}),
                 )
                 rows = run_worker(spec)
                 res = metg_from_rows(rows)
@@ -60,9 +62,11 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--paper", action="store_true")
+    backend_options_args(ap)
     a = ap.parse_args(argv)
     steps, reps = (1000, 5) if a.paper else (a.steps, a.reps)
-    run(device_counts=tuple(a.devices), steps=steps, reps=reps)
+    run(device_counts=tuple(a.devices), steps=steps, reps=reps,
+        options=parse_backend_options(a))
     return 0
 
 

@@ -19,7 +19,13 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import SweepSpec, run_worker, write_csv
+from benchmarks.common import (
+    SweepSpec,
+    backend_options_args,
+    parse_backend_options,
+    run_worker,
+    write_csv,
+)
 
 VARIANTS = (
     ("overlap", "default", {}),
@@ -33,14 +39,16 @@ VARIANTS = (
 
 
 def run(devices: int = 8, od: int = 8, grain: int = 4096, steps: int = 50,
-        reps: int = 5, verbose: bool = True):
+        reps: int = 5, options=None, verbose: bool = True):
+    base_options = dict(options or {})
     rows_csv = []
     results = {}
-    for runtime, label, options in VARIANTS:
+    for runtime, label, vopts in VARIANTS:
         spec = SweepSpec(
             runtime=runtime, pattern="stencil_1d", devices=devices,
             overdecomposition=od, steps=steps, grains=(grain,), reps=reps,
-            options=options,
+            # each variant's own knobs win over the CLI-wide base options
+            options={**base_options, **vopts},
         )
         rows = run_worker(spec)
         r = rows[0]
@@ -76,9 +84,11 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--paper", action="store_true")
+    backend_options_args(ap)
     a = ap.parse_args(argv)
     steps, reps = (1000, 5) if a.paper else (a.steps, a.reps)
-    run(devices=a.devices, od=a.od, grain=a.grain, steps=steps, reps=reps)
+    run(devices=a.devices, od=a.od, grain=a.grain, steps=steps, reps=reps,
+        options=parse_backend_options(a))
     return 0
 
 

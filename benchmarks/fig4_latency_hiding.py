@@ -23,7 +23,14 @@ from __future__ import annotations
 import argparse
 import json
 
-from benchmarks.common import SweepSpec, bench_path, run_worker, write_csv
+from benchmarks.common import (
+    SweepSpec,
+    backend_options_args,
+    bench_path,
+    parse_backend_options,
+    run_worker,
+    write_csv,
+)
 
 from repro.configs.taskbench import PRESETS
 
@@ -31,7 +38,8 @@ from repro.configs.taskbench import PRESETS
 def run(devices: int = 4, steps: int = 100, reps: int = 5,
         grains=(1, 8, 64), ensemble_sizes=(1, 2, 4, 8),
         overdecomposition: int = 8, payload: int = 64,
-        backends=("overlap", "bsp", "bsp_scan"), verbose: bool = True):
+        backends=("overlap", "bsp", "bsp_scan"), options=None,
+        verbose: bool = True):
     rows_out = []
     ratios = {}  # (backend, grain) -> {K: concurrent/serial}
     walls = {}  # (backend, K, grain) -> ensemble wall
@@ -43,7 +51,7 @@ def run(devices: int = 4, steps: int = 100, reps: int = 5,
             pattern="stencil_1d", devices=devices,
             overdecomposition=overdecomposition, steps=steps,
             grains=tuple(grains), reps=reps, payload=payload, ensemble=k,
-            serial_baseline=k > 1,
+            serial_baseline=k > 1, options=dict(options or {}),
         )
         rows = run_worker(spec)
         for r in rows:
@@ -128,13 +136,15 @@ def main(argv=None):
                     help="override the preset's step count")
     ap.add_argument("--reps", type=int, default=None)
     ap.add_argument("--preset", default="fig4", choices=sorted(PRESETS))
+    backend_options_args(ap)
     a = ap.parse_args(argv)
     cfg = PRESETS[a.preset]
+    opts = parse_backend_options(a)
     run(devices=a.devices, steps=a.steps or cfg.steps,
         reps=a.reps or cfg.reps, grains=cfg.grains,
         ensemble_sizes=cfg.ensemble_sizes,
         overdecomposition=cfg.overdecomposition[0], payload=cfg.payload,
-        backends=cfg.runtimes)
+        backends=cfg.runtimes, options=opts)
     return 0
 
 

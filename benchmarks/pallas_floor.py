@@ -1,0 +1,111 @@
+"""Fused-timestep floor: pallas_step vs fused wall/step at iterations=1.
+
+Fig-1-style sweep at the finest grain (iterations=1), where wall time per
+step measures the runtime's per-step control path, not arithmetic — the
+regime where the paper's METG collapses. `fused` pays one gather + one
+masked-mean chain + one body op per step; `pallas_step` executes the whole
+step as one fused kernel whose combine is a static chain of shifted-slice
+FMAs (see DESIGN.md §4). The recorded acceptance check: pallas_step's
+wall/step is STRICTLY lower than fused's at every width.
+
+Both backends run back-to-back in one worker process per width
+(SweepSpec.compare_runtimes), so the ratio is not polluted by scheduling
+differences across workers. Outputs:
+
+  artifacts/bench/pallas_floor.csv   one row per (width, backend)
+  artifacts/bench/pallas_floor.json  summary incl. per-width ratios and the
+                                     strictly-lower verdict
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.common import (
+    SweepSpec,
+    backend_options_args,
+    bench_path,
+    parse_backend_options,
+    run_worker,
+    write_csv,
+)
+
+from repro.configs.taskbench import PRESETS
+
+WIDTHS = (64, 256, 1024, 4096)
+
+
+def run(devices: int = 1, steps: int = 0, reps: int = 0,
+        widths=WIDTHS, payload: int = 64, options=None, verbose: bool = True):
+    cfg = PRESETS["floor"]
+    steps = steps or cfg.steps
+    reps = reps or cfg.reps
+    rows_out = []
+    ratios = {}
+    for width in widths:
+        spec = SweepSpec(
+            runtime=cfg.runtimes[0], compare_runtimes=cfg.runtimes,
+            pattern="stencil_1d", devices=devices, width=width,
+            steps=steps, grains=cfg.grains, reps=reps, payload=payload,
+            options=dict(options or {}),
+        )
+        rows = run_worker(spec)
+        walls = {}
+        for r in rows:
+            if "skip" in r:
+                if verbose:
+                    print(f"floor {r['runtime']:12s} W={width}: skip — "
+                          f"{r['skip']}", flush=True)
+                continue
+            per_step = r["wall"] / steps
+            walls[r["runtime"]] = per_step
+            rows_out.append([r["runtime"], width, r["grain"], steps,
+                             r["wall"], per_step, r["gran_us"],
+                             r["dispatches"]])
+        if "fused" in walls and "pallas_step" in walls:
+            ratios[str(width)] = walls["pallas_step"] / walls["fused"]
+            if verbose:
+                print(f"floor W={width:5d}: fused "
+                      f"{walls['fused']*1e6:9.2f} us/step, pallas_step "
+                      f"{walls['pallas_step']*1e6:9.2f} us/step  "
+                      f"(ratio {ratios[str(width)]:.3f})", flush=True)
+
+    strictly_lower = bool(ratios) and all(v < 1.0 for v in ratios.values())
+    path_csv = write_csv(
+        "pallas_floor.csv",
+        ["backend", "width", "grain", "steps", "wall_s", "wall_per_step_s",
+         "granularity_us", "dispatches"],
+        rows_out,
+    )
+    path_json = bench_path("pallas_floor.json")
+    with open(path_json, "w") as f:
+        json.dump({
+            "devices": devices, "steps": steps, "payload": payload,
+            "grain_iterations": list(cfg.grains),
+            "pallas_over_fused_per_step": ratios,
+            "pallas_step_strictly_lower": strictly_lower,
+        }, f, indent=2)
+    if verbose:
+        print(f"pallas_step strictly lower wall/step than fused: "
+              f"{strictly_lower}")
+        print(f"wrote {path_csv} and {path_json}")
+    return {"ratios": ratios, "strictly_lower": strictly_lower}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=0,
+                    help="override the floor preset's step count")
+    ap.add_argument("--reps", type=int, default=0)
+    ap.add_argument("--widths", default=",".join(str(w) for w in WIDTHS))
+    backend_options_args(ap)
+    a = ap.parse_args(argv)
+    opts = parse_backend_options(a)
+    run(devices=a.devices, steps=a.steps, reps=a.reps,
+        widths=tuple(int(w) for w in a.widths.split(",")), options=opts)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,11 +5,14 @@
   fig2    METG vs device count (paper Fig 2)
   fig3    build-option/transport ablation (paper Fig 3)
   fig4    latency hiding vs ensemble size K (paper §6.2, `-and` graphs)
+  floor   pallas_step vs fused wall/step at iterations=1 (megakernel floor)
   roofline  assemble dry-run artifacts (framework §Roofline)
 
 `python -m benchmarks.run` runs the quick preset of everything;
 `--only fig1,table2` selects; `--paper` switches to the 1000-step protocol.
-CSVs land in artifacts/bench/.
+`--pallas` / `--backend-options JSON` thread runtime options (Pallas
+variants, combine strategy, unroll, ...) through every figure via
+SweepSpec.options. CSVs land in artifacts/bench/.
 """
 from __future__ import annotations
 
@@ -17,7 +20,7 @@ import argparse
 import sys
 import time
 
-ALL = ("fig1", "table2", "fig2", "fig3", "fig4", "roofline")
+ALL = ("fig1", "table2", "fig2", "fig3", "fig4", "floor", "roofline")
 
 
 def main(argv=None) -> int:
@@ -26,8 +29,11 @@ def main(argv=None) -> int:
                     help="comma-separated subset of " + ",".join(ALL))
     ap.add_argument("--paper", action="store_true",
                     help="full paper protocol (1000 steps, 5 reps) — slow")
+    from benchmarks.common import backend_options_args, parse_backend_options
+    backend_options_args(ap)
     a = ap.parse_args(argv)
     chosen = tuple(a.only.split(",")) if a.only else ALL
+    opts = parse_backend_options(a)
 
     t_all = time.perf_counter()
     steps, reps = (1000, 5) if a.paper else (50, 3)
@@ -37,28 +43,29 @@ def main(argv=None) -> int:
         print("Fig 1: FLOP/s and efficiency vs grain size (stencil, 1 node)")
         print("=" * 72)
         from benchmarks.fig1_flops_vs_grain import run as fig1
-        fig1(devices=4, steps=steps, reps=reps)
+        fig1(devices=4, steps=steps, reps=reps, options=opts)
 
     if "table2" in chosen:
         print("=" * 72)
         print("Table 2: METG x overdecomposition {1, 8, 16}")
         print("=" * 72)
         from benchmarks.table2_metg import run as table2
-        table2(devices=4, steps=steps, reps=reps)
+        table2(devices=4, steps=steps, reps=reps, options=opts)
 
     if "fig2" in chosen:
         print("=" * 72)
         print("Fig 2: METG vs device count (od 8, 16)")
         print("=" * 72)
         from benchmarks.fig2_scaling import run as fig2
-        fig2(device_counts=(1, 2, 4, 8), steps=steps, reps=reps)
+        fig2(device_counts=(1, 2, 4, 8), steps=steps, reps=reps,
+             options=opts)
 
     if "fig3" in chosen:
         print("=" * 72)
         print("Fig 3: transport/scheduling variant ablation (grain 4096)")
         print("=" * 72)
         from benchmarks.fig3_variants import run as fig3
-        fig3(devices=8, od=8, steps=steps, reps=max(reps, 5))
+        fig3(devices=8, od=8, steps=steps, reps=max(reps, 5), options=opts)
 
     if "fig4" in chosen:
         print("=" * 72)
@@ -67,7 +74,18 @@ def main(argv=None) -> int:
         from benchmarks.fig4_latency_hiding import run as fig4
         # fig4 needs enough steps for per-dispatch cost to rise above timing
         # noise; use its own tuned default unless running the paper protocol.
-        fig4(devices=4, **({"steps": 1000, "reps": 5} if a.paper else {}))
+        fig4(devices=4, options=opts,
+             **({"steps": 1000, "reps": 5} if a.paper else {}))
+
+    if "floor" in chosen:
+        print("=" * 72)
+        print("Floor: pallas_step vs fused wall/step at iterations=1")
+        print("=" * 72)
+        from benchmarks.pallas_floor import run as floor
+        # the FLOOR preset carries the default steps/reps; only the paper
+        # protocol overrides them
+        floor(devices=1, options=opts,
+              **({"steps": 1000, "reps": 5} if a.paper else {}))
 
     if "roofline" in chosen:
         print("=" * 72)

@@ -2,7 +2,14 @@
 
 Paper: width = cores x N for N in {1, 8, 16}; stencil pattern. METG uses
 each configuration's own peak (the paper normalizes per system).
-Output: artifacts/bench/table2.csv.
+
+Beyond the paper's grid, ``--ensemble`` adds concurrent-multi-graph rows
+(Task Bench ``-and``): K independent graphs per run, timed as ONE execution
+and folded into a single METG sample via ``metg.combine_grain_samples`` —
+so overdecomposition-via-ensembles (more graphs per core) lands next to
+overdecomposition-via-width (more points per core) in the same table.
+
+Output: artifacts/bench/table2.csv (one row per backend x od x K).
 """
 from __future__ import annotations
 
@@ -10,49 +17,68 @@ import argparse
 
 from benchmarks.common import (
     SweepSpec,
+    backend_options_args,
     fmt_us,
     metg_from_rows,
+    parse_backend_options,
     run_worker,
     write_csv,
 )
 
-BACKENDS = ("fused", "serialized", "bsp", "bsp_scan", "overlap")
+BACKENDS = ("fused", "serialized", "bsp", "bsp_scan", "overlap", "pallas_step")
 ODS = (1, 8, 16)
 
 
 def run(devices: int = 4, steps: int = 50, reps: int = 3,
-        grains=(1, 16, 256, 4096, 16384), verbose: bool = True):
+        grains=(1, 16, 256, 4096, 16384), ensembles=(1,), options=None,
+        verbose: bool = True):
     table = {}
     rows_csv = []
+    opts = dict(options or {})
     for backend in BACKENDS:
         for od in ODS:
-            spec = SweepSpec(
-                runtime=backend, pattern="stencil_1d", devices=devices,
-                overdecomposition=od, steps=steps, grains=tuple(grains),
-                reps=reps,
-            )
-            rows = run_worker(spec)
-            res = metg_from_rows(rows)
-            table[(backend, od)] = res.metg_us
-            rows_csv.append([backend, od, devices,
-                             "" if res.metg_us is None else res.metg_us,
-                             res.peak_flops_per_second])
-            if verbose:
-                print(f"table2 {backend:12s} od={od:2d} METG = "
-                      f"{fmt_us(res.metg_us)} us", flush=True)
+            for k in ensembles:
+                spec = SweepSpec(
+                    runtime=backend, pattern="stencil_1d", devices=devices,
+                    overdecomposition=od, steps=steps, grains=tuple(grains),
+                    reps=reps, ensemble=k, options=opts,
+                )
+                rows = run_worker(spec)
+                if all("skip" in r for r in rows):
+                    if verbose:
+                        print(f"table2 {backend:12s} od={od:2d} K={k} n/a — "
+                              f"{rows[0]['skip']}", flush=True)
+                    continue
+                res = metg_from_rows(rows)
+                table[(backend, od, k)] = res.metg_us
+                rows_csv.append([backend, od, k, devices,
+                                 "" if res.metg_us is None else res.metg_us,
+                                 res.peak_flops_per_second])
+                if verbose:
+                    print(f"table2 {backend:12s} od={od:2d} K={k} METG = "
+                          f"{fmt_us(res.metg_us)} us", flush=True)
     path = write_csv(
         "table2.csv",
-        ["backend", "overdecomposition", "devices", "metg_us",
+        ["backend", "overdecomposition", "ensemble_k", "devices", "metg_us",
          "peak_flops_per_s"],
         rows_csv,
     )
     if verbose:
         print(f"wrote {path}")
-        print("\n| system | 1 task/core | 8 tasks/core | 16 tasks/core |")
-        print("|---|---|---|---|")
-        for backend in BACKENDS:
-            cells = " | ".join(fmt_us(table[(backend, od)]) for od in ODS)
-            print(f"| {backend} | {cells} |")
+        for k in ensembles:
+            label = "" if len(ensembles) == 1 else f" (K={k} graphs)"
+            print(f"\n| system{label} | "
+                  + " | ".join(f"{od} task{'s' if od > 1 else ''}/core"
+                               for od in ODS) + " |")
+            print("|---|" + "---|" * len(ODS))
+            for backend in BACKENDS:
+                if not any((backend, od, k) in table for od in ODS):
+                    continue
+                cells = " | ".join(
+                    fmt_us(table[(backend, od, k)])
+                    if (backend, od, k) in table else "n/a"
+                    for od in ODS)
+                print(f"| {backend} | {cells} |")
     return table
 
 
@@ -62,9 +88,15 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--paper", action="store_true")
+    ap.add_argument("--ensemble", default="1",
+                    help="comma-separated ensemble sizes K (default 1)")
+    backend_options_args(ap)
     a = ap.parse_args(argv)
     steps, reps = (1000, 5) if a.paper else (a.steps, a.reps)
-    run(devices=a.devices, steps=steps, reps=reps)
+    opts = parse_backend_options(a)
+    ensembles = tuple(int(k) for k in a.ensemble.split(","))
+    run(devices=a.devices, steps=steps, reps=reps, ensembles=ensembles,
+        options=opts)
     return 0
 
 

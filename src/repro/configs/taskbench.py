@@ -20,7 +20,8 @@ class TaskBenchConfig:
     overdecomposition: Tuple[int, ...] = (1, 8, 16)
     grains: Tuple[int, ...] = (1, 4, 16, 64, 256, 1024, 4096, 16384)
     reps: int = 5
-    runtimes: Tuple[str, ...] = ("fused", "serialized", "bsp", "bsp_scan", "overlap")
+    runtimes: Tuple[str, ...] = ("fused", "serialized", "bsp", "bsp_scan",
+                                 "overlap", "pallas_step")
     #: K values for concurrent multi-graph ensembles (Task Bench `-and`,
     #: paper §6.2): K independent graphs per run, each width = devices x od.
     ensemble_sizes: Tuple[int, ...] = (1, 2, 4, 8)
@@ -37,7 +38,8 @@ QUICK = TaskBenchConfig(
     overdecomposition=(1, 8),
     grains=(1, 16, 256, 4096, 65536),
     reps=3,
-    runtimes=("fused", "serialized", "bsp", "bsp_scan", "overlap"),
+    runtimes=("fused", "serialized", "bsp", "bsp_scan", "overlap",
+              "pallas_step"),
     ensemble_sizes=(1, 2, 4),
 )
 
@@ -50,8 +52,22 @@ FIG4 = TaskBenchConfig(
     overdecomposition=(8,),
     grains=(1, 8, 64),
     reps=5,
-    runtimes=("overlap", "bsp", "bsp_scan"),
+    runtimes=("overlap", "bsp", "bsp_scan", "pallas_step"),
     ensemble_sizes=(1, 2, 4, 8),
 )
 
-PRESETS = {c.name: c for c in (PAPER, QUICK, FIG4)}
+# Fused-timestep floor check (benchmarks/pallas_floor.py): iterations=1 —
+# the grain where per-step op count, not arithmetic, sets the wall — over
+# widths wide enough that the masked-mean's extra passes show; pallas_step's
+# single prefolded gather+combine+body launch must undercut fused.
+FLOOR = TaskBenchConfig(
+    name="floor",
+    steps=200,
+    overdecomposition=(1,),
+    grains=(1,),
+    reps=5,
+    runtimes=("fused", "pallas_step"),
+    ensemble_sizes=(1,),
+)
+
+PRESETS = {c.name: c for c in (PAPER, QUICK, FIG4, FLOOR)}

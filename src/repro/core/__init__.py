@@ -29,6 +29,7 @@ from repro.core.runtimes import fused as _fused  # noqa: F401
 from repro.core.runtimes import serialized as _serialized  # noqa: F401
 from repro.core.runtimes import bsp as _bsp  # noqa: F401
 from repro.core.runtimes import overlap as _overlap  # noqa: F401
+from repro.core.runtimes import pallas_step as _pallas_step  # noqa: F401
 
 __all__ = [
     "TaskGraph",

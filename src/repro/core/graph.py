@@ -160,9 +160,12 @@ class GraphEnsemble:
     This is the paper's §6.2 latency-hiding workload: give each core more
     than one graph's worth of tasks so the runtime can execute a ready task
     from graph A while graph B's messages are in flight. Members may differ
-    in pattern, grain, payload, and width; they share ``steps`` so the
-    interleaved backends can drive all members from ONE timestep loop (the
-    lockstep composition Task Bench itself uses for ``-and``).
+    in pattern, grain, payload, width, AND ``steps``: the interleaved
+    backends drive all members from ONE timestep loop of ``max(steps)``
+    iterations (the lockstep composition Task Bench itself uses for
+    ``-and``), and a member whose own T is exhausted is *frozen by masking*
+    — it carries its final state unchanged through the remaining lockstep
+    iterations, executing no further tasks.
 
     There is no dataflow between members — every runtime backend must
     produce, for each member, exactly the final state that running that
@@ -184,12 +187,6 @@ class GraphEnsemble:
         object.__setattr__(self, "members", tuple(members))
         if not self.members:
             raise ValueError("ensemble needs at least one member graph")
-        steps = {g.steps for g in self.members}
-        if len(steps) > 1:
-            raise ValueError(
-                f"ensemble members must share steps for lockstep execution; "
-                f"got {sorted(steps)}"
-            )
 
     def __len__(self) -> int:
         return len(self.members)
@@ -199,7 +196,17 @@ class GraphEnsemble:
 
     @property
     def steps(self) -> int:
-        return self.members[0].steps
+        """Lockstep iteration count: the longest member's T."""
+        return max(g.steps for g in self.members)
+
+    @property
+    def member_steps(self) -> Tuple[int, ...]:
+        """Each member's own T; members are frozen once t reaches theirs."""
+        return tuple(g.steps for g in self.members)
+
+    @property
+    def heterogeneous_steps(self) -> bool:
+        return len({g.steps for g in self.members}) > 1
 
     @property
     def num_tasks(self) -> int:

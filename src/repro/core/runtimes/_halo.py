@@ -101,14 +101,21 @@ def ring_perms(num_devices: int, axis: str = "shard"):
     return fwd, bwd
 
 
-def exchange_halos(local: jax.Array, r: int, num_devices: int, axis: str = "shard"):
+def exchange_halos(local: jax.Array, r: int, num_devices: int,
+                   axis: str = "shard", *, row_axis: int = 0):
     """Ring-exchange r edge rows each way.
 
     Returns (recv_left, recv_right): rows that sit immediately left/right of
     this device's block in global order (wrapped at the ends; wrap values are
-    masked off by the combine for non-periodic patterns).
+    masked off by the combine for non-periodic patterns). ``row_axis`` is the
+    point-row dimension — 0 for a (B, payload) block, 1 for an ensemble's
+    stacked (K, B, payload) block, where one exchange moves every member's
+    halos at once.
     """
     fwd, bwd = ring_perms(num_devices, axis)
-    recv_left = jax.lax.ppermute(local[-r:], axis, fwd)  # from d-1: its last r
-    recv_right = jax.lax.ppermute(local[:r], axis, bwd)  # from d+1: its first r
+    n = local.shape[row_axis]
+    last = jax.lax.slice_in_dim(local, n - r, n, axis=row_axis)
+    first = jax.lax.slice_in_dim(local, 0, r, axis=row_axis)
+    recv_left = jax.lax.ppermute(last, axis, fwd)  # from d-1: its last r
+    recv_right = jax.lax.ppermute(first, axis, bwd)  # from d+1: its first r
     return recv_left, recv_right

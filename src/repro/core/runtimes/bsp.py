@@ -182,10 +182,17 @@ class _BspBase(Runtime):
             return step
         return self._make_global_step(graph, use_pallas)
 
+    def _check_vma(self) -> bool:
+        # pallas_call has no replication rule, so bodies that launch Pallas
+        # kernels (use_pallas=True) must disable VMA/replication checking;
+        # pure-jnp bodies keep the trace-time safety net.
+        return not bool(self.options.get("use_pallas", False))
+
     def _shard_map(self, mesh: Mesh, fn: Callable, n_in: int = 1) -> Callable:
         return shard_map(
             fn,
             mesh=mesh,
+            check_vma=self._check_vma(),
             in_specs=tuple([P(AXIS)] * n_in) if n_in > 1 else P(AXIS),
             out_specs=P(AXIS),
         )
@@ -195,6 +202,7 @@ class _BspBase(Runtime):
         return shard_map(
             fn,
             mesh=mesh,
+            check_vma=self._check_vma(),
             in_specs=(tuple([P(AXIS)] * k),),
             out_specs=tuple([P(AXIS)] * k),
         )
@@ -233,7 +241,8 @@ class BspRuntime(_BspBase):
             body = self._make_global_step(graph, use_pallas)
             stepped = jax.jit(
                 shard_map(
-                    body, mesh=mesh, in_specs=(P(AXIS), P()), out_specs=P(AXIS)
+                    body, mesh=mesh, check_vma=self._check_vma(),
+                    in_specs=(P(AXIS), P()), out_specs=P(AXIS)
                 ),
                 donate_argnums=(0,) if donate else (),
             )
@@ -270,7 +279,12 @@ class BspRuntime(_BspBase):
                 for (ko, _, sh), x in zip(parts, inits)
             ]
             for t in range(1, ensemble.steps):
-                states = [pick(t)(s) for (_, pick, _), s in zip(parts, states)]
+                # members past their own T are frozen: no dispatch at all
+                # (the host analogue of the fused backends' masked freeze)
+                states = [
+                    pick(t)(s) if t < g.steps else s
+                    for (_, pick, _), s, g in zip(parts, states, ensemble.members)
+                ]
             return tuple(states)
 
         return run
@@ -319,6 +333,7 @@ class BspScanRuntime(_BspBase):
         mesh = self._mesh()
         members = ensemble.members
         specs = [g.kernel for g in members]
+        steps = ensemble.steps
         member_steps = [self._make_member_step(g, use_pallas) for g in members]
 
         def local_run(locals_):  # tuple of (B_k, payload_k) per device
@@ -330,10 +345,13 @@ class BspScanRuntime(_BspBase):
                 return locals_
 
             def scan_body(states, t):
-                return (
-                    tuple(st(s, t) for st, s in zip(member_steps, states)),
-                    None,
-                )
+                nxt = []
+                for g, st, s in zip(members, member_steps, states):
+                    n = st(s, t)
+                    if g.steps < steps:  # masked freeze past this member's T
+                        n = jnp.where(t < g.steps, n, s)
+                    nxt.append(n)
+                return tuple(nxt), None
 
             locals_, _ = jax.lax.scan(
                 scan_body, locals_, jnp.arange(1, ensemble.steps), unroll=unroll

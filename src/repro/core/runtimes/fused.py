@@ -91,6 +91,10 @@ class FusedRuntime(Runtime):
         sees a single dataflow and interleaves members at will. Heterogeneous
         ensembles fall back to a tuple-of-states scan carry with per-member
         combine closures; still one program, same scheduling freedom.
+
+        Members with different ``steps`` are frozen by masking: the lockstep
+        loop runs max(T_k) iterations and a member past its own T carries its
+        final state through ``jnp.where`` unchanged (no further tasks).
         """
         use_pallas = bool(self.options.get("use_pallas", False))
         unroll = int(self.options.get("unroll", 1))
@@ -106,6 +110,9 @@ class FusedRuntime(Runtime):
             * max(g.max_deps for g in members)
             <= _MAX_DEP_CELLS
         )
+
+        hetero = ensemble.heterogeneous_steps
+        msteps = jnp.asarray(ensemble.member_steps, jnp.int32)
 
         if stacked:
             idx_np, mask_np, periods_np = ensemble.dependency_arrays()
@@ -129,7 +136,10 @@ class FusedRuntime(Runtime):
             def step(state, t):
                 s = jax.lax.rem(t - 1, periods)  # (K,) per-member slot
                 x = jax.vmap(combine_dependencies)(state, take(idx, s), take(mask, s))
-                return apply_all(x), None
+                nxt = apply_all(x)
+                if hetero:  # freeze members whose own T is exhausted
+                    nxt = jnp.where((t < msteps)[:, None, None], nxt, state)
+                return nxt, None
 
             @jax.jit
             def run(inits):
@@ -145,13 +155,13 @@ class FusedRuntime(Runtime):
         combines = [self._make_combine(g) for g in members]
 
         def step(states, t):
-            return (
-                tuple(
-                    apply_kernel(c(s, t), sp, use_pallas=use_pallas)
-                    for s, c, sp in zip(states, combines, specs)
-                ),
-                None,
-            )
+            nxt = []
+            for g, s, c, sp in zip(members, states, combines, specs):
+                n = apply_kernel(c(s, t), sp, use_pallas=use_pallas)
+                if g.steps < steps:  # freeze once this member's T is done
+                    n = jnp.where(t < g.steps, n, s)
+                nxt.append(n)
+            return tuple(nxt), None
 
         @jax.jit
         def run(inits):

@@ -158,6 +158,7 @@ class OverlapRuntime(_BspBase):
         mesh = self._mesh()
         members = ensemble.members
         specs = [g.kernel for g in members]
+        steps = ensemble.steps
         member_steps = [self._make_overlap_step(g) for g in members]
 
         def local_run(locals_):  # tuple of (B_k, payload_k) per device
@@ -168,11 +169,17 @@ class OverlapRuntime(_BspBase):
             if ensemble.steps == 1:
                 return locals_
 
-            def body(states, _):
-                return tuple(st(s) for st, s in zip(member_steps, states)), None
+            def body(states, t):
+                nxt = []
+                for g, st, s in zip(members, member_steps, states):
+                    n = st(s)
+                    if g.steps < steps:  # masked freeze past this member's T
+                        n = jnp.where(t < g.steps, n, s)
+                    nxt.append(n)
+                return tuple(nxt), None
 
             locals_, _ = jax.lax.scan(
-                body, locals_, None, length=ensemble.steps - 1, unroll=unroll
+                body, locals_, jnp.arange(1, steps), unroll=unroll
             )
             return locals_
 

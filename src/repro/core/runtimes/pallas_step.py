@@ -1,0 +1,364 @@
+"""`pallas_step` runtime — one fused megakernel launch per timestep.
+
+The sixth rung of the backend ladder: like `bsp_scan` the whole timestep
+loop lives in one jit (shard_map over devices, lax.scan over steps), but
+where every other backend emits one gather + one combine + one body op per
+dependency slot per step, this backend lowers the ENTIRE step — gather the
+padded dependency slots from the previous-state buffer, masked-mean
+combine, grain-size body — into a single `pallas_call`
+(repro.kernels.taskbench_step). At fine grain the other backends' floor
+measures XLA op-dispatch overhead; this one's floor is the kernel itself,
+which is the fused per-task control path Task Bench (SC'20) shows is needed
+for sub-microsecond METG.
+
+Dataflow: points are block-distributed like `bsp`; halo-expressible
+patterns exchange r edge rows per ring direction (`_halo.exchange_halos`),
+and the megakernel gathers from the halo-EXTENDED local block through
+host-precomputed (idx, wgt) operands — dependency slots rewritten to
+extended-block positions with weights pre-normalized to 1/live-count, and
+zero-dep rows self-padded, so the kernel has no edge/wrap/empty branches.
+
+Ensembles: a stackable ensemble with a uniform KernelSpec runs ALL K
+members' combines and bodies in the SAME launch (the megakernel's leading K
+axis); one ring exchange moves every member's halos at once. Mixed-spec or
+ragged-shape ensembles fall back to one launch per member inside the same
+jitted scan. Heterogeneous ``steps`` freeze by masking: a member past its
+own T carries its state through `jnp.where` untouched.
+
+Options: combine="gather"|"onehot" (in-kernel gather vs MXU one-hot matmul
+— see taskbench_step.py), block_rows, unroll.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import patterns as _patterns
+from repro.core.graph import GraphEnsemble, TaskGraph
+from repro.core.runtimes import _halo
+from repro.core.runtimes.base import register
+from repro.core.runtimes.bsp import AXIS, _BspBase
+from repro.core.task_kernels import KernelSpec
+from repro.kernels import ops as _kops
+from repro.kernels.taskbench_step import prepare_step_operands
+
+
+def _ext_dep_operands(
+    graph: TaskGraph, block: int, halo: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(W, D) idx/wgt into the halo-extended local block, for one timestep.
+
+    Local row i of a block starting at global row p0 gathers from an
+    extended buffer ext = [p0-halo .. p0+B-1+halo] (mod W, via ring
+    exchange), so dependency q of global row p maps to extended position
+    (p mod B) + halo + o where o is q's signed window offset from p. All
+    halo-expressible patterns have period 1, so ONE slice serves every
+    timestep t >= 1.
+    """
+    r = _patterns.halo_radius(graph)
+    if r < 0:
+        raise ValueError(f"{graph.pattern} is not halo-expressible")
+    if graph.period != 1:
+        raise ValueError(f"halo pattern {graph.pattern} must have period 1")
+    W = graph.width
+
+    def to_ext(p: int, q: int) -> int:
+        for o in range(-r, r + 1):
+            if (p + o) % W == q:
+                return p % block + halo + o
+        raise ValueError(f"dep {q} of point {p} outside halo radius {r}")
+
+    ext_lists: List[List[int]] = [
+        [to_ext(p, q) for q in graph.dependencies(1, p)] for p in range(W)
+    ]
+    selfs = [p % block + halo for p in range(W)]
+    return prepare_step_operands(ext_lists, W, selfs)
+
+
+def _self_operands(width: int, block: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(W, 1) identity operands (t=0: body only, src = raw local block)."""
+    selfs = [p % block for p in range(width)]
+    return prepare_step_operands([[] for _ in range(width)], width, selfs)
+
+
+def _window_operands(
+    graph: TaskGraph, halo: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(W, 2*halo+1) per-offset combine weights for the window kernel mode.
+
+    Column halo + o carries the (pre-normalized) weight of the dependency
+    at window offset o, so the kernel's combine is a static chain of
+    shifted-slice FMAs — no gather. Edge clipping (stencil_1d, dom), the
+    per-row keep set (random_nearest), duplicate window wraps (nearest
+    with W <= 2r), and the zero-dep self-keep rule are all encoded in the
+    weights; idx is unused in this mode (returned as zeros).
+    """
+    r = _patterns.halo_radius(graph)
+    if r < 0 or graph.period != 1:
+        raise ValueError(f"{graph.pattern} is not window-expressible")
+    W = graph.width
+    D = 2 * halo + 1
+    # idx is unused in window mode (the kernel substitutes a 1-element
+    # dummy); a single column keeps the shard_map row-sharding contract
+    # without shipping a dead (W, D) block
+    idx = np.zeros((W, 1), dtype=np.int32)
+    wgt = np.zeros((W, D), dtype=np.float64)
+    for p in range(W):
+        deps = graph.dependencies(1, p)
+        if not deps:
+            wgt[p, halo] = 1.0  # zero deps: keep own state (self weight 1)
+            continue
+        share = 1.0 / len(deps)
+        for q in deps:
+            for o in range(-r, r + 1):
+                if (p + o) % W == q:
+                    wgt[p, halo + o] += share
+                    break
+            else:
+                raise ValueError(f"dep {q} of point {p} outside halo {r}")
+    return idx, wgt.astype(np.float32)
+
+
+@register
+class PallasStepRuntime(_BspBase):
+    name = "pallas_step"
+
+    def supports(self, graph: TaskGraph):
+        D = len(self.devices)
+        if graph.width % D != 0:
+            return False, f"width {graph.width} not divisible by {D} devices"
+        r = _patterns.halo_radius(graph)
+        if r < 0:
+            return False, (
+                f"pattern {graph.pattern} is not halo-expressible; "
+                f"pallas_step fuses halo-pattern steps only"
+            )
+        B = graph.width // D
+        if r > B:
+            return False, f"halo radius {r} exceeds block {B} (multi-hop needed)"
+        return True, ""
+
+    # ------------------------------------------------------------ operands
+
+    def _combine_mode(self) -> str:
+        return str(self.options.get("combine", "window"))
+
+    def _operands(self, graph: TaskGraph, halo: int):
+        """Host-built (idx, wgt, idx0, wgt0) for one member graph.
+
+        The t>=1 operands follow the selected combine mode; the t=0 (body
+        only) call is always a 1-column self window, which is identical
+        across modes (window offset 0 == gather of own row).
+        """
+        B = self._block(graph)
+        if self._combine_mode() == "window":
+            idx, wgt = _window_operands(graph, halo)
+        else:
+            idx, wgt = _ext_dep_operands(graph, B, halo)
+        idx0, wgt0 = _self_operands(graph.width, B)
+        return idx, wgt, idx0, wgt0
+
+    def _kernel_kw(self, spec: KernelSpec) -> dict:
+        kw = dict(
+            kind=spec.kind, iterations=spec.iterations, scratch=spec.scratch,
+            combine=self._combine_mode(),
+        )
+        if self.options.get("block_rows"):
+            kw["block_rows"] = int(self.options["block_rows"])
+        return kw
+
+    # ------------------------------------------------------- single graph
+
+    def build(self, graph: TaskGraph) -> Callable[[jax.Array], jax.Array]:
+        self._require_support(graph)
+        unroll = int(self.options.get("unroll", 1))
+        mesh = self._mesh()
+        D = len(self.devices)
+        H = _patterns.halo_radius(graph)
+        kw = self._kernel_kw(graph.kernel)
+        idx, wgt, idx0, wgt0 = self._operands(graph, H)
+
+        def megastep(ext_src, i, w):  # (B|B+2H, P), (B, D'), (B, D')
+            return _kops.taskbench_step(ext_src[None], i[None], w[None], **kw)[0]
+
+        def local_run(local, i, w, i0, w0):  # all (B, ...) per device
+            state = megastep(local, i0, w0)  # t=0: body only
+            if graph.steps == 1:
+                return state
+
+            def body(s, _):
+                if H > 0:
+                    rl, rr = _halo.exchange_halos(s, H, D, AXIS)
+                    ext = jnp.concatenate([rl, s, rr], axis=0)
+                else:
+                    ext = s
+                return megastep(ext, i, w), None
+
+            state, _ = jax.lax.scan(
+                body, state, None, length=graph.steps - 1, unroll=unroll
+            )
+            return state
+
+        fn = jax.jit(
+            shard_map(
+                local_run, mesh=mesh, check_vma=False,
+                in_specs=(P(AXIS),) * 5, out_specs=P(AXIS),
+            )
+        )
+        sh = NamedSharding(mesh, P(AXIS))
+        consts = tuple(
+            jax.device_put(jnp.asarray(a), sh) for a in (idx, wgt, idx0, wgt0)
+        )
+        return lambda init: fn(jax.device_put(init, sh), *consts)
+
+    # ---------------------------------------------------------- ensembles
+
+    def build_ensemble(self, ensemble: GraphEnsemble) -> Callable:
+        self._require_ensemble_support(ensemble)
+        members = ensemble.members
+        specs = [g.kernel for g in members]
+        if ensemble.stackable and len(set(specs)) == 1:
+            return self._build_ensemble_stacked(ensemble)
+        return self._build_ensemble_tuple(ensemble)
+
+    def _build_ensemble_stacked(self, ensemble: GraphEnsemble) -> Callable:
+        """All K members' combines + bodies in ONE megakernel launch/step."""
+        members = ensemble.members
+        K = len(members)
+        unroll = int(self.options.get("unroll", 1))
+        mesh = self._mesh()
+        D = len(self.devices)
+        H = max(_patterns.halo_radius(g) for g in members)
+        kw = self._kernel_kw(members[0].kernel)
+        steps = ensemble.steps
+        hetero = ensemble.heterogeneous_steps
+        member_steps = np.asarray(ensemble.member_steps, np.int32)
+
+        ops4 = [self._operands(g, H) for g in members]
+
+        def stack(j):  # pad every member's slot dim to the group max, stack
+            dmax = max(o[j].shape[1] for o in ops4)
+            return np.stack([
+                np.pad(o[j], ((0, 0), (0, dmax - o[j].shape[1])))
+                for o in ops4
+            ])
+
+        idx, wgt = stack(0), stack(1)
+        idx0, wgt0 = stack(2), stack(3)
+
+        def megastep(ext_src, i, w):  # (K, S, P), (K, B, D'), (K, B, D')
+            return _kops.taskbench_step(ext_src, i, w, **kw)
+
+        def local_run(local, i, w, i0, w0, msteps):  # local (K, B, P)
+            state = megastep(local, i0, w0)
+            if steps == 1:
+                return state
+
+            def body(s, t):
+                if H > 0:
+                    rl, rr = _halo.exchange_halos(s, H, D, AXIS, row_axis=1)
+                    ext = jnp.concatenate([rl, s, rr], axis=1)
+                else:
+                    ext = s
+                nxt = megastep(ext, i, w)
+                if hetero:  # freeze members whose own T is exhausted
+                    active = (t < msteps)[:, None, None]
+                    nxt = jnp.where(active, nxt, s)
+                return nxt, None
+
+            state, _ = jax.lax.scan(
+                body, state, jnp.arange(1, steps), unroll=unroll
+            )
+            return state
+
+        fn = jax.jit(
+            shard_map(
+                local_run, mesh=mesh, check_vma=False,
+                in_specs=(P(None, AXIS),) * 5 + (P(),), out_specs=P(None, AXIS),
+            )
+        )
+        sh = NamedSharding(mesh, P(None, AXIS))
+        consts = tuple(
+            jax.device_put(jnp.asarray(a), sh) for a in (idx, wgt, idx0, wgt0)
+        ) + (jnp.asarray(member_steps),)
+
+        def run(inits):
+            out = fn(jax.device_put(jnp.stack(inits), sh), *consts)
+            return tuple(out[k] for k in range(K))
+
+        return run
+
+    def _build_ensemble_tuple(self, ensemble: GraphEnsemble) -> Callable:
+        """Mixed specs/shapes: one launch per member, still one jitted scan."""
+        members = ensemble.members
+        unroll = int(self.options.get("unroll", 1))
+        mesh = self._mesh()
+        D = len(self.devices)
+        steps = ensemble.steps
+        halos = [_patterns.halo_radius(g) for g in members]
+        kws = [self._kernel_kw(g.kernel) for g in members]
+        ops4 = [self._operands(g, h) for g, h in zip(members, halos)]
+
+        def member_step(k):
+            H = halos[k]
+            kw = kws[k]
+
+            def step(s, i, w):
+                if H > 0:
+                    rl, rr = _halo.exchange_halos(s, H, D, AXIS)
+                    ext = jnp.concatenate([rl, s, rr], axis=0)
+                else:
+                    ext = s
+                return _kops.taskbench_step(ext[None], i[None], w[None], **kw)[0]
+
+            return step
+
+        step_fns = [member_step(k) for k in range(len(members))]
+
+        def local_run(states, operands):
+            states = tuple(
+                _kops.taskbench_step(s[None], o[2][None], o[3][None], **kw)[0]
+                for s, o, kw in zip(states, operands, kws)
+            )
+            if steps == 1:
+                return states
+
+            def body(ss, t):
+                nxt = []
+                for k, (s, o) in enumerate(zip(ss, operands)):
+                    n = step_fns[k](s, o[0], o[1])
+                    if members[k].steps < steps:
+                        n = jnp.where(t < members[k].steps, n, s)
+                    nxt.append(n)
+                return tuple(nxt), None
+
+            states, _ = jax.lax.scan(
+                body, states, jnp.arange(1, steps), unroll=unroll
+            )
+            return states
+
+        fn = jax.jit(
+            shard_map(
+                local_run, mesh=mesh, check_vma=False,
+                in_specs=(P(AXIS), P(AXIS)), out_specs=P(AXIS),
+            )
+        )
+        sh = NamedSharding(mesh, P(AXIS))
+        consts = tuple(
+            tuple(jax.device_put(jnp.asarray(a), sh) for a in o) for o in ops4
+        )
+        return lambda inits: fn(
+            tuple(jax.device_put(x, sh) for x in inits), consts
+        )
+
+    def dispatches_per_run(self, graph: TaskGraph) -> int:
+        return 1
+
+    def ensemble_dispatches_per_run(self, ensemble: GraphEnsemble) -> int:
+        return 1

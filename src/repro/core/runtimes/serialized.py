@@ -138,7 +138,11 @@ class SerializedRuntime(Runtime):
         def run(inits):
             states = [d.initial(x) for d, x in zip(dispatchers, inits)]
             for t in range(1, ensemble.steps):
-                states = [d.advance(s, t) for d, s in zip(dispatchers, states)]
+                # members past their own T are frozen: zero task dispatches
+                states = [
+                    d.advance(s, t) if t < d.graph.steps else s
+                    for d, s in zip(dispatchers, states)
+                ]
             return tuple(jnp.stack(s) for s in states)
 
         return run

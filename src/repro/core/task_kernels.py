@@ -11,9 +11,13 @@ iterated elementwise FMA over the point's payload vector, so
 ``empty`` is a no-op body used to measure pure runtime overhead.
 
 The *reference* implementation here is pure jnp (this module). The TPU
-hot-spot implementation is ``repro.kernels.taskbench_compute`` (Pallas,
-VMEM-tiled); runtimes select it with ``use_pallas=True`` and tests assert
-allclose between the two across shapes/dtypes.
+hot-spot implementations live in ``repro.kernels`` (Pallas, VMEM-tiled):
+``taskbench_compute`` (FMA body), ``bodies.memory_bound_pallas`` (scratch
+sweep), and the fused-timestep megakernel ``taskbench_step`` that executes
+gather + combine + body in ONE launch. Runtimes select the per-body kernels
+with ``use_pallas=True`` via the ``_BODY_DISPATCH`` table below; the
+``pallas_step`` backend uses the megakernel directly. Tests assert allclose
+between Pallas and reference across shapes/dtypes.
 
 Numerical design: the FMA uses a contraction map x <- a*x + b with |a| < 1 so
 arbitrarily many iterations stay bounded (no inf/nan at any grain size) while
@@ -28,10 +32,16 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-# Contraction constants: x converges towards B/(1-A) = 0.1/0.5 without ever
-# being constant-foldable (A, B are runtime scalars broadcast in).
-FMA_A = 0.5
-FMA_B = 0.1
+# The body math itself lives in repro.kernels.bodies (dependency-free) so the
+# reference path, the standalone Pallas kernels, and the fused-timestep
+# megakernel all trace the identical op sequence. Re-exported here for
+# backward compatibility.
+from repro.kernels.bodies import (  # noqa: F401
+    FMA_A,
+    FMA_B,
+    fma_body as _fma_body,
+    memory_sweep_body as _memory_sweep_body,
+)
 
 KINDS = ("compute_bound", "memory_bound", "empty")
 
@@ -81,13 +91,7 @@ def _compute_bound_jit(x: jax.Array, iterations: int) -> jax.Array:
 
 def compute_bound_body(x: jax.Array, iterations: int) -> jax.Array:
     """Iterated FMA: x <- A*x + B, ``iterations`` times (trace-time loop-free)."""
-    a = jnp.asarray(FMA_A, x.dtype)
-    b = jnp.asarray(FMA_B, x.dtype)
-
-    def body(_, v):
-        return a * v + b
-
-    return jax.lax.fori_loop(0, iterations, body, x)
+    return _fma_body(x, iterations)
 
 
 def memory_bound_body(x: jax.Array, iterations: int, scratch: int) -> jax.Array:
@@ -96,20 +100,34 @@ def memory_bound_body(x: jax.Array, iterations: int, scratch: int) -> jax.Array:
     Each point expands its payload into a (scratch,) working set, sweeps it
     (read-modify-write) per iteration, then reduces back to payload size.
     """
-    lead = x.shape[:-1]
-    payload = x.shape[-1]
-    reps = -(-scratch // payload)  # ceil
-    buf = jnp.tile(x, lead and (1,) * len(lead) + (reps,) or (reps,))[..., :scratch]
+    return _memory_sweep_body(x, iterations, scratch)
 
-    def body(i, b):
-        # rotate + add: forces a full read and write of the buffer
-        return jnp.roll(b, 1, axis=-1) + jnp.asarray(1e-6, b.dtype)
 
-    buf = jax.lax.fori_loop(0, iterations, body, buf)
-    # reduce back to payload: mean over the scratch window per payload slot
-    pad = reps * payload - scratch
-    buf = jnp.concatenate([buf, jnp.zeros(lead + (pad,), buf.dtype)], axis=-1)
-    return buf.reshape(lead + (reps, payload)).mean(axis=-2)
+def _compute_bound_pallas(x: jax.Array, spec: "KernelSpec") -> jax.Array:
+    from repro.kernels import ops as _kops
+
+    return _kops.taskbench_compute(x, spec.iterations)
+
+
+def _memory_bound_pallas(x: jax.Array, spec: "KernelSpec") -> jax.Array:
+    from repro.kernels import ops as _kops
+
+    return _kops.taskbench_memory(x, spec.iterations, spec.scratch)
+
+
+#: (kind, use_pallas) -> body; the single dispatch point for every runtime
+#: backend (no per-callsite if-chains; pallas_step bypasses this with the
+#: fused-timestep megakernel, which shares the same bodies module).
+_BODY_DISPATCH = {
+    ("compute_bound", False): lambda x, spec: compute_bound_body(x, spec.iterations),
+    ("compute_bound", True): _compute_bound_pallas,
+    ("memory_bound", False): lambda x, spec: memory_bound_body(
+        x, spec.iterations, spec.scratch
+    ),
+    ("memory_bound", True): _memory_bound_pallas,
+    ("empty", False): lambda x, spec: x,
+    ("empty", True): lambda x, spec: x,
+}
 
 
 def apply_kernel(
@@ -118,15 +136,11 @@ def apply_kernel(
     """Apply the task body to a batch of point states x: (..., payload)."""
     if spec.kind == "empty" or spec.iterations == 0:
         return x
-    if spec.kind == "compute_bound":
-        if use_pallas:
-            from repro.kernels import ops as _kops
-
-            return _kops.taskbench_compute(x, spec.iterations)
-        return compute_bound_body(x, spec.iterations)
-    if spec.kind == "memory_bound":
-        return memory_bound_body(x, spec.iterations, spec.scratch)
-    raise ValueError(spec.kind)
+    try:
+        body = _BODY_DISPATCH[(spec.kind, bool(use_pallas))]
+    except KeyError:
+        raise ValueError(spec.kind) from None
+    return body(x, spec)
 
 
 def combine_dependencies(

@@ -15,11 +15,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.bodies import memory_bound_pallas
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.ssd_scan import ssd_chunk_pallas
 from repro.kernels.taskbench_compute import taskbench_compute_pallas
+from repro.kernels.taskbench_step import taskbench_step_pallas
 
 
 @functools.cache
@@ -33,6 +35,25 @@ def taskbench_compute(x: jax.Array, iterations: int) -> jax.Array:
     x2 = x.reshape(-1, shape[-1])
     out = taskbench_compute_pallas(x2, iterations, interpret=_interpret())
     return out.reshape(shape)
+
+
+def taskbench_memory(x: jax.Array, iterations: int, scratch: int) -> jax.Array:
+    """Scratch-sweep (memory-bound) task body; accepts (..., payload)."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    out = memory_bound_pallas(x2, iterations, scratch, interpret=_interpret())
+    return out.reshape(shape)
+
+
+def taskbench_step(
+    src: jax.Array, idx: jax.Array, wgt: jax.Array, **kw
+) -> jax.Array:
+    """Fused Task Bench timestep (gather + combine + body) for K graphs.
+
+    See repro.kernels.taskbench_step for the operand contract; this wrapper
+    only auto-selects interpret mode off-TPU.
+    """
+    return taskbench_step_pallas(src, idx, wgt, interpret=_interpret(), **kw)
 
 
 def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6,

@@ -13,7 +13,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.task_kernels import FMA_A, FMA_B
+from repro.kernels.bodies import FMA_A, FMA_B
 
 NEG_INF = -1e30
 
@@ -29,6 +29,60 @@ def taskbench_compute_ref(x: jax.Array, iterations: int) -> jax.Array:
         return a * v + b
 
     return jax.lax.fori_loop(0, iterations, body, x)
+
+
+def taskbench_memory_ref(x: jax.Array, iterations: int, scratch: int) -> jax.Array:
+    """Memory-bound scratch sweep, written INDEPENDENTLY of kernels.bodies.
+
+    The shared body math in bodies.py is used by both the runtime reference
+    path and the Pallas kernels; this oracle re-derives the semantics from
+    scratch (expand payload to a (scratch,) working set, roll + add per
+    iteration, mean-reduce back) so the parity tests can still catch a
+    regression in the shared implementation.
+    """
+    if iterations == 0:
+        return x
+    lead, payload = x.shape[:-1], x.shape[-1]
+    reps = (scratch + payload - 1) // payload
+    buf = jnp.concatenate([x] * reps, axis=-1)[..., :scratch]
+
+    def body(_, b):
+        return jnp.roll(b, 1, axis=-1) + jnp.asarray(1e-6, b.dtype)
+
+    buf = jax.lax.fori_loop(0, iterations, body, buf)
+    buf = jnp.pad(buf, [(0, 0)] * len(lead) + [(0, reps * payload - scratch)])
+    return buf.reshape(lead + (reps, payload)).mean(axis=-2)
+
+
+def taskbench_step_ref(
+    src: jax.Array,
+    idx: jax.Array,
+    wgt: jax.Array,
+    *,
+    kind: str = "compute_bound",
+    iterations: int = 16,
+    scratch: int = 2048,
+) -> jax.Array:
+    """Oracle for the fused-timestep megakernel (taskbench_step.py).
+
+    src: (K, S, payload); idx/wgt: (K, W, D) pre-normalized dependency
+    slots (see taskbench_step.prepare_step_operands). Gather + weighted-sum
+    combine in f32, then the grain-size body, per ensemble member. Built on
+    the ref-local bodies above, not kernels.bodies, so it stays an
+    independent check of the shared body math.
+    """
+
+    def one(s, i, w):
+        x = (s[i].astype(jnp.float32) * w[..., None]).sum(axis=1).astype(s.dtype)
+        if kind == "empty" or iterations == 0:
+            return x
+        if kind == "compute_bound":
+            return taskbench_compute_ref(x, iterations)
+        if kind == "memory_bound":
+            return taskbench_memory_ref(x, iterations, scratch)
+        raise ValueError(f"unknown kernel kind {kind!r}")
+
+    return jax.vmap(one)(src, idx, wgt)
 
 
 # ----------------------------------------------------------------- rmsnorm

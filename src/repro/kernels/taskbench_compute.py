@@ -19,21 +19,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.task_kernels import FMA_A, FMA_B
-
-LANE = 128
-SUBLANE = 8
+from repro.kernels.bodies import LANE, SUBLANE, fma_body
 
 
 def _fma_kernel(x_ref, o_ref, *, iterations: int):
-    x = x_ref[...]
-    a = jnp.asarray(FMA_A, x.dtype)
-    b = jnp.asarray(FMA_B, x.dtype)
-
-    def body(_, v):
-        return a * v + b
-
-    o_ref[...] = jax.lax.fori_loop(0, iterations, body, x)
+    o_ref[...] = fma_body(x_ref[...], iterations)
 
 
 @functools.partial(jax.jit, static_argnames=("iterations", "block_rows", "interpret"))

@@ -1,0 +1,236 @@
+"""Pallas fused-timestep megakernel for Task Bench graphs.
+
+One ``pallas_call`` executes an ENTIRE Task Bench timestep — gather the
+padded dependency slots from the previous-state buffer, combine them
+(masked mean), and run the grain-size body — where the ``fused`` backend
+emits one gather + one combine + one body op per step. At fine grain the
+per-op dispatch cost of that chain is exactly the overhead the paper's METG
+measures, so fusing the step control path lowers the repo's measurable
+floor (cf. Task Bench SC'20 §6.1: sub-microsecond METG needs a fused
+per-task path).
+
+Batching contract: all operands carry a leading K axis — a
+``GraphEnsemble``'s K members' combines and bodies batch into the SAME
+launch (K is the slowest grid dimension, so member k's row-blocks are
+contiguous program instances; see DESIGN.md §4 for why K is an operand axis
+and not a vmap).
+
+Inputs (see ``prepare_step_operands`` for how runtimes build idx/wgt):
+
+  src  (K, S, payload)  previous-state rows to gather FROM. S may exceed the
+                        output width W (halo-extended local blocks).
+  idx  (K, W, D) int32  dependency slot -> src row. Every output row must
+                        have >= 1 live slot: rows with no dependencies are
+                        self-padded (idx = own row, weight 1), which encodes
+                        task_kernels.combine_dependencies' "zero deps keep
+                        own state" rule with no in-kernel branch.
+  wgt  (K, W, D) f32    pre-normalized combine weights (mask / live-count),
+                        so the masked MEAN is a single weighted sum — no
+                        in-kernel max/divide/where.
+
+Three combine strategies, selected statically:
+
+  window  for halo-expressible dependence patterns (the pallas_step
+          runtime's default): slot j of wgt is the weight of the dependency
+          at window offset j - halo, so the combine is a static unrolled
+          sum of 2*halo+1 SHIFTED CONTIGUOUS SLICES of src — no gather at
+          all, just VPU fused multiply-adds over (rows, payload) tiles.
+          idx is ignored (src row = own row + j by construction).
+  gather  dependency rows are fancy-indexed out of src (lax.gather) per
+          the idx operand — the general path for arbitrary padded dep
+          slots.
+  onehot  the combine is lifted to a (W, S) one-hot weight matrix applied
+          with ``jnp.dot`` — the MXU-friendly fallback for TPUs where a
+          row gather does not lower.
+
+Validated bit-for-bit against ``ref.taskbench_step_ref`` (same value-level
+body functions from ``bodies.py``) in interpret mode; see tests/test_kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.bodies import LANE, SUBLANE, apply_body
+
+COMBINE_MODES = ("window", "gather", "onehot")
+
+
+def _step_kernel(
+    src_ref,
+    idx_ref,
+    wgt_ref,
+    o_ref,
+    *,
+    kind: str,
+    iterations: int,
+    scratch: int,
+    payload: int,
+    combine: str,
+    block_rows: int,
+):
+    src = src_ref[0]  # (S, Pp)
+    idx = idx_ref[0]  # (Wb, D)
+    wgt = wgt_ref[0]  # (Wb, D)
+
+    if combine == "window":
+        # wgt column j weighs the dependency at window offset j - halo:
+        # out row w combines src rows [row0 + w .. row0 + w + 2*halo], a
+        # static unrolled slice-FMA chain (no gather, no index arithmetic).
+        row0 = pl.program_id(1) * block_rows
+        srcf = src.astype(jnp.float32)
+        x = jnp.zeros((wgt.shape[0], src.shape[1]), jnp.float32)
+        for j in range(wgt.shape[1]):
+            win = jax.lax.dynamic_slice_in_dim(srcf, row0 + j, wgt.shape[0], 0)
+            x = x + win * wgt[:, j][:, None]
+    elif combine == "gather":
+        gathered = src[idx].astype(jnp.float32)  # (Wb, D, Pp)
+        x = (gathered * wgt[..., None]).sum(axis=1)
+    else:  # onehot: lift the gather to an MXU matmul
+        S = src.shape[0]
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, 1, S), 2)
+        C = ((idx[..., None] == col).astype(jnp.float32) * wgt[..., None]).sum(axis=1)
+        x = jnp.dot(C, src.astype(jnp.float32), preferred_element_type=jnp.float32)
+    x = x.astype(src.dtype)
+
+    if kind == "memory_bound" and iterations > 0:
+        # the sweep mixes columns (roll), so it must see the TRUE payload
+        true = apply_body(x[:, :payload], kind, iterations, scratch)
+        x = jnp.pad(true, ((0, 0), (0, x.shape[-1] - payload)))
+    else:
+        x = apply_body(x, kind, iterations, scratch)
+    o_ref[0] = x
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "kind", "iterations", "scratch", "block_rows", "combine", "interpret",
+    ),
+)
+def taskbench_step_pallas(
+    src: jax.Array,
+    idx: jax.Array,
+    wgt: jax.Array,
+    *,
+    kind: str = "compute_bound",
+    iterations: int = 16,
+    scratch: int = 2048,
+    block_rows: int = 0,
+    combine: str = "gather",
+    interpret: bool = False,
+) -> jax.Array:
+    """One fused Task Bench timestep for K graphs: (K, W, payload) out.
+
+    ``block_rows=0`` keeps each member's full width in one program (the
+    fine-grain default — minimal grid overhead); set it to tile wide graphs
+    so the (block_rows, payload) working set fits VMEM.
+    """
+    if combine not in COMBINE_MODES:
+        raise ValueError(f"unknown combine mode {combine!r}; known {COMBINE_MODES}")
+    if src.ndim != 3 or wgt.ndim != 3:
+        raise ValueError(
+            f"expected (K, S, payload)/(K, W, D) operands, got "
+            f"{src.shape}/{wgt.shape}"
+        )
+    K, S, payload = src.shape
+    _, W, D = wgt.shape
+    if wgt.shape[0] != K:
+        raise ValueError(f"operand K mismatch: {src.shape}/{wgt.shape}")
+    if combine == "window":
+        # idx is semantically unused (src row = own row + slot offset); feed
+        # a 1-element dummy so no dead (K, W, D) block is DMA'd per program
+        idx = jnp.zeros((K, 1, 1), jnp.int32)
+    elif idx.shape != wgt.shape:
+        raise ValueError(f"operand shape mismatch: {idx.shape}/{wgt.shape}")
+
+    # Hardware tiles: payload -> 128-lane multiple, rows -> sublane/block
+    # multiples. Padded idx rows gather src row 0 at weight 0, padded src
+    # rows are never indexed, padded payload columns stay zero through the
+    # (row-wise linear) combine; everything is sliced off on return. The
+    # interpreter has no tile constraints, so off-TPU the operands stay
+    # unpadded — lane-padding there would double the per-step elementwise
+    # work this kernel exists to minimize.
+    lane, sublane = (1, 1) if interpret else (LANE, SUBLANE)
+    pad_p = (-payload) % lane
+    block_rows = block_rows or W + (-W) % sublane
+    block_rows = max(sublane, min(block_rows, W + (-W) % sublane))
+    pad_w = (-W) % block_rows
+    if combine == "window":
+        # out row w reads src rows [w .. w + D-1]: padded out rows must
+        # still slice in bounds (their weights are zero, values discarded)
+        if S < W + D - 1:
+            raise ValueError(
+                f"window combine needs src rows >= W + D - 1 = {W + D - 1}, "
+                f"got {S} (window D = {D} includes the halo)"
+            )
+        pad_s = max(pad_w, (-S) % sublane)
+    else:
+        pad_s = (-S) % sublane
+    srcp = jnp.pad(src, ((0, 0), (0, pad_s), (0, pad_p)))
+    idxp = idx if combine == "window" else jnp.pad(idx, ((0, 0), (0, pad_w), (0, 0)))
+    wgtp = jnp.pad(wgt, ((0, 0), (0, pad_w), (0, 0)))
+    Sp, Pp = srcp.shape[1], srcp.shape[2]
+    Wp = W + pad_w
+    idx_block = (
+        pl.BlockSpec((1, 1, 1), lambda k, i: (k, 0, 0))
+        if combine == "window"
+        else pl.BlockSpec((1, block_rows, D), lambda k, i: (k, i, 0))
+    )
+
+    out = pl.pallas_call(
+        functools.partial(
+            _step_kernel,
+            kind=kind,
+            iterations=iterations,
+            scratch=scratch,
+            payload=payload,
+            combine=combine,
+            block_rows=block_rows,
+        ),
+        grid=(K, Wp // block_rows),
+        in_specs=[
+            pl.BlockSpec((1, Sp, Pp), lambda k, i: (k, 0, 0)),
+            idx_block,
+            pl.BlockSpec((1, block_rows, D), lambda k, i: (k, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_rows, Pp), lambda k, i: (k, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((K, Wp, Pp), src.dtype),
+        interpret=interpret,
+    )(srcp, idxp, wgtp)
+    return out[:, :W, :payload]
+
+
+def prepare_step_operands(dep_lists, width: int, self_pos) -> tuple:
+    """Host-side build of one member's (idx, wgt) kernel operands.
+
+    Args:
+      dep_lists: length-``width`` list; entry p is the sequence of SRC ROW
+        positions task p gathers (duplicates allowed — they weigh double,
+        matching combine_dependencies). Empty -> self-padded.
+      width: number of output rows W.
+      self_pos: length-``width`` array of each row's own position in src
+        (the zero-dep "keep own state" row).
+
+    Returns:
+      idx int32 (W, D), wgt float32 (W, D) with D = max(1, max deps);
+      weights pre-normalized to 1/live-count (computed in float64, rounded
+      once) so the kernel's weighted sum IS the masked mean.
+    """
+    D = max(1, max((len(d) for d in dep_lists), default=0))
+    idx = np.zeros((width, D), dtype=np.int32)
+    wgt = np.zeros((width, D), dtype=np.float64)
+    for p, deps in enumerate(dep_lists):
+        if not deps:
+            idx[p, 0] = self_pos[p]
+            wgt[p, 0] = 1.0
+            continue
+        w = 1.0 / len(deps)
+        for j, q in enumerate(deps):
+            idx[p, j] = q
+            wgt[p, j] = w
+    return idx, wgt.astype(np.float32)

@@ -7,11 +7,16 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
+from repro.kernels.bodies import memory_bound_pallas
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.ssd_scan import ssd_chunk_pallas
 from repro.kernels.taskbench_compute import taskbench_compute_pallas
+from repro.kernels.taskbench_step import (
+    prepare_step_operands,
+    taskbench_step_pallas,
+)
 
 
 def tol(dtype):
@@ -42,6 +47,124 @@ def test_taskbench_block_rows_invariance():
     a = taskbench_compute_pallas(x, 9, block_rows=8, interpret=True)
     b = taskbench_compute_pallas(x, 9, block_rows=64, interpret=True)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+@pytest.mark.parametrize("rows,payload", [(4, 16), (33, 70), (100, 130)])
+@pytest.mark.parametrize("iters,scratch", [(0, 64), (3, 64), (7, 100)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_taskbench_memory_sweep(rows, payload, iters, scratch, dtype):
+    """memory_bound scratch-sweep body: Pallas vs jnp oracle."""
+    x = jax.random.uniform(jax.random.PRNGKey(15), (rows, payload),
+                           jnp.float32, 0.1, 1.0).astype(dtype)
+    got = memory_bound_pallas(x, iters, scratch, interpret=True)
+    want = ref.taskbench_memory_ref(x, iters, scratch)
+    assert got.shape == x.shape and got.dtype == x.dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **tol(dtype))
+
+
+# ------------------------------------------------- fused-timestep megakernel
+
+
+def _random_step_operands(key, K, S, W, D, zero_dep_rows=True):
+    """Padded (idx, wgt) with random dep sets (incl. some zero-dep rows)."""
+    rng = np.random.default_rng(key)
+    idxs, wgts = [], []
+    for k in range(K):
+        dep_lists = []
+        for p in range(W):
+            n = int(rng.integers(0, D + 1))
+            if zero_dep_rows and p % 5 == 0:
+                n = 0
+            dep_lists.append(list(rng.integers(0, S, n)))
+        i, w = prepare_step_operands(dep_lists, W, list(range(min(W, S))) +
+                                     [0] * max(0, W - S))
+        pad = D - i.shape[1]
+        idxs.append(np.pad(i, ((0, 0), (0, pad))))
+        wgts.append(np.pad(w, ((0, 0), (0, pad))))
+    return jnp.asarray(np.stack(idxs)), jnp.asarray(np.stack(wgts))
+
+
+@pytest.mark.parametrize("K", [1, 4])
+@pytest.mark.parametrize("S,W,payload,D", [
+    (16, 16, 64, 3),    # square, aligned payload
+    (20, 16, 13, 5),    # halo-extended src, ragged payload
+    (7, 7, 130, 2),     # ragged rows, payload > one lane
+])
+@pytest.mark.parametrize("kind,iters", [("compute_bound", 8),
+                                        ("memory_bound", 3), ("empty", 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_taskbench_step_parity_sweep(K, S, W, payload, D, kind, iters, dtype):
+    """The megakernel (interpret) vs the pure-jnp step oracle: all kernel
+    kinds x dtypes x ragged shapes x ensemble K."""
+    src = jax.random.uniform(jax.random.PRNGKey(16), (K, S, payload),
+                             jnp.float32, 0.1, 1.0).astype(dtype)
+    idx, wgt = _random_step_operands(17, K, S, W, D)
+    got = taskbench_step_pallas(src, idx, wgt, kind=kind, iterations=iters,
+                                scratch=50, interpret=True)
+    want = ref.taskbench_step_ref(src, idx, wgt, kind=kind, iterations=iters,
+                                  scratch=50)
+    assert got.shape == (K, W, payload) and got.dtype == src.dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **tol(dtype))
+
+
+def test_taskbench_step_combine_modes_agree():
+    """gather vs onehot must be numerically interchangeable."""
+    K, S, W, P, D = 2, 12, 12, 24, 4
+    src = jax.random.uniform(jax.random.PRNGKey(18), (K, S, P),
+                             jnp.float32, 0.1, 1.0)
+    idx, wgt = _random_step_operands(19, K, S, W, D)
+    outs = [
+        taskbench_step_pallas(src, idx, wgt, kind="compute_bound",
+                              iterations=5, combine=mode, interpret=True)
+        for mode in ("gather", "onehot")
+    ]
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_taskbench_step_window_matches_gather():
+    """Window mode (shifted-slice FMAs) == gather mode on the same stencil."""
+    K, B, H, P = 2, 16, 1, 10
+    S = B + 2 * H
+    src = jax.random.uniform(jax.random.PRNGKey(20), (K, S, P),
+                             jnp.float32, 0.1, 1.0)
+    # stencil window: every row averages offsets {-1, 0, +1}
+    wgt_win = jnp.full((K, B, 2 * H + 1), 1.0 / 3.0, jnp.float32)
+    idx_win = jnp.zeros((K, B, 2 * H + 1), jnp.int32)
+    got = taskbench_step_pallas(src, idx_win, wgt_win, kind="compute_bound",
+                                iterations=4, combine="window", interpret=True)
+    # same dataflow via explicit gather operands
+    rows = jnp.arange(B)
+    idx_g = jnp.stack([rows, rows + 1, rows + 2], axis=1)[None].repeat(K, 0)
+    want = taskbench_step_pallas(src, idx_g.astype(jnp.int32), wgt_win,
+                                 kind="compute_bound", iterations=4,
+                                 combine="gather", interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_taskbench_step_block_rows_invariance():
+    K, S, W, P, D = 1, 32, 32, 16, 3
+    src = jax.random.uniform(jax.random.PRNGKey(21), (K, S, P),
+                             jnp.float32, 0.1, 1.0)
+    idx, wgt = _random_step_operands(22, K, S, W, D)
+    a = taskbench_step_pallas(src, idx, wgt, iterations=6, block_rows=8,
+                              interpret=True)
+    b = taskbench_step_pallas(src, idx, wgt, iterations=6, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_prepare_step_operands_self_pads_and_normalizes():
+    idx, wgt = prepare_step_operands([[1, 2], [0], [], [3, 3]], 4,
+                                     [0, 1, 2, 3])
+    np.testing.assert_array_equal(idx, [[1, 2], [0, 0], [2, 0], [3, 3]])
+    np.testing.assert_allclose(wgt, [[0.5, 0.5], [1.0, 0.0], [1.0, 0.0],
+                                     [0.5, 0.5]])
+    assert wgt.sum(axis=1).tolist() == [1.0, 1.0, 1.0, 1.0]
 
 
 # ----------------------------------------------------------------- rmsnorm

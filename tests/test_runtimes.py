@@ -15,6 +15,7 @@ from repro.core import (
     available_runtimes,
     get_runtime,
 )
+from repro.core import patterns as _patterns
 from repro.core.task_kernels import (
     apply_kernel,
     combine_all_to_all,
@@ -36,13 +37,14 @@ def graph(pattern, **kw):
 
 def test_registry_contents():
     names = available_runtimes()
-    for expected in ("fused", "serialized", "bsp", "bsp_scan", "overlap"):
+    for expected in ("fused", "serialized", "bsp", "bsp_scan", "overlap",
+                     "pallas_step"):
         assert expected in names
 
 
 @pytest.mark.parametrize("pattern", PATTERNS)
 @pytest.mark.parametrize("backend", ["serialized", "bsp", "bsp_scan",
-                                     "overlap"])
+                                     "overlap", "pallas_step"])
 def test_backend_matches_fused(pattern, backend):
     g = graph(pattern)
     rt = get_runtime(backend)
@@ -101,7 +103,57 @@ def test_dispatch_accounting():
     assert get_runtime("fused").dispatches_per_run(g) == 1
     assert get_runtime("bsp").dispatches_per_run(g) == 7
     assert get_runtime("bsp_scan").dispatches_per_run(g) == 1
+    assert get_runtime("pallas_step").dispatches_per_run(g) == 1
     assert get_runtime("serialized").dispatches_per_run(g) == 7 * 16
+
+
+# ------------------------------------------------ pallas_step (megakernel)
+
+
+@pytest.mark.parametrize("pattern", list(_patterns.HALO_PATTERNS))
+@pytest.mark.parametrize("K", [1, 4])
+def test_pallas_step_halo_patterns_ensembles(pattern, K):
+    """Acceptance: pallas_step runs every HALO_PATTERNS pattern and matches
+    fused per ensemble member for K in {1, 4} (interpret mode)."""
+    members = [
+        TaskGraph(steps=5, width=16, payload=8, pattern=pattern, radius=2,
+                  kernel=KernelSpec("compute_bound", 8), seed=k)
+        for k in range(K)
+    ]
+    ens = GraphEnsemble(members)
+    rt = get_runtime("pallas_step")
+    ok, why = rt.supports_ensemble(ens)
+    assert ok, why
+    outs = rt.execute_ensemble(ens)
+    for k, (g, out) in enumerate(zip(members, outs)):
+        ref = get_runtime("fused").execute(g)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"{pattern} member {k}")
+
+
+@pytest.mark.parametrize("combine", ["window", "gather", "onehot"])
+def test_pallas_step_combine_modes_match_fused(combine):
+    g = graph("nearest")
+    ref = get_runtime("fused").execute(g)
+    out = get_runtime("pallas_step", combine=combine).execute(g)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6,
+                               err_msg=combine)
+
+
+def test_pallas_step_kernel_kinds():
+    for kind in ("compute_bound", "memory_bound", "empty"):
+        g = graph("stencil_1d", kernel=KernelSpec(kind, 4, scratch=64))
+        ref = get_runtime("fused").execute(g)
+        out = get_runtime("pallas_step").execute(g)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6,
+                                   err_msg=kind)
+
+
+def test_pallas_step_rejects_non_halo_patterns():
+    rt = get_runtime("pallas_step")
+    for pattern in ("fft", "tree", "all_to_all", "spread"):
+        ok, why = rt.supports(graph(pattern))
+        assert not ok and "halo" in why
 
 
 def test_measure_returns_sane_sample():
@@ -147,7 +199,7 @@ def mixed_ensemble(**kw):
 
 
 @pytest.mark.parametrize("backend", ["fused", "serialized", "bsp",
-                                     "bsp_scan", "overlap"])
+                                     "bsp_scan", "overlap", "pallas_step"])
 def test_ensemble_members_match_fused(backend):
     """Core invariant, ensemble edition: every backend's concurrent run must
     reproduce, per member, the state of running that member alone."""
@@ -188,9 +240,78 @@ def test_ensemble_validation():
     with pytest.raises(ValueError):
         GraphEnsemble([])
     with pytest.raises(ValueError):
-        GraphEnsemble([g, TaskGraph(steps=5, width=8)])  # mismatched steps
-    with pytest.raises(ValueError):
         GraphEnsemble([g, TaskGraph(steps=4, width=4)]).dependency_arrays()
+
+
+def test_ensemble_heterogeneous_steps_metadata():
+    """Mismatched steps are allowed: lockstep T = max, members report own."""
+    ens = GraphEnsemble([TaskGraph(steps=4, width=8),
+                         TaskGraph(steps=7, width=8),
+                         TaskGraph(steps=1, width=8)])
+    assert ens.steps == 7
+    assert ens.member_steps == (4, 7, 1)
+    assert ens.heterogeneous_steps
+    assert ens.num_tasks == (4 + 7 + 1) * 8
+    assert not GraphEnsemble([TaskGraph(steps=4, width=8)]).heterogeneous_steps
+
+
+@pytest.mark.parametrize("backend", ["fused", "serialized", "bsp",
+                                     "bsp_scan", "overlap", "pallas_step"])
+def test_ensemble_heterogeneous_steps_match_fused(backend):
+    """Masked freezing: a member whose T is exhausted carries its final
+    state unchanged, so member k of the lockstep run == running member k
+    alone (its own T) under fused — for EVERY backend."""
+    base = dict(width=16, payload=8)
+    members = [
+        TaskGraph(steps=3, pattern="stencil_1d",
+                  kernel=KernelSpec("compute_bound", 8), seed=0, **base),
+        TaskGraph(steps=6, pattern="nearest", radius=2,
+                  kernel=KernelSpec("compute_bound", 32), seed=1, **base),
+        TaskGraph(steps=4, pattern="fft",
+                  kernel=KernelSpec("compute_bound", 4), seed=2, **base),
+        TaskGraph(steps=1, pattern="dom",
+                  kernel=KernelSpec("compute_bound", 8), seed=3, **base),
+    ]
+    ens = GraphEnsemble(members)
+    rt = get_runtime(backend)
+    ok, why = rt.supports_ensemble(ens)
+    if not ok:  # overlap/pallas_step refuse fft — drop unsupported members
+        ens = GraphEnsemble([g for g in members if rt.supports(g)[0]])
+        assert len(ens) >= 3, why
+        assert ens.heterogeneous_steps
+    outs = rt.execute_ensemble(ens)
+    for k, (g, out) in enumerate(zip(ens.members, outs)):
+        ref = get_runtime("fused").execute(g)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"{backend} member {k} T={g.steps}")
+
+
+def test_ensemble_heterogeneous_steps_nonstackable():
+    """Freezing also holds on the ragged-shape (tuple-carry) paths."""
+    members = [
+        TaskGraph(steps=5, width=16, payload=8, pattern="stencil_1d", seed=1),
+        TaskGraph(steps=2, width=8, payload=4, pattern="all_to_all", seed=2),
+        TaskGraph(steps=7, width=32, payload=8, pattern="spread", fanout=3,
+                  seed=3),
+    ]
+    ens = GraphEnsemble(members)
+    assert not ens.stackable and ens.heterogeneous_steps
+    for backend in ("fused", "serialized", "bsp", "bsp_scan"):
+        outs = get_runtime(backend).execute_ensemble(ens)
+        for g, out in zip(members, outs):
+            ref = get_runtime("fused").execute(g)
+            np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6,
+                                       err_msg=backend)
+
+
+def test_ensemble_heterogeneous_steps_dispatch_accounting():
+    """Frozen members must not be charged dispatches past their own T."""
+    ens = GraphEnsemble([TaskGraph(steps=3, width=8),
+                         TaskGraph(steps=7, width=8)])
+    assert get_runtime("bsp").ensemble_dispatches_per_run(ens) == 3 + 7
+    assert (get_runtime("serialized").ensemble_dispatches_per_run(ens)
+            == (3 + 7) * 8)
+    assert get_runtime("pallas_step").ensemble_dispatches_per_run(ens) == 1
 
 
 def test_ensemble_padded_dependency_arrays():
