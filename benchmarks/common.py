@@ -56,6 +56,10 @@ class SweepSpec:
     #: far less noisy than ratios across separately scheduled workers.
     compare_runtimes: Tuple[str, ...] = ()
     options: Dict = dataclasses.field(default_factory=dict)
+    #: label -> extra runtime options, measured back-to-back in the SAME
+    #: worker process (rows carry a "variant" key): the option-sweep
+    #: analogue of compare_runtimes, e.g. a steps_per_launch ladder.
+    option_variants: Dict = dataclasses.field(default_factory=dict)
 
     def resolved_width(self) -> int:
         return self.width or self.devices * self.overdecomposition
@@ -85,14 +89,17 @@ def run_sweep_inproc(spec: SweepSpec) -> List[Dict]:
             )
             for k in range(max(spec.ensemble, 1))
         ]
-        for name in runtimes:
-            rt = get_runtime(name, devices=devs, **spec.options)
+        variants = spec.option_variants or {"": {}}
+        for name, vlabel in [(n, vl) for n in runtimes for vl in variants]:
+            rt = get_runtime(name, devices=devs,
+                             **{**spec.options, **variants[vlabel]})
             serial_wall = None
             if spec.ensemble > 1:
                 ens = GraphEnsemble(members)
                 ok, why = rt.supports_ensemble(ens)
                 if not ok:
-                    rows.append({"runtime": name, "grain": grain, "skip": why})
+                    rows.append({"runtime": name, "variant": vlabel,
+                                 "grain": grain, "skip": why})
                     continue
                 sample, stats = rt.measure_ensemble(
                     ens, reps=spec.reps, warmup=spec.warmup)
@@ -106,12 +113,14 @@ def run_sweep_inproc(spec: SweepSpec) -> List[Dict]:
                 g = members[0]
                 ok, why = rt.supports(g)
                 if not ok:
-                    rows.append({"runtime": name, "grain": grain, "skip": why})
+                    rows.append({"runtime": name, "variant": vlabel,
+                                 "grain": grain, "skip": why})
                     continue
                 sample, stats = rt.measure(g, reps=spec.reps,
                                            warmup=spec.warmup)
             row = {
                 "runtime": name,
+                "variant": vlabel,
                 "grain": grain,
                 "wall": sample.wall_time,
                 "flops": sample.total_flops,
@@ -168,7 +177,9 @@ def backend_options_args(ap: argparse.ArgumentParser) -> None:
 
       --pallas             shorthand for use_pallas=True (per-body kernels)
       --backend-options    JSON dict of raw runtime options, e.g.
-                           '{"combine": "onehot", "unroll": 2}'
+                           '{"combine": "onehot", "unroll": 2}' or
+                           '{"steps_per_launch": 8}' (pallas_step temporal
+                           blocking; "auto" = VMEM tuner)
     """
     ap.add_argument("--pallas", action="store_true",
                     help="use the Pallas task-body kernels (use_pallas=True)")

@@ -1,20 +1,35 @@
-"""Fused-timestep floor: pallas_step vs fused wall/step at iterations=1.
+"""Fused-timestep floor: pallas_step vs fused, and launch amortization vs S.
 
 Fig-1-style sweep at the finest grain (iterations=1), where wall time per
 step measures the runtime's per-step control path, not arithmetic — the
-regime where the paper's METG collapses. `fused` pays one gather + one
-masked-mean chain + one body op per step; `pallas_step` executes the whole
-step as one fused kernel whose combine is a static chain of shifted-slice
-FMAs (see DESIGN.md §4). The recorded acceptance check: pallas_step's
-wall/step is STRICTLY lower than fused's at every width.
+regime where the paper's METG collapses. Two measurements:
 
-Both backends run back-to-back in one worker process per width
-(SweepSpec.compare_runtimes), so the ratio is not polluted by scheduling
-differences across workers. Outputs:
+  1. `fused` vs `pallas_step` (PR 2): one gather + masked-mean chain + body
+     op per step vs the whole step as one fused kernel. Acceptance:
+     pallas_step's wall/step STRICTLY lower than fused's at every width.
+  2. Temporal blocking (this PR): pallas_step with steps_per_launch =
+     S in {1, 2, 4, 8, 16} (+ the VMEM auto-tuner's pick). S timesteps
+     share one kernel launch and one deep-halo exchange, so launches and
+     exchanges per run drop by S x. The sweep runs MULTI-device (default
+     4): per-step cost at S=1 is dominated by the ring collective's
+     device rendezvous, which is precisely what blocking amortizes (on 1
+     device the exchange is an identity permute that XLA folds away, so
+     there is nothing left to amortize and the sweep would only measure
+     noise). Acceptance: wall/step monotonically non-increasing in S,
+     with S=8 at least 1.5x under S=1.
 
-  artifacts/bench/pallas_floor.csv   one row per (width, backend)
-  artifacts/bench/pallas_floor.json  summary incl. per-width ratios and the
-                                     strictly-lower verdict
+All variants of a width run back-to-back in ONE worker process
+(SweepSpec.compare_runtimes / option_variants), so ratios are not polluted
+by scheduling differences across workers. Outputs:
+
+  artifacts/bench/pallas_floor.csv   one row per (width, backend, variant)
+  artifacts/bench/pallas_floor.json  summary incl. per-width ratios, the
+                                     strictly-lower verdict, and the
+                                     steps_per_launch sweep + verdicts
+
+``--smoke`` shrinks the sweep to a seconds-long CI guard (tiny width/steps,
+no timing assertions — it exists so the launch-amortization artifact and
+the blocked code path can never silently bit-rot).
 """
 from __future__ import annotations
 
@@ -33,15 +48,37 @@ from benchmarks.common import (
 from repro.configs.taskbench import PRESETS
 
 WIDTHS = (64, 256, 1024, 4096)
+#: temporal-blocking depths swept (plus the auto-tuner row); widths for the
+#: sweep are kept moderate so the deep halo (2*S*r extra rows) stays a
+#: small fraction of the block and the measurement isolates launch count
+SWEEP_S = (1, 2, 4, 8, 16)
+SWEEP_WIDTHS = (256, 1024)
+SWEEP_DEVICES = 4
+
+
+def _per_step_walls(rows, steps, runtime):
+    """variant label -> best wall/step for one runtime's rows."""
+    walls = {}
+    for r in rows:
+        if "skip" in r or r["runtime"] != runtime:
+            continue
+        lbl = r.get("variant", "")
+        per_step = r["wall"] / steps
+        walls[lbl] = min(walls.get(lbl, per_step), per_step)
+    return walls
 
 
 def run(devices: int = 1, steps: int = 0, reps: int = 0,
-        widths=WIDTHS, payload: int = 64, options=None, verbose: bool = True):
+        widths=WIDTHS, sweep_widths=SWEEP_WIDTHS, sweep_s=SWEEP_S,
+        sweep_devices: int = SWEEP_DEVICES, payload: int = 64,
+        options=None, verbose: bool = True, smoke: bool = False):
     cfg = PRESETS["floor"]
     steps = steps or cfg.steps
     reps = reps or cfg.reps
     rows_out = []
     ratios = {}
+
+    # ---- 1. fused vs pallas_step (per-step launches, S=1) -----------------
     for width in widths:
         spec = SweepSpec(
             runtime=cfg.runtimes[0], compare_runtimes=cfg.runtimes,
@@ -59,7 +96,7 @@ def run(devices: int = 1, steps: int = 0, reps: int = 0,
                 continue
             per_step = r["wall"] / steps
             walls[r["runtime"]] = per_step
-            rows_out.append([r["runtime"], width, r["grain"], steps,
+            rows_out.append([r["runtime"], "", width, r["grain"], steps,
                              r["wall"], per_step, r["gran_us"],
                              r["dispatches"]])
         if "fused" in walls and "pallas_step" in walls:
@@ -70,26 +107,85 @@ def run(devices: int = 1, steps: int = 0, reps: int = 0,
                       f"{walls['pallas_step']*1e6:9.2f} us/step  "
                       f"(ratio {ratios[str(width)]:.3f})", flush=True)
 
+    # ---- 2. steps_per_launch sweep (launch amortization) ------------------
+    variants = {f"S{s}": {"steps_per_launch": s} for s in sweep_s}
+    variants["Sauto"] = {"steps_per_launch": "auto"}
+    sweep = {}
+    for width in sweep_widths:
+        spec = SweepSpec(
+            runtime="pallas_step", pattern="stencil_1d",
+            devices=sweep_devices, width=width, steps=steps,
+            # deep-S walls are short (tens of us/step x steps), so the
+            # best-of needs more reps than part 1 to beat scheduler jitter
+            # on the multiplexed host devices
+            grains=cfg.grains, reps=max(reps, 10) if not smoke else reps,
+            payload=payload, options=dict(options or {}),
+            option_variants=variants,
+        )
+        rows = run_worker(spec)
+        walls = _per_step_walls(rows, steps, "pallas_step")
+        sweep[str(width)] = walls
+        for r in rows:
+            if "skip" in r:
+                continue
+            rows_out.append([r["runtime"], r.get("variant", ""), width,
+                             r["grain"], steps, r["wall"], r["wall"] / steps,
+                             r["gran_us"], r["dispatches"]])
+        if verbose and walls:
+            ladder = "  ".join(
+                f"{lbl}={walls[lbl]*1e6:.2f}us"
+                for lbl in sorted(walls, key=lambda x: (len(x), x)))
+            print(f"floor W={width:5d} steps_per_launch: {ladder}",
+                  flush=True)
+
+    # verdicts over the numeric ladder (auto row reported but not judged)
+    monotone = bool(sweep)
+    s8_speedups = {}
+    for width, walls in sweep.items():
+        ladder = [walls.get(f"S{s}") for s in sweep_s]
+        ladder = [w for w in ladder if w is not None]
+        monotone = monotone and all(
+            b <= a for a, b in zip(ladder, ladder[1:]))
+        if walls.get("S1") and walls.get("S8"):
+            s8_speedups[width] = walls["S1"] / walls["S8"]
+    amortization_ok = bool(s8_speedups) and all(
+        v >= 1.5 for v in s8_speedups.values())
+
     strictly_lower = bool(ratios) and all(v < 1.0 for v in ratios.values())
     path_csv = write_csv(
         "pallas_floor.csv",
-        ["backend", "width", "grain", "steps", "wall_s", "wall_per_step_s",
-         "granularity_us", "dispatches"],
+        ["backend", "variant", "width", "grain", "steps", "wall_s",
+         "wall_per_step_s", "granularity_us", "dispatches"],
         rows_out,
     )
     path_json = bench_path("pallas_floor.json")
     with open(path_json, "w") as f:
         json.dump({
-            "devices": devices, "steps": steps, "payload": payload,
+            "devices": devices, "sweep_devices": sweep_devices,
+            "steps": steps, "payload": payload,
             "grain_iterations": list(cfg.grains),
+            "smoke": smoke,
             "pallas_over_fused_per_step": ratios,
             "pallas_step_strictly_lower": strictly_lower,
+            "steps_per_launch_values": list(sweep_s),
+            "steps_per_launch_sweep": sweep,
+            "s1_over_s8_speedup": s8_speedups,
+            "sweep_monotone_nonincreasing": monotone,
+            "amortization_ok_s8_1p5x": amortization_ok,
         }, f, indent=2)
     if verbose:
         print(f"pallas_step strictly lower wall/step than fused: "
               f"{strictly_lower}")
+        if sweep:
+            print(f"steps_per_launch sweep monotone: {monotone}; "
+                  f"S1/S8 speedups: "
+                  + ", ".join(f"W={w}: {v:.2f}x"
+                              for w, v in sorted(s8_speedups.items(),
+                                                 key=lambda kv: int(kv[0]))))
         print(f"wrote {path_csv} and {path_json}")
-    return {"ratios": ratios, "strictly_lower": strictly_lower}
+    return {"ratios": ratios, "strictly_lower": strictly_lower,
+            "sweep": sweep, "monotone": monotone,
+            "s8_speedups": s8_speedups, "amortization_ok": amortization_ok}
 
 
 def main(argv=None):
@@ -99,11 +195,35 @@ def main(argv=None):
                     help="override the floor preset's step count")
     ap.add_argument("--reps", type=int, default=0)
     ap.add_argument("--widths", default=",".join(str(w) for w in WIDTHS))
+    ap.add_argument("--sweep-widths",
+                    default=",".join(str(w) for w in SWEEP_WIDTHS),
+                    help="widths for the steps_per_launch sweep")
+    ap.add_argument("--sweep-s", default=",".join(str(s) for s in SWEEP_S),
+                    help="steps_per_launch depths to sweep")
+    ap.add_argument("--sweep-devices", type=int, default=SWEEP_DEVICES,
+                    help="device count for the steps_per_launch sweep "
+                         "(multi-device: the per-step collective is the "
+                         "cost blocking amortizes)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-long CI guard: tiny sweep, no assertions")
     backend_options_args(ap)
     a = ap.parse_args(argv)
     opts = parse_backend_options(a)
+    if a.smoke:
+        res = run(devices=a.devices, steps=17, reps=1, widths=(64,),
+                  sweep_widths=(64,), sweep_s=(1, 2, 4, 8),
+                  sweep_devices=2, options=opts, smoke=True)
+        # the smoke run guards the CODE PATHS (blocked kernel, deep
+        # exchange, artifact schema), not the timing verdicts — but every
+        # swept width must have actually produced variant rows (a width
+        # whose variants were all skipped means the blocked path never ran)
+        ok = bool(res["sweep"]) and all(res["sweep"].values())
+        return 0 if ok else 1
     run(devices=a.devices, steps=a.steps, reps=a.reps,
-        widths=tuple(int(w) for w in a.widths.split(",")), options=opts)
+        widths=tuple(int(w) for w in a.widths.split(",")),
+        sweep_widths=tuple(int(w) for w in a.sweep_widths.split(",")),
+        sweep_s=tuple(int(s) for s in a.sweep_s.split(",")),
+        sweep_devices=a.sweep_devices, options=opts)
     return 0
 
 

@@ -11,7 +11,8 @@
 `python -m benchmarks.run` runs the quick preset of everything;
 `--only fig1,table2` selects; `--paper` switches to the 1000-step protocol.
 `--pallas` / `--backend-options JSON` thread runtime options (Pallas
-variants, combine strategy, unroll, ...) through every figure via
+variants, combine strategy, unroll, pallas_step temporal blocking via
+'{"steps_per_launch": 8}' or "auto", ...) through every figure via
 SweepSpec.options. CSVs land in artifacts/bench/.
 """
 from __future__ import annotations

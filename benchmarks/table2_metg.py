@@ -10,6 +10,10 @@ so overdecomposition-via-ensembles (more graphs per core) lands next to
 overdecomposition-via-width (more points per core) in the same table.
 
 Output: artifacts/bench/table2.csv (one row per backend x od x K).
+
+pallas_step rows honor ``--backend-options '{"steps_per_launch": S}'``
+(or "auto"): METG under temporal blocking, with dispatch counts reporting
+true launch counts (ceil of T/S).
 """
 from __future__ import annotations
 

@@ -103,19 +103,47 @@ def ring_perms(num_devices: int, axis: str = "shard"):
 
 def exchange_halos(local: jax.Array, r: int, num_devices: int,
                    axis: str = "shard", *, row_axis: int = 0):
-    """Ring-exchange r edge rows each way.
+    """Ring-exchange r edge rows each way (multi-hop when r exceeds a block).
 
-    Returns (recv_left, recv_right): rows that sit immediately left/right of
-    this device's block in global order (wrapped at the ends; wrap values are
-    masked off by the combine for non-periodic patterns). ``row_axis`` is the
-    point-row dimension — 0 for a (B, payload) block, 1 for an ensemble's
-    stacked (K, B, payload) block, where one exchange moves every member's
-    halos at once.
+    Returns (recv_left, recv_right): the r rows that sit immediately
+    left/right of this device's block in global order (wrapped at the ends;
+    wrap values are masked off by the combine for non-periodic patterns).
+    ``row_axis`` is the point-row dimension — 0 for a (B, payload) block, 1
+    for an ensemble's stacked (K, B, payload) block, where one exchange
+    moves every member's halos at once.
+
+    ``r <= B`` is one ppermute of r sliced edge rows per direction (the
+    per-step fast path). Deep halos (``r > B``, e.g. the temporal-blocked
+    megakernel's S*radius rows) compose ``ceil(r / B)`` whole-block ring
+    shifts per direction: hop h delivers the block h devices away, the
+    blocks concatenate in global row order, and the innermost r rows are
+    returned. Depths past a full ring wrap (hop count may exceed the device
+    count) simply revisit blocks, which is exactly the periodic/mod-W
+    semantics the halo combines expect.
     """
     fwd, bwd = ring_perms(num_devices, axis)
     n = local.shape[row_axis]
-    last = jax.lax.slice_in_dim(local, n - r, n, axis=row_axis)
-    first = jax.lax.slice_in_dim(local, 0, r, axis=row_axis)
-    recv_left = jax.lax.ppermute(last, axis, fwd)  # from d-1: its last r
-    recv_right = jax.lax.ppermute(first, axis, bwd)  # from d+1: its first r
+    if r <= n:
+        last = jax.lax.slice_in_dim(local, n - r, n, axis=row_axis)
+        first = jax.lax.slice_in_dim(local, 0, r, axis=row_axis)
+        recv_left = jax.lax.ppermute(last, axis, fwd)  # from d-1: its last r
+        recv_right = jax.lax.ppermute(first, axis, bwd)  # from d+1: its first r
+        return recv_left, recv_right
+
+    hops = -(-r // n)  # ceil: whole-block shifts per direction
+    left_blocks = []   # hop h holds block d-h: collect nearest-first
+    right_blocks = []  # hop h holds block d+h
+    cur_l = cur_r = local
+    for _ in range(hops):
+        cur_l = jax.lax.ppermute(cur_l, axis, fwd)
+        cur_r = jax.lax.ppermute(cur_r, axis, bwd)
+        left_blocks.append(cur_l)
+        right_blocks.append(cur_r)
+    # global row order: [d-hops .. d-1] on the left, [d+1 .. d+hops] right
+    left_full = jnp.concatenate(list(reversed(left_blocks)), axis=row_axis)
+    right_full = jnp.concatenate(right_blocks, axis=row_axis)
+    total = hops * n
+    recv_left = jax.lax.slice_in_dim(
+        left_full, total - r, total, axis=row_axis)
+    recv_right = jax.lax.slice_in_dim(right_full, 0, r, axis=row_axis)
     return recv_left, recv_right

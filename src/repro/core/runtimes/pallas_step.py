@@ -1,7 +1,7 @@
-"""`pallas_step` runtime — one fused megakernel launch per timestep.
+"""`pallas_step` runtime — fused megakernel launches, temporally blockable.
 
 The sixth rung of the backend ladder: like `bsp_scan` the whole timestep
-loop lives in one jit (shard_map over devices, lax.scan over steps), but
+loop lives in one jit (shard_map over devices, lax.scan over launches), but
 where every other backend emits one gather + one combine + one body op per
 dependency slot per step, this backend lowers the ENTIRE step — gather the
 padded dependency slots from the previous-state buffer, masked-mean
@@ -11,26 +11,45 @@ measures XLA op-dispatch overhead; this one's floor is the kernel itself,
 which is the fused per-task control path Task Bench (SC'20) shows is needed
 for sub-microsecond METG.
 
+Temporal blocking (``steps_per_launch=S``): after PR 2 the remaining
+per-step cost was one kernel launch plus one ring halo exchange PER STEP.
+Since every halo-expressible pattern advances at most ``r`` rows of
+influence per step, exchanging a deep halo of ``S*r`` rows once lets each
+device advance S full timesteps locally before communicating again — the
+classic deep-halo stencil optimization applied to the whole Task Bench
+step. The loop becomes ``ceil((T-1)/S)`` launches; each launch's kernel
+iterates combine + body S times on a working buffer whose valid region
+shrinks by ``r`` rows per inner step (kernels/taskbench_step.py has the
+kernel-side contract). Per-row combine weights ride along: they are
+indexed by fixed global row id, so ONE deep exchange of the weight (and,
+for gather/onehot, relative-offset) tables before the scan gives every
+working row its exact edge-clipped weights at every depth. Heterogeneous
+``steps`` freeze at launch granularity through a per-depth activity mask
+baked host-side into the scan inputs — the final partial launch of any run
+is the same mask (the "masked tail"). ``steps_per_launch`` accepts an int,
+``"auto"`` (VMEM-budget tuner, kernels/schedule.py), and defaults to 1
+(the PR-2 per-step behavior).
+
 Dataflow: points are block-distributed like `bsp`; halo-expressible
-patterns exchange r edge rows per ring direction (`_halo.exchange_halos`),
-and the megakernel gathers from the halo-EXTENDED local block through
-host-precomputed (idx, wgt) operands — dependency slots rewritten to
-extended-block positions with weights pre-normalized to 1/live-count, and
-zero-dep rows self-padded, so the kernel has no edge/wrap/empty branches.
+patterns exchange ``S*r`` edge rows per ring direction
+(`_halo.exchange_halos`, multi-hop when the depth exceeds a block), and the
+megakernel gathers from the halo-EXTENDED local block through
+host-precomputed (idx, wgt) operands — weights pre-normalized to
+1/live-count and zero-dep rows self-padded, so the kernel has no
+edge/wrap/empty branches.
 
 Ensembles: a stackable ensemble with a uniform KernelSpec runs ALL K
 members' combines and bodies in the SAME launch (the megakernel's leading K
-axis); one ring exchange moves every member's halos at once. Mixed-spec or
-ragged-shape ensembles fall back to one launch per member inside the same
-jitted scan. Heterogeneous ``steps`` freeze by masking: a member past its
-own T carries its state through `jnp.where` untouched.
+axis); one deep ring exchange moves every member's halos for S steps at
+once. Mixed-spec or ragged-shape ensembles fall back to one launch per
+member inside the same jitted scan.
 
-Options: combine="gather"|"onehot" (in-kernel gather vs MXU one-hot matmul
-— see taskbench_step.py), block_rows, unroll.
+Options: combine="window"|"gather"|"onehot" (see taskbench_step.py),
+steps_per_launch=int|"auto", block_rows, unroll.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Tuple
+from typing import Callable, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +65,12 @@ from repro.core.runtimes.base import register
 from repro.core.runtimes.bsp import AXIS, _BspBase
 from repro.core.task_kernels import KernelSpec
 from repro.kernels import ops as _kops
-from repro.kernels.taskbench_step import prepare_step_operands
+from repro.kernels import schedule as _schedule
+from repro.kernels.taskbench_step import (
+    WEIGHT_ACCUM_DTYPE,
+    finalize_weights,
+    prepare_step_operands,
+)
 
 
 def _ext_dep_operands(
@@ -81,6 +105,34 @@ def _ext_dep_operands(
     return prepare_step_operands(ext_lists, W, selfs)
 
 
+def _rel_dep_operands(graph: TaskGraph) -> Tuple[np.ndarray, np.ndarray]:
+    """(W, D) SIGNED-offset operands for the temporal-blocked gather modes.
+
+    Row p's dependency q is stored as its window offset o (q == (p+o) mod
+    W), not an absolute buffer position: offsets are a property of the
+    global row alone, so the runtime can deep-halo-exchange these tables
+    like state and convert to absolute working-buffer rows with a single
+    ``+ arange(M)`` — every extended row then gathers its own dependencies
+    at any launch depth. Zero-dep rows self-pad at offset 0.
+    """
+    r = _patterns.halo_radius(graph)
+    if r < 0 or graph.period != 1:
+        raise ValueError(f"{graph.pattern} is not halo-expressible")
+    W = graph.width
+    rel_lists: List[List[int]] = []
+    for p in range(W):
+        offs: List[int] = []
+        for q in graph.dependencies(1, p):
+            for o in range(-r, r + 1):
+                if (p + o) % W == q:
+                    offs.append(o)
+                    break
+            else:
+                raise ValueError(f"dep {q} of point {p} outside halo {r}")
+        rel_lists.append(offs)
+    return prepare_step_operands(rel_lists, W, [0] * W)
+
+
 def _self_operands(width: int, block: int) -> Tuple[np.ndarray, np.ndarray]:
     """(W, 1) identity operands (t=0: body only, src = raw local block)."""
     selfs = [p % block for p in range(width)]
@@ -97,7 +149,10 @@ def _window_operands(
     shifted-slice FMAs — no gather. Edge clipping (stencil_1d, dom), the
     per-row keep set (random_nearest), duplicate window wraps (nearest
     with W <= 2r), and the zero-dep self-keep rule are all encoded in the
-    weights; idx is unused in this mode (returned as zeros).
+    weights; idx is unused in this mode (returned as zeros). Weights are
+    per GLOBAL row and patterns have period 1, so the same row's weights
+    are correct at every timestep — the property the temporal-blocked path
+    relies on when it exchanges these tables as deep halos.
     """
     r = _patterns.halo_radius(graph)
     if r < 0 or graph.period != 1:
@@ -108,7 +163,7 @@ def _window_operands(
     # dummy); a single column keeps the shard_map row-sharding contract
     # without shipping a dead (W, D) block
     idx = np.zeros((W, 1), dtype=np.int32)
-    wgt = np.zeros((W, D), dtype=np.float64)
+    wgt = np.zeros((W, D), dtype=WEIGHT_ACCUM_DTYPE)
     for p in range(W):
         deps = graph.dependencies(1, p)
         if not deps:
@@ -122,7 +177,56 @@ def _window_operands(
                     break
             else:
                 raise ValueError(f"dep {q} of point {p} outside halo {r}")
-    return idx, wgt.astype(np.float32)
+    return idx, finalize_weights(wgt)
+
+
+def _extend_state(s: jax.Array, depth: int, num_devices: int,
+                  *, row_axis: int = 0) -> jax.Array:
+    """Halo-extend a local block by ``depth`` rows per side (ring exchange;
+    multi-hop past the block). Identity at depth 0."""
+    if depth == 0:
+        return s
+    rl, rr = _halo.exchange_halos(s, depth, num_devices, AXIS,
+                                  row_axis=row_axis)
+    return jnp.concatenate([rl, s, rr], axis=row_axis)
+
+
+def _extend_tables(idx: jax.Array, wgt: jax.Array, depth: int,
+                   num_devices: int, mode: str, *, row_axis: int = 0):
+    """Deep-exchange the per-row operand tables ONCE for a blocked run.
+
+    Weights (per global row, depth-invariant) extend exactly like state.
+    Gather/onehot offset tables additionally rebase from signed offsets to
+    absolute working-buffer rows via ``+ arange(M)``; the clip only ever
+    binds on edge-garbage rows, which are never consumed by valid rows.
+    Window mode returns idx untouched (it is a dummy the kernel replaces).
+    """
+    wext = _extend_state(wgt, depth, num_devices, row_axis=row_axis)
+    if mode == "window":
+        return idx, wext
+    rel = _extend_state(idx, depth, num_devices, row_axis=row_axis)
+    m = rel.shape[row_axis]
+    shape = [1] * rel.ndim
+    shape[row_axis] = m
+    rows = jnp.arange(m, dtype=jnp.int32).reshape(shape)
+    return jnp.clip(rel + rows, 0, m - 1), wext
+
+
+def _act_schedule(
+    member_steps: Sequence[int], lockstep_steps: int, s: int
+) -> np.ndarray:
+    """(L, K, S) per-depth activity masks for the blocked launch loop.
+
+    Launch l's inner step d executes lockstep timestep t = 1 + l*S + d;
+    member k is active iff t < T_k (its own horizon) — the same predicate
+    the per-step backends apply with `jnp.where`, here frozen INTO the
+    launch schedule host-side. The final launch of any run carries the
+    masked tail ((T-1) mod S trailing zeros for every member).
+    """
+    L = max(1, -(-(lockstep_steps - 1) // s)) if lockstep_steps > 1 else 0
+    t = 1 + (np.arange(L)[:, None, None] * s + np.arange(s)[None, None, :])
+    msteps = np.asarray(member_steps, np.int64)[None, :, None]
+    return (t < msteps).astype(np.float32)
 
 
 @register
@@ -139,9 +243,8 @@ class PallasStepRuntime(_BspBase):
                 f"pattern {graph.pattern} is not halo-expressible; "
                 f"pallas_step fuses halo-pattern steps only"
             )
-        B = graph.width // D
-        if r > B:
-            return False, f"halo radius {r} exceeds block {B} (multi-hop needed)"
+        # no r <= block restriction: _halo.exchange_halos goes multi-hop
+        # when a (deep) halo exceeds the local block
         return True, ""
 
     # ------------------------------------------------------------ operands
@@ -150,7 +253,7 @@ class PallasStepRuntime(_BspBase):
         return str(self.options.get("combine", "window"))
 
     def _operands(self, graph: TaskGraph, halo: int):
-        """Host-built (idx, wgt, idx0, wgt0) for one member graph.
+        """Host-built (idx, wgt, idx0, wgt0) for one member graph (S=1).
 
         The t>=1 operands follow the selected combine mode; the t=0 (body
         only) call is always a 1-column self window, which is identical
@@ -164,6 +267,21 @@ class PallasStepRuntime(_BspBase):
         idx0, wgt0 = _self_operands(graph.width, B)
         return idx, wgt, idx0, wgt0
 
+    def _blocked_operands(self, graph: TaskGraph, halo: int):
+        """Host-built (idx, wgt, idx0, wgt0) for the blocked path.
+
+        Window mode reuses the per-global-row weight table; gather/onehot
+        switch to SIGNED offsets (_rel_dep_operands) so the tables can be
+        deep-halo-exchanged and rebased onto the working buffer in-scan.
+        """
+        B = self._block(graph)
+        if self._combine_mode() == "window":
+            idx, wgt = _window_operands(graph, halo)
+        else:
+            idx, wgt = _rel_dep_operands(graph)
+        idx0, wgt0 = _self_operands(graph.width, B)
+        return idx, wgt, idx0, wgt0
+
     def _kernel_kw(self, spec: KernelSpec) -> dict:
         kw = dict(
             kind=spec.kind, iterations=spec.iterations, scratch=spec.scratch,
@@ -173,14 +291,63 @@ class PallasStepRuntime(_BspBase):
             kw["block_rows"] = int(self.options["block_rows"])
         return kw
 
+    # ------------------------------------------------------- launch depth
+
+    def _steps_per_launch(self, block: int, radius: int, payload: int,
+                          total_steps: int) -> int:
+        return _schedule.resolve_steps_per_launch(
+            self.options.get("steps_per_launch"),
+            block=block, radius=radius, payload=payload,
+            total_steps=total_steps, combine=self._combine_mode(),
+        )
+
+    def _graph_steps_per_launch(self, graph: TaskGraph) -> int:
+        return self._steps_per_launch(
+            self._block(graph), _patterns.halo_radius(graph), graph.payload,
+            graph.steps,
+        )
+
+    def _ensemble_steps_per_launch(self, ensemble: GraphEnsemble) -> int:
+        """Common launch depth for an ensemble: one cadence for all members
+        (launch boundaries are shared), so take the most conservative
+        member's resolved depth."""
+        members = ensemble.members
+        if self._is_stacked(ensemble):
+            H = max(_patterns.halo_radius(g) for g in members)
+            return self._steps_per_launch(
+                self._block(members[0]), H, members[0].payload, ensemble.steps
+            )
+        return min(
+            self._steps_per_launch(
+                self._block(g), _patterns.halo_radius(g), g.payload,
+                ensemble.steps,
+            )
+            for g in members
+        )
+
+    @staticmethod
+    def _is_stacked(ensemble: GraphEnsemble) -> bool:
+        return ensemble.stackable and len({g.kernel for g in ensemble.members}) == 1
+
+    @staticmethod
+    def _launches(total_steps: int, s: int) -> int:
+        """Kernel launches for one member's run: the t=0 body-only launch
+        plus ceil((T-1)/S) blocked combine launches."""
+        if total_steps <= 1:
+            return 1
+        return 1 + -(-(total_steps - 1) // s)
+
     # ------------------------------------------------------- single graph
 
     def build(self, graph: TaskGraph) -> Callable[[jax.Array], jax.Array]:
         self._require_support(graph)
+        H = _patterns.halo_radius(graph)
+        S = self._graph_steps_per_launch(graph)
+        if S > 1:
+            return self._build_blocked(graph, S)
         unroll = int(self.options.get("unroll", 1))
         mesh = self._mesh()
         D = len(self.devices)
-        H = _patterns.halo_radius(graph)
         kw = self._kernel_kw(graph.kernel)
         idx, wgt, idx0, wgt0 = self._operands(graph, H)
 
@@ -193,12 +360,7 @@ class PallasStepRuntime(_BspBase):
                 return state
 
             def body(s, _):
-                if H > 0:
-                    rl, rr = _halo.exchange_halos(s, H, D, AXIS)
-                    ext = jnp.concatenate([rl, s, rr], axis=0)
-                else:
-                    ext = s
-                return megastep(ext, i, w), None
+                return megastep(_extend_state(s, H, D), i, w), None
 
             state, _ = jax.lax.scan(
                 body, state, None, length=graph.steps - 1, unroll=unroll
@@ -217,14 +379,65 @@ class PallasStepRuntime(_BspBase):
         )
         return lambda init: fn(jax.device_put(init, sh), *consts)
 
+    def _build_blocked(self, graph: TaskGraph, S: int) -> Callable:
+        """ceil((T-1)/S) launches: one deep exchange + one S-step kernel
+        per launch instead of one exchange + one launch per step."""
+        unroll = int(self.options.get("unroll", 1))
+        mesh = self._mesh()
+        D = len(self.devices)
+        H = _patterns.halo_radius(graph)
+        depth = S * H
+        mode = self._combine_mode()
+        kw0 = self._kernel_kw(graph.kernel)
+        kwb = dict(kw0, steps_per_launch=S)
+        kwb.pop("block_rows", None)  # blocked path: one program per member
+        idx, wgt, idx0, wgt0 = self._blocked_operands(graph, H)
+        acts = _act_schedule((graph.steps,), graph.steps, S)[:, 0]  # (L, S)
+        T = graph.steps
+
+        def local_run(local, i, w, i0, w0, act_seq):
+            state = _kops.taskbench_step(
+                local[None], i0[None], w0[None], **kw0)[0]  # t=0: body only
+            if T == 1:
+                return state
+            B = local.shape[0]
+            # the per-row operand tables are deep-exchanged ONCE: every
+            # working row then owns its exact (edge-clipped) weights
+            iext, wext = _extend_tables(i, w, depth, D, mode)
+
+            def body(s, a):  # a: (S,) per-depth activity
+                ext = _extend_state(s, depth, D)
+                nf = _kops.taskbench_step(
+                    ext[None], iext[None], wext[None], a[None], **kwb)[0]
+                return jax.lax.slice_in_dim(nf, depth, depth + B, axis=0), None
+
+            state, _ = jax.lax.scan(body, state, act_seq, unroll=unroll)
+            return state
+
+        fn = jax.jit(
+            shard_map(
+                local_run, mesh=mesh, check_vma=False,
+                in_specs=(P(AXIS),) * 5 + (P(),), out_specs=P(AXIS),
+            )
+        )
+        sh = NamedSharding(mesh, P(AXIS))
+        rep = NamedSharding(mesh, P())
+        consts = tuple(
+            jax.device_put(jnp.asarray(a), sh) for a in (idx, wgt, idx0, wgt0)
+        ) + (jax.device_put(jnp.asarray(acts), rep),)
+        return lambda init: fn(jax.device_put(init, sh), *consts)
+
     # ---------------------------------------------------------- ensembles
 
     def build_ensemble(self, ensemble: GraphEnsemble) -> Callable:
         self._require_ensemble_support(ensemble)
-        members = ensemble.members
-        specs = [g.kernel for g in members]
-        if ensemble.stackable and len(set(specs)) == 1:
+        S = self._ensemble_steps_per_launch(ensemble)
+        if self._is_stacked(ensemble):
+            if S > 1:
+                return self._build_ensemble_stacked_blocked(ensemble, S)
             return self._build_ensemble_stacked(ensemble)
+        if S > 1:
+            return self._build_ensemble_tuple_blocked(ensemble, S)
         return self._build_ensemble_tuple(ensemble)
 
     def _build_ensemble_stacked(self, ensemble: GraphEnsemble) -> Callable:
@@ -241,16 +454,7 @@ class PallasStepRuntime(_BspBase):
         member_steps = np.asarray(ensemble.member_steps, np.int32)
 
         ops4 = [self._operands(g, H) for g in members]
-
-        def stack(j):  # pad every member's slot dim to the group max, stack
-            dmax = max(o[j].shape[1] for o in ops4)
-            return np.stack([
-                np.pad(o[j], ((0, 0), (0, dmax - o[j].shape[1])))
-                for o in ops4
-            ])
-
-        idx, wgt = stack(0), stack(1)
-        idx0, wgt0 = stack(2), stack(3)
+        idx, wgt, idx0, wgt0 = _stack_operands(ops4)
 
         def megastep(ext_src, i, w):  # (K, S, P), (K, B, D'), (K, B, D')
             return _kops.taskbench_step(ext_src, i, w, **kw)
@@ -261,12 +465,7 @@ class PallasStepRuntime(_BspBase):
                 return state
 
             def body(s, t):
-                if H > 0:
-                    rl, rr = _halo.exchange_halos(s, H, D, AXIS, row_axis=1)
-                    ext = jnp.concatenate([rl, s, rr], axis=1)
-                else:
-                    ext = s
-                nxt = megastep(ext, i, w)
+                nxt = megastep(_extend_state(s, H, D, row_axis=1), i, w)
                 if hetero:  # freeze members whose own T is exhausted
                     active = (t < msteps)[:, None, None]
                     nxt = jnp.where(active, nxt, s)
@@ -294,6 +493,60 @@ class PallasStepRuntime(_BspBase):
 
         return run
 
+    def _build_ensemble_stacked_blocked(
+        self, ensemble: GraphEnsemble, S: int
+    ) -> Callable:
+        """All K members share each deep exchange AND each S-step launch."""
+        members = ensemble.members
+        K = len(members)
+        unroll = int(self.options.get("unroll", 1))
+        mesh = self._mesh()
+        D = len(self.devices)
+        H = max(_patterns.halo_radius(g) for g in members)
+        depth = S * H
+        mode = self._combine_mode()
+        kw0 = self._kernel_kw(members[0].kernel)
+        kwb = dict(kw0, steps_per_launch=S)
+        kwb.pop("block_rows", None)
+        steps = ensemble.steps
+
+        ops4 = [self._blocked_operands(g, H) for g in members]
+        idx, wgt, idx0, wgt0 = _stack_operands(ops4)
+        acts = _act_schedule(ensemble.member_steps, steps, S)  # (L, K, S)
+
+        def local_run(local, i, w, i0, w0, act_seq):  # local (K, B, P)
+            state = _kops.taskbench_step(local, i0, w0, **kw0)
+            if steps == 1:
+                return state
+            B = local.shape[1]
+            iext, wext = _extend_tables(i, w, depth, D, mode, row_axis=1)
+
+            def body(s, a):  # a: (K, S) per-member per-depth activity
+                ext = _extend_state(s, depth, D, row_axis=1)
+                nf = _kops.taskbench_step(ext, iext, wext, a, **kwb)
+                return jax.lax.slice_in_dim(nf, depth, depth + B, axis=1), None
+
+            state, _ = jax.lax.scan(body, state, act_seq, unroll=unroll)
+            return state
+
+        fn = jax.jit(
+            shard_map(
+                local_run, mesh=mesh, check_vma=False,
+                in_specs=(P(None, AXIS),) * 5 + (P(),), out_specs=P(None, AXIS),
+            )
+        )
+        sh = NamedSharding(mesh, P(None, AXIS))
+        rep = NamedSharding(mesh, P())
+        consts = tuple(
+            jax.device_put(jnp.asarray(a), sh) for a in (idx, wgt, idx0, wgt0)
+        ) + (jax.device_put(jnp.asarray(acts), rep),)
+
+        def run(inits):
+            out = fn(jax.device_put(jnp.stack(inits), sh), *consts)
+            return tuple(out[k] for k in range(K))
+
+        return run
+
     def _build_ensemble_tuple(self, ensemble: GraphEnsemble) -> Callable:
         """Mixed specs/shapes: one launch per member, still one jitted scan."""
         members = ensemble.members
@@ -310,11 +563,7 @@ class PallasStepRuntime(_BspBase):
             kw = kws[k]
 
             def step(s, i, w):
-                if H > 0:
-                    rl, rr = _halo.exchange_halos(s, H, D, AXIS)
-                    ext = jnp.concatenate([rl, s, rr], axis=0)
-                else:
-                    ext = s
+                ext = _extend_state(s, H, D)
                 return _kops.taskbench_step(ext[None], i[None], w[None], **kw)[0]
 
             return step
@@ -357,8 +606,102 @@ class PallasStepRuntime(_BspBase):
             tuple(jax.device_put(x, sh) for x in inits), consts
         )
 
+    def _build_ensemble_tuple_blocked(
+        self, ensemble: GraphEnsemble, S: int
+    ) -> Callable:
+        """Mixed specs/shapes, blocked: one S-step launch per member per
+        scan iteration, launch cadence (and act schedule) shared."""
+        members = ensemble.members
+        K = len(members)
+        unroll = int(self.options.get("unroll", 1))
+        mesh = self._mesh()
+        D = len(self.devices)
+        steps = ensemble.steps
+        mode = self._combine_mode()
+        halos = [_patterns.halo_radius(g) for g in members]
+        depths = [S * h for h in halos]
+        kws = [self._kernel_kw(g.kernel) for g in members]
+        kwbs = [dict(kw, steps_per_launch=S) for kw in kws]
+        for kwb in kwbs:
+            kwb.pop("block_rows", None)
+        ops4 = [self._blocked_operands(g, h) for g, h in zip(members, halos)]
+        acts = _act_schedule(ensemble.member_steps, steps, S)  # (L, K, S)
+
+        def local_run(states, operands, act_seq):
+            states = tuple(
+                _kops.taskbench_step(s[None], o[2][None], o[3][None], **kw)[0]
+                for s, o, kw in zip(states, operands, kws)
+            )
+            if steps == 1:
+                return states
+
+            exts = [  # per member: deep-exchanged (iext, wext) tables
+                _extend_tables(o[0], o[1], depths[k], D, mode)
+                for k, o in enumerate(operands)
+            ]
+
+            def body(ss, a):  # a: (K, S)
+                nxt = []
+                for k, s in enumerate(ss):
+                    dep = depths[k]
+                    B = s.shape[0]
+                    ext = _extend_state(s, dep, D)
+                    iext, wext = exts[k]
+                    nf = _kops.taskbench_step(
+                        ext[None], iext[None], wext[None], a[k][None],
+                        **kwbs[k])[0]
+                    nxt.append(
+                        jax.lax.slice_in_dim(nf, dep, dep + B, axis=0))
+                return tuple(nxt), None
+
+            states, _ = jax.lax.scan(body, states, act_seq, unroll=unroll)
+            return states
+
+        fn = jax.jit(
+            shard_map(
+                local_run, mesh=mesh, check_vma=False,
+                in_specs=(P(AXIS), P(AXIS), P()), out_specs=P(AXIS),
+            )
+        )
+        sh = NamedSharding(mesh, P(AXIS))
+        rep = NamedSharding(mesh, P())
+        consts = tuple(
+            tuple(jax.device_put(jnp.asarray(a), sh) for a in o) for o in ops4
+        )
+        acts_dev = jax.device_put(jnp.asarray(acts), rep)
+        return lambda inits: fn(
+            tuple(jax.device_put(x, sh) for x in inits), consts, acts_dev
+        )
+
+    # ----------------------------------------------------------- accounting
+
     def dispatches_per_run(self, graph: TaskGraph) -> int:
-        return 1
+        """Actual kernel launches: the t=0 body-only launch plus
+        ceil((T-1)/S) blocked combine launches (S=1 degenerates to T)."""
+        return self._launches(graph.steps, self._graph_steps_per_launch(graph))
 
     def ensemble_dispatches_per_run(self, ensemble: GraphEnsemble) -> int:
-        return 1
+        """Stacked ensembles batch all K members into each launch; the
+        tuple fallback launches each member every scan iteration (frozen
+        members included — the kernel runs, the mask discards), so it pays
+        K times the launch count."""
+        S = self._ensemble_steps_per_launch(ensemble)
+        launches = self._launches(ensemble.steps, S)
+        if self._is_stacked(ensemble):
+            return launches
+        return launches * len(ensemble.members)
+
+
+def _stack_operands(ops4):
+    """Stack per-member (idx, wgt, idx0, wgt0) on a leading K axis, padding
+    every member's slot dim to the group max (idx 0 / weight 0: a harmless
+    self-or-row-0 gather at weight zero)."""
+
+    def stack(j):
+        dmax = max(o[j].shape[1] for o in ops4)
+        return np.stack([
+            np.pad(o[j], ((0, 0), (0, dmax - o[j].shape[1])))
+            for o in ops4
+        ])
+
+    return stack(0), stack(1), stack(2), stack(3)

@@ -46,14 +46,17 @@ def taskbench_memory(x: jax.Array, iterations: int, scratch: int) -> jax.Array:
 
 
 def taskbench_step(
-    src: jax.Array, idx: jax.Array, wgt: jax.Array, **kw
+    src: jax.Array, idx: jax.Array, wgt: jax.Array, act=None, **kw
 ) -> jax.Array:
-    """Fused Task Bench timestep (gather + combine + body) for K graphs.
+    """Fused Task Bench timestep(s) (gather + combine + body) for K graphs.
 
-    See repro.kernels.taskbench_step for the operand contract; this wrapper
-    only auto-selects interpret mode off-TPU.
+    See repro.kernels.taskbench_step for the operand contract — including
+    the temporal-blocked ``steps_per_launch`` path, which requires the
+    (K, S) ``act`` depth mask; this wrapper only auto-selects interpret
+    mode off-TPU.
     """
-    return taskbench_step_pallas(src, idx, wgt, interpret=_interpret(), **kw)
+    return taskbench_step_pallas(src, idx, wgt, act,
+                                 interpret=_interpret(), **kw)
 
 
 def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6,

@@ -1,0 +1,114 @@
+"""Launch-depth auto-tuner for the temporal-blocked megakernel.
+
+Temporal blocking (``taskbench_step.py``, ``steps_per_launch=S``) trades
+VMEM residency for launch amortization: the working buffer grows by
+``2*S*radius`` rows (deep halo) and must stay resident for all S inner
+steps, because inner steps couple every row (no row grid). The right S is
+therefore a function of the *shape* — block rows, halo radius, payload —
+and the VMEM budget, not a constant. This module owns that policy so the
+runtime, the benchmarks, and the tests agree on one sizing rule.
+
+``steps_per_launch`` runtime option values:
+
+  1 / None        single-step launches (the PR-2 behavior; default)
+  "auto" / 0      pick the deepest candidate whose working set fits VMEM
+  any int > 1     explicit depth, clamped to the graph's combine-step count
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+#: Half of a TPU core's ~16 MiB of VMEM: the working buffer coexists with
+#: the weight/idx operands, the +-halo padded copy, and the f32 accumulator.
+DEFAULT_VMEM_BUDGET = 8 * 2 ** 20
+
+#: Depths the auto-tuner considers (deepest first). Powers of two keep the
+#: benchmark sweep S in {1, 2, 4, 8, 16} aligned with what "auto" can pick.
+CANDIDATES = (16, 8, 4, 2, 1)
+
+_LANE = 128  # payload pads to the TPU lane multiple inside the kernel
+
+
+def blocked_working_set_bytes(
+    block: int,
+    radius: int,
+    steps_per_launch: int,
+    payload: int,
+    *,
+    dtype_bytes: int = 4,
+    combine: str = "window",
+) -> int:
+    """VMEM bytes one member's blocked launch keeps resident.
+
+    M = block + 2*S*radius working rows; every mode holds the src/out
+    buffer, a working copy, and the f32 accumulator (~4 row-buffers of
+    padded payload) plus the per-row weight table. The non-window combines
+    carry mode-specific intermediates on top: gather materializes the
+    (M, D, payload) gathered rows; onehot the (M, M) combine matrix and
+    its (M, D, M) one-hot expansion (built once per launch).
+    """
+    m = block + 2 * steps_per_launch * radius
+    padded_payload = -(-payload // _LANE) * _LANE
+    window = 2 * radius + 1
+    buffers = 4 * m * padded_payload * dtype_bytes
+    weights = m * window * dtype_bytes
+    if combine == "gather":
+        buffers += m * window * padded_payload * dtype_bytes
+    elif combine == "onehot":
+        buffers += m * m * dtype_bytes + m * window * m * dtype_bytes
+    return buffers + weights
+
+
+def choose_steps_per_launch(
+    *,
+    block: int,
+    radius: int,
+    payload: int,
+    total_steps: Optional[int] = None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    candidates: Sequence[int] = CANDIDATES,
+    combine: str = "window",
+) -> int:
+    """Deepest candidate S whose blocked working set fits the VMEM budget.
+
+    Also refuses depths that cannot possibly pay off: S is capped at the
+    graph's combine-step count (``total_steps - 1``; a launch deeper than
+    the remaining steps is all masked tail).
+    """
+    cap = max(1, total_steps - 1) if total_steps and total_steps > 1 else None
+    for s in sorted(set(int(c) for c in candidates), reverse=True):
+        if s < 1:
+            continue
+        if cap is not None and s > cap:
+            continue
+        if blocked_working_set_bytes(
+                block, radius, s, payload, combine=combine) <= vmem_budget:
+            return s
+    return 1
+
+
+def resolve_steps_per_launch(
+    value: Union[int, str, None],
+    *,
+    block: int,
+    radius: int,
+    payload: int,
+    total_steps: Optional[int] = None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    combine: str = "window",
+) -> int:
+    """Turn the ``steps_per_launch`` runtime option into a concrete S."""
+    if value in (None, 1):
+        return 1
+    if value in ("auto", 0, "0"):
+        return choose_steps_per_launch(
+            block=block, radius=radius, payload=payload,
+            total_steps=total_steps, vmem_budget=vmem_budget,
+            combine=combine,
+        )
+    s = int(value)
+    if s < 1:
+        raise ValueError(f"steps_per_launch must be >= 1 or 'auto', got {value!r}")
+    if total_steps and total_steps > 1:
+        s = min(s, total_steps - 1)  # deeper than the run is all masked tail
+    return s

@@ -28,6 +28,29 @@ Inputs (see ``prepare_step_operands`` for how runtimes build idx/wgt):
                         so the masked MEAN is a single weighted sum — no
                         in-kernel max/divide/where.
 
+Temporal blocking (``steps_per_launch=S > 1``): the classic deep-halo
+stencil trick applied to the whole Task Bench step. Since every
+halo-expressible pattern advances at most ``r`` rows of influence per step,
+a source buffer extended by ``S*r`` rows per side holds enough remote state
+for ``S`` consecutive timesteps — the kernel iterates combine + body ``S``
+times on a fixed-size working buffer whose VALID region shrinks by ``r``
+rows per inner step, and the caller slices the owned rows (still valid
+after ``S`` shrinks) out of the result. One launch and one (deep) halo
+exchange then serve ``S`` steps instead of one. Contract differences from
+the single-step path:
+
+  * square operands: src (K, M, payload), wgt (K, M, D) — every working row
+    carries its OWN combine weights (indexed by its fixed global row id, so
+    per-row edge clipping stays exact at every depth), and the output is
+    the full (K, M, payload) buffer (caller slices the owned rows).
+  * gather/onehot idx entries address the M-row working buffer itself.
+  * a per-depth activity mask ``act`` (K, S) freezes member k at inner step
+    d when act[k, d] == 0 (heterogeneous-steps ensembles freeze at launch
+    granularity; the final partial launch of any run is a masked tail).
+  * the row grid collapses to 1 program per member: inner steps create
+    cross-tile dependences, so the whole working buffer stays resident in
+    VMEM for all S depths (kernels/schedule.py sizes S to the VMEM budget).
+
 Three combine strategies, selected statically:
 
   window  for halo-expressible dependence patterns (the pallas_step
@@ -58,6 +81,18 @@ from jax.experimental import pallas as pl
 from repro.kernels.bodies import LANE, SUBLANE, apply_body
 
 COMBINE_MODES = ("window", "gather", "onehot")
+
+#: Combine weights are accumulated host-side in this dtype and rounded ONCE
+#: to WEIGHT_DTYPE via finalize_weights — the single precision policy for
+#: every operand builder (prepare_step_operands, the runtimes' window /
+#: gather builders), so combine modes cannot drift in weight precision.
+WEIGHT_ACCUM_DTYPE = np.float64
+WEIGHT_DTYPE = np.float32
+
+
+def finalize_weights(wgt: np.ndarray) -> np.ndarray:
+    """Round host-accumulated combine weights once to the kernel dtype."""
+    return np.asarray(wgt, WEIGHT_ACCUM_DTYPE).astype(WEIGHT_DTYPE)
 
 
 def _step_kernel(
@@ -95,40 +130,186 @@ def _step_kernel(
         col = jax.lax.broadcasted_iota(jnp.int32, (1, 1, S), 2)
         C = ((idx[..., None] == col).astype(jnp.float32) * wgt[..., None]).sum(axis=1)
         x = jnp.dot(C, src.astype(jnp.float32), preferred_element_type=jnp.float32)
-    x = x.astype(src.dtype)
+    o_ref[0] = _apply_body_padded(
+        x.astype(src.dtype), kind=kind, iterations=iterations,
+        scratch=scratch, payload=payload,
+    )
 
+
+def _apply_body_padded(x, *, kind, iterations, scratch, payload):
+    """Body over a lane-padded (rows, Pp) tile, true-payload-aware.
+
+    The memory_bound sweep mixes columns (roll), so it must see the TRUE
+    payload slice; other bodies are columnwise and run on the padded tile.
+    """
     if kind == "memory_bound" and iterations > 0:
-        # the sweep mixes columns (roll), so it must see the TRUE payload
         true = apply_body(x[:, :payload], kind, iterations, scratch)
-        x = jnp.pad(true, ((0, 0), (0, x.shape[-1] - payload)))
-    else:
-        x = apply_body(x, kind, iterations, scratch)
-    o_ref[0] = x
+        return jnp.pad(true, ((0, 0), (0, x.shape[-1] - payload)))
+    return apply_body(x, kind, iterations, scratch)
+
+
+def _blocked_step_kernel(
+    src_ref,
+    idx_ref,
+    wgt_ref,
+    act_ref,
+    o_ref,
+    *,
+    kind: str,
+    iterations: int,
+    scratch: int,
+    payload: int,
+    combine: str,
+    steps_per_launch: int,
+):
+    """S fused timesteps on one member's deep-halo-extended working buffer.
+
+    The buffer keeps its full M rows at every depth; only the VALID span
+    shrinks (by halo rows per side per step). Rows outside the valid span
+    compute garbage from clamped windows / zero weights — harmless, because
+    a row consumed at depth d+1 sits at least one halo inside the rows valid
+    at depth d, and the caller only slices rows valid after all S depths.
+    """
+    buf0 = src_ref[0]  # (Mp, Pp) working state, full size at every depth
+    wgt = wgt_ref[0]  # (Mp, D) per-row weights, fixed across depths (each
+    #                   row's global id never changes, so neither do its
+    #                   edge-clipped combine weights)
+    act = act_ref[0]  # (S,) 1.0 = this inner step executes
+    M = buf0.shape[0]
+    halo = (wgt.shape[1] - 1) // 2 if combine == "window" else 0
+    if combine == "onehot":
+        # idx/wgt are depth-invariant, so the (M, M) one-hot combine matrix
+        # is built ONCE per launch, not once per inner step
+        idx = idx_ref[0]
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, 1, M), 2)
+        onehot_C = ((idx[..., None] == col).astype(jnp.float32)
+                    * wgt[..., None]).sum(axis=1)
+
+    def depth_step(d, buf):
+        srcf = buf.astype(jnp.float32)
+        if combine == "window":
+            # out row i combines work rows [i .. i + 2*halo] of the +-halo
+            # zero-padded buffer: same static slice-FMA chain as the
+            # single-step kernel, full-buffer width
+            zpad = jnp.zeros((halo, srcf.shape[1]), jnp.float32)
+            work = jnp.concatenate([zpad, srcf, zpad], axis=0)
+            x = jnp.zeros((M, srcf.shape[1]), jnp.float32)
+            for j in range(wgt.shape[1]):
+                win = jax.lax.dynamic_slice_in_dim(work, j, M, 0)
+                x = x + win * wgt[:, j][:, None]
+        elif combine == "gather":
+            idx = idx_ref[0]  # (Mp, D) absolute rows of THIS buffer
+            gathered = srcf[idx]  # (Mp, D, Pp)
+            x = (gathered * wgt[..., None]).sum(axis=1)
+        else:  # onehot: lift the self-gather to an MXU matmul
+            x = jnp.dot(onehot_C, srcf, preferred_element_type=jnp.float32)
+        x = _apply_body_padded(
+            x.astype(buf.dtype), kind=kind, iterations=iterations,
+            scratch=scratch, payload=payload,
+        )
+        # masked freeze: inactive depths (a frozen ensemble member, or the
+        # tail of the final partial launch) carry the buffer through intact
+        return jnp.where(act[d] > 0.5, x, buf)
+
+    # ROLLED loop over depths (the buffer is full-size at every depth
+    # precisely so the carry shape is loop-invariant): a rolled loop
+    # materializes the buffer between depths, which keeps compile size
+    # O(1) in S and stops XLA:CPU from fusing the whole depth chain into
+    # one recompute cone (interpret mode would otherwise get slower per
+    # step as S grows, inverting the launch-amortization win).
+    o_ref[0] = jax.lax.fori_loop(0, steps_per_launch, depth_step, buf0)
+
+
+def _blocked_call(src, idx, wgt, act, *, kind, iterations, scratch,
+                  combine, interpret):
+    """pallas_call for the temporal-blocked path: square (K, M, *) operands,
+    one program per member (inner steps couple all rows, so no row grid)."""
+    K, M, payload = src.shape
+    _, _, D = wgt.shape
+    S = act.shape[1]
+    if wgt.shape[:2] != (K, M):
+        raise ValueError(
+            f"blocked path needs square operands: src {src.shape} vs "
+            f"wgt {wgt.shape} (every working row carries its own weights)"
+        )
+    if combine == "window":
+        idx = jnp.zeros((K, 1, 1), jnp.int32)  # semantically unused
+    elif idx.shape != wgt.shape:
+        raise ValueError(f"operand shape mismatch: {idx.shape}/{wgt.shape}")
+    if act.shape[0] != K:
+        raise ValueError(f"act must be (K, S), got {act.shape} for K={K}")
+
+    lane, sublane = (1, 1) if interpret else (LANE, SUBLANE)
+    pad_p = (-payload) % lane
+    pad_m = (-M) % sublane
+    srcp = jnp.pad(src, ((0, 0), (0, pad_m), (0, pad_p)))
+    idxp = idx if combine == "window" else jnp.pad(
+        idx, ((0, 0), (0, pad_m), (0, 0)))
+    wgtp = jnp.pad(wgt, ((0, 0), (0, pad_m), (0, 0)))
+    Mp, Pp = srcp.shape[1], srcp.shape[2]
+    idx_block = (
+        pl.BlockSpec((1, 1, 1), lambda k: (k, 0, 0))
+        if combine == "window"
+        else pl.BlockSpec((1, Mp, D), lambda k: (k, 0, 0))
+    )
+
+    out = pl.pallas_call(
+        functools.partial(
+            _blocked_step_kernel,
+            kind=kind,
+            iterations=iterations,
+            scratch=scratch,
+            payload=payload,
+            combine=combine,
+            steps_per_launch=S,
+        ),
+        grid=(K,),
+        in_specs=[
+            pl.BlockSpec((1, Mp, Pp), lambda k: (k, 0, 0)),
+            idx_block,
+            pl.BlockSpec((1, Mp, D), lambda k: (k, 0, 0)),
+            pl.BlockSpec((1, S), lambda k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Mp, Pp), lambda k: (k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((K, Mp, Pp), src.dtype),
+        interpret=interpret,
+    )(srcp, idxp, wgtp, act)
+    return out[:, :M, :payload]
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "kind", "iterations", "scratch", "block_rows", "combine", "interpret",
+        "kind", "iterations", "scratch", "block_rows", "combine",
+        "steps_per_launch", "interpret",
     ),
 )
 def taskbench_step_pallas(
     src: jax.Array,
     idx: jax.Array,
     wgt: jax.Array,
+    act: jax.Array | None = None,
     *,
     kind: str = "compute_bound",
     iterations: int = 16,
     scratch: int = 2048,
     block_rows: int = 0,
     combine: str = "gather",
+    steps_per_launch: int = 1,
     interpret: bool = False,
 ) -> jax.Array:
-    """One fused Task Bench timestep for K graphs: (K, W, payload) out.
+    """Fused Task Bench timestep(s) for K graphs.
 
+    ``steps_per_launch=1`` (default): one timestep, (K, W, payload) out.
     ``block_rows=0`` keeps each member's full width in one program (the
     fine-grain default — minimal grid overhead); set it to tile wide graphs
     so the (block_rows, payload) working set fits VMEM.
+
+    ``steps_per_launch=S > 1``: the temporal-blocked path (see module
+    docstring) — square (K, M, *) operands on a deep-halo working buffer,
+    a required (K, S) ``act`` mask, full (K, M, payload) buffer out
+    (caller slices the rows still valid after S halo shrinks);
+    ``block_rows`` is ignored (one program per member).
     """
     if combine not in COMBINE_MODES:
         raise ValueError(f"unknown combine mode {combine!r}; known {COMBINE_MODES}")
@@ -136,6 +317,19 @@ def taskbench_step_pallas(
         raise ValueError(
             f"expected (K, S, payload)/(K, W, D) operands, got "
             f"{src.shape}/{wgt.shape}"
+        )
+    if steps_per_launch < 1:
+        raise ValueError(f"steps_per_launch must be >= 1, got {steps_per_launch}")
+    if steps_per_launch > 1:
+        if act is None:
+            raise ValueError("steps_per_launch > 1 requires an act mask")
+        if act.ndim != 2 or act.shape[1] != steps_per_launch:
+            raise ValueError(
+                f"act must be (K, {steps_per_launch}), got {act.shape}")
+        return _blocked_call(
+            src, idx, wgt, act.astype(jnp.float32), kind=kind,
+            iterations=iterations, scratch=scratch, combine=combine,
+            interpret=interpret,
         )
     K, S, payload = src.shape
     _, W, D = wgt.shape
@@ -217,13 +411,14 @@ def prepare_step_operands(dep_lists, width: int, self_pos) -> tuple:
         (the zero-dep "keep own state" row).
 
     Returns:
-      idx int32 (W, D), wgt float32 (W, D) with D = max(1, max deps);
-      weights pre-normalized to 1/live-count (computed in float64, rounded
-      once) so the kernel's weighted sum IS the masked mean.
+      idx int32 (W, D), wgt WEIGHT_DTYPE (W, D) with D = max(1, max deps);
+      weights pre-normalized to 1/live-count (accumulated in
+      WEIGHT_ACCUM_DTYPE, rounded once by finalize_weights — the shared
+      precision policy) so the kernel's weighted sum IS the masked mean.
     """
     D = max(1, max((len(d) for d in dep_lists), default=0))
     idx = np.zeros((width, D), dtype=np.int32)
-    wgt = np.zeros((width, D), dtype=np.float64)
+    wgt = np.zeros((width, D), dtype=WEIGHT_ACCUM_DTYPE)
     for p, deps in enumerate(dep_lists):
         if not deps:
             idx[p, 0] = self_pos[p]
@@ -233,4 +428,4 @@ def prepare_step_operands(dep_lists, width: int, self_pos) -> tuple:
         for j, q in enumerate(deps):
             idx[p, j] = q
             wgt[p, j] = w
-    return idx, wgt.astype(np.float32)
+    return idx, finalize_weights(wgt)

@@ -13,7 +13,10 @@ from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.ssd_scan import ssd_chunk_pallas
 from repro.kernels.taskbench_compute import taskbench_compute_pallas
+from repro.kernels import schedule
 from repro.kernels.taskbench_step import (
+    WEIGHT_DTYPE,
+    finalize_weights,
     prepare_step_operands,
     taskbench_step_pallas,
 )
@@ -156,6 +159,176 @@ def test_taskbench_step_block_rows_invariance():
                               interpret=True)
     b = taskbench_step_pallas(src, idx, wgt, iterations=6, interpret=True)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+# ------------------------------------------ temporal-blocked megakernel
+
+
+def _periodic_ext(state, depth):
+    """Deep-halo extend a (K, W, P) state periodically (1-device wrap)."""
+    K, W, P = state.shape
+    ids = (np.arange(-depth, W + depth)) % W
+    return state[:, ids, :]
+
+
+def _stencil_window_weights(W, halo):
+    """Per-global-row mean-over-{-1,0,1} weights, full (W, 2h+1) table."""
+    return np.full((W, 2 * halo + 1), 1.0 / (2 * halo + 1), np.float32)
+
+
+@pytest.mark.parametrize("K", [1, 3])
+@pytest.mark.parametrize("S", [2, 5])
+@pytest.mark.parametrize("combine", ["window", "gather", "onehot"])
+@pytest.mark.parametrize("kind,iters", [("compute_bound", 3),
+                                        ("memory_bound", 2), ("empty", 0)])
+def test_taskbench_step_blocked_matches_iterated_single(K, S, combine,
+                                                        kind, iters):
+    """steps_per_launch=S on a depth-S*h extended buffer == S invocations
+    of the single-step kernel, for every combine mode and kernel kind."""
+    W, P, h = 12, 10, 1
+    state = jax.random.uniform(jax.random.PRNGKey(30), (K, W, P),
+                               jnp.float32, 0.1, 1.0)
+    wfull = _stencil_window_weights(W, h)
+
+    # reference: iterate the S=1 kernel (old contract) S times
+    ref = state
+    wgt1 = jnp.asarray(np.broadcast_to(wfull, (K, W, 3)).copy())
+    rows = jnp.arange(W)
+    idx1 = jnp.stack([rows, rows + 1, rows + 2], 1)[None].repeat(K, 0)
+    for _ in range(S):
+        ext = jnp.asarray(_periodic_ext(np.asarray(ref), h))
+        ref = taskbench_step_pallas(
+            ext, idx1.astype(jnp.int32), wgt1, kind=kind, iterations=iters,
+            scratch=30, combine="gather", interpret=True)
+
+    # blocked: square (K, M, *) operands
+    depth = S * h
+    M = W + 2 * depth
+    gids = (np.arange(-depth, W + depth)) % W
+    wext = jnp.asarray(np.broadcast_to(wfull[gids], (K, M, 3)).copy())
+    rel = np.tile(np.array([-1, 0, 1], np.int32), (M, 1))
+    iabs = np.clip(rel + np.arange(M)[:, None], 0, M - 1).astype(np.int32)
+    iabs = jnp.asarray(np.broadcast_to(iabs, (K, M, 3)).copy())
+    act = jnp.ones((K, S), jnp.float32)
+    ext = jnp.asarray(_periodic_ext(np.asarray(state), depth))
+    out = taskbench_step_pallas(
+        ext, iabs, wext, act, kind=kind, iterations=iters, scratch=30,
+        combine=combine, steps_per_launch=S, interpret=True)
+    got = out[:, depth:depth + W]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_taskbench_step_blocked_act_mask_freezes_depths():
+    """act encodes per-member inner-step horizons: member k with m active
+    depths must equal iterating the single-step kernel m times."""
+    K, W, P, h, S = 3, 8, 6, 1, 4
+    state = jax.random.uniform(jax.random.PRNGKey(31), (K, W, P),
+                               jnp.float32, 0.1, 1.0)
+    wfull = _stencil_window_weights(W, h)
+    depth = S * h
+    M = W + 2 * depth
+    gids = (np.arange(-depth, W + depth)) % W
+    wext = jnp.asarray(np.broadcast_to(wfull[gids], (K, M, 3)).copy())
+    idx = jnp.zeros((K, 1, 1), jnp.int32)
+    # member k executes k+1 of the 4 depths
+    act = jnp.asarray((np.arange(S)[None, :]
+                       < np.arange(1, K + 1)[:, None]).astype(np.float32))
+    ext = jnp.asarray(_periodic_ext(np.asarray(state), depth))
+    out = taskbench_step_pallas(
+        ext, idx, wext, act, kind="compute_bound", iterations=2,
+        combine="window", steps_per_launch=S, interpret=True)
+    got = out[:, depth:depth + W]
+
+    wgt1 = jnp.asarray(wfull)[None]
+    rows = jnp.arange(W)
+    idx1 = jnp.stack([rows, rows + 1, rows + 2], 1)[None].astype(jnp.int32)
+    for k in range(K):
+        ref = state[k:k + 1]
+        for _ in range(k + 1):
+            ext1 = jnp.asarray(_periodic_ext(np.asarray(ref), h))
+            ref = taskbench_step_pallas(
+                ext1, idx1, wgt1, kind="compute_bound", iterations=2,
+                combine="gather", interpret=True)
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(ref[0]),
+                                   rtol=1e-5, atol=1e-6,
+                                   err_msg=f"member {k}")
+
+
+def test_taskbench_step_blocked_requires_act_and_square_operands():
+    src = jnp.ones((1, 10, 4))
+    wgt = jnp.ones((1, 10, 3)) / 3
+    idx = jnp.zeros((1, 10, 3), jnp.int32)
+    with pytest.raises(ValueError, match="act"):
+        taskbench_step_pallas(src, idx, wgt, steps_per_launch=3,
+                              interpret=True)
+    act = jnp.ones((1, 3), jnp.float32)
+    with pytest.raises(ValueError, match="square"):
+        taskbench_step_pallas(src, idx, jnp.ones((1, 8, 3)) / 3, act,
+                              steps_per_launch=3, interpret=True)
+
+
+# ----------------------------------------------------------- schedule tuner
+
+
+def test_schedule_choose_respects_vmem_budget():
+    # a tiny budget forces shallow launches; a huge one allows the deepest
+    tiny = schedule.choose_steps_per_launch(
+        block=1024, radius=8, payload=512, vmem_budget=1 << 20)
+    huge = schedule.choose_steps_per_launch(
+        block=1024, radius=8, payload=512, vmem_budget=1 << 30)
+    assert 1 <= tiny < huge <= max(schedule.CANDIDATES)
+    # working-set model is monotone in S
+    sizes = [schedule.blocked_working_set_bytes(256, 2, s, 64)
+             for s in (1, 2, 4, 8)]
+    assert sizes == sorted(sizes)
+
+
+def test_schedule_accounts_for_combine_mode_intermediates():
+    """gather/onehot carry bigger working sets than window, so 'auto' must
+    pick shallower (or equal) depths for them at the same budget."""
+    kw = dict(block=1024, radius=8, payload=512, vmem_budget=64 << 20)
+    win = schedule.choose_steps_per_launch(combine="window", **kw)
+    gat = schedule.choose_steps_per_launch(combine="gather", **kw)
+    one = schedule.choose_steps_per_launch(combine="onehot", **kw)
+    assert one <= gat <= win
+    assert one < win  # the onehot expansion must actually bite
+    for s in (1, 4):
+        base = schedule.blocked_working_set_bytes(1024, 8, s, 512)
+        assert schedule.blocked_working_set_bytes(
+            1024, 8, s, 512, combine="gather") > base
+        assert schedule.blocked_working_set_bytes(
+            1024, 8, s, 512, combine="onehot") > base
+
+
+def test_schedule_caps_depth_at_combine_steps():
+    assert schedule.choose_steps_per_launch(
+        block=64, radius=1, payload=64, total_steps=5) <= 4
+    assert schedule.resolve_steps_per_launch(
+        16, block=64, radius=1, payload=64, total_steps=5) == 4
+
+
+def test_schedule_resolve_values():
+    kw = dict(block=64, radius=1, payload=64, total_steps=100)
+    assert schedule.resolve_steps_per_launch(None, **kw) == 1
+    assert schedule.resolve_steps_per_launch(1, **kw) == 1
+    assert schedule.resolve_steps_per_launch(8, **kw) == 8
+    auto = schedule.resolve_steps_per_launch("auto", **kw)
+    assert auto == schedule.choose_steps_per_launch(**kw)
+    with pytest.raises(ValueError):
+        schedule.resolve_steps_per_launch(-2, **kw)
+
+
+def test_finalize_weights_single_rounding():
+    """The one weight-precision policy: f64 accumulation, one f32 round."""
+    acc = np.array([[1.0 / 3.0 + 1.0 / 3.0 + 1.0 / 3.0]], np.float64)
+    out = finalize_weights(acc)
+    assert out.dtype == WEIGHT_DTYPE
+    np.testing.assert_array_equal(
+        out, np.asarray(acc, np.float64).astype(np.float32))
+    # prepare_step_operands flows through the same policy
+    _, wgt = prepare_step_operands([[0, 1, 2]], 1, [0])
+    assert wgt.dtype == WEIGHT_DTYPE
 
 
 def test_prepare_step_operands_self_pads_and_normalizes():

@@ -103,7 +103,19 @@ def test_dispatch_accounting():
     assert get_runtime("fused").dispatches_per_run(g) == 1
     assert get_runtime("bsp").dispatches_per_run(g) == 7
     assert get_runtime("bsp_scan").dispatches_per_run(g) == 1
-    assert get_runtime("pallas_step").dispatches_per_run(g) == 1
+    # pallas_step reports actual KERNEL LAUNCHES (the overhead its METG
+    # floor measures), not host dispatches: one t=0 body-only launch plus
+    # ceil((T-1)/S) blocked combine launches
+    assert get_runtime("pallas_step").dispatches_per_run(g) == 7
+    assert get_runtime(
+        "pallas_step", steps_per_launch=3).dispatches_per_run(g) == 3
+    assert get_runtime(
+        "pallas_step", steps_per_launch=6).dispatches_per_run(g) == 2
+    # depth clamps to the graph's T-1 combine steps (rest is masked tail)
+    assert get_runtime(
+        "pallas_step", steps_per_launch=100).dispatches_per_run(g) == 2
+    assert get_runtime(
+        "pallas_step").dispatches_per_run(graph("stencil_1d", steps=1)) == 1
     assert get_runtime("serialized").dispatches_per_run(g) == 7 * 16
 
 
@@ -147,6 +159,104 @@ def test_pallas_step_kernel_kinds():
         out = get_runtime("pallas_step").execute(g)
         np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6,
                                    err_msg=kind)
+
+
+HALO_LIKE = list(_patterns.HALO_PATTERNS) + ["random_nearest"]
+
+
+@pytest.mark.parametrize("pattern", HALO_LIKE)
+@pytest.mark.parametrize("S", [3, 8])
+def test_pallas_step_blocked_matches_unblocked_and_fused(pattern, S):
+    """Temporal blocking is a pure scheduling change: for every halo
+    pattern, S steps per launch must be allclose to the S=1 path AND the
+    fused oracle (T=7 with S=3 exercises the masked tail: 6 combine steps
+    = 2 launches; with S=8 the whole run is one partially-masked launch)."""
+    g = graph(pattern, steps=7)
+    ref = get_runtime("fused").execute(g)
+    s1 = get_runtime("pallas_step").execute(g)
+    out = get_runtime("pallas_step", steps_per_launch=S).execute(g)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6,
+                               err_msg=f"{pattern} S={S} vs fused")
+    np.testing.assert_allclose(out, s1, rtol=1e-5, atol=1e-6,
+                               err_msg=f"{pattern} S={S} vs S=1")
+
+
+@pytest.mark.parametrize("combine", ["window", "gather", "onehot"])
+def test_pallas_step_blocked_combine_modes_match_fused(combine):
+    g = graph("nearest", steps=8)
+    ref = get_runtime("fused").execute(g)
+    out = get_runtime("pallas_step", combine=combine,
+                      steps_per_launch=4).execute(g)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6,
+                               err_msg=combine)
+
+
+def test_pallas_step_blocked_kernel_kinds():
+    for kind in ("compute_bound", "memory_bound", "empty"):
+        g = graph("stencil_1d", kernel=KernelSpec(kind, 4, scratch=64))
+        ref = get_runtime("fused").execute(g)
+        out = get_runtime("pallas_step", steps_per_launch=3).execute(g)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6,
+                                   err_msg=kind)
+
+
+@pytest.mark.parametrize("S", [1, 3, 8])
+def test_pallas_step_blocked_hetero_steps_ensemble(S):
+    """Launch-granularity freezing: members with different T inside one
+    blocked stacked ensemble each match running alone under fused (members
+    end mid-launch, so the act mask must freeze them at inner-step
+    granularity)."""
+    members = [
+        TaskGraph(steps=t, width=16, payload=8, pattern="stencil_1d",
+                  kernel=KernelSpec("compute_bound", 8), seed=k)
+        for k, t in enumerate((3, 6, 1, 5))
+    ]
+    ens = GraphEnsemble(members)
+    assert ens.heterogeneous_steps
+    outs = get_runtime("pallas_step", steps_per_launch=S).execute_ensemble(ens)
+    for k, (g, out) in enumerate(zip(members, outs)):
+        ref = get_runtime("fused").execute(g)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"S={S} member {k} T={g.steps}")
+
+
+def test_pallas_step_blocked_mixed_spec_tuple_ensemble():
+    """The mixed-spec (tuple) fallback blocks too: different kernels,
+    patterns, and T per member, one shared launch cadence."""
+    members = [
+        TaskGraph(steps=5, width=16, payload=8, pattern="stencil_1d",
+                  kernel=KernelSpec("compute_bound", 8), seed=0),
+        TaskGraph(steps=3, width=16, payload=8, pattern="nearest", radius=2,
+                  kernel=KernelSpec("compute_bound", 32), seed=1),
+        TaskGraph(steps=7, width=16, payload=8, pattern="no_comm",
+                  kernel=KernelSpec("memory_bound", 2, scratch=32), seed=2),
+    ]
+    ens = GraphEnsemble(members)
+    rt = get_runtime("pallas_step", steps_per_launch=4)
+    outs = rt.execute_ensemble(ens)
+    for k, (g, out) in enumerate(zip(members, outs)):
+        ref = get_runtime("fused").execute(g)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"member {k}")
+
+
+def test_pallas_step_deep_halo_exceeding_width_wraps():
+    """S*r far beyond W (depth wraps the ring repeatedly) stays exact."""
+    g = graph("stencil_1d_periodic", steps=10, width=8)
+    ref = get_runtime("fused").execute(g)
+    out = get_runtime("pallas_step", steps_per_launch=8).execute(g)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+
+
+def test_pallas_step_auto_steps_per_launch():
+    """'auto' resolves through kernels/schedule.py and stays exact."""
+    g = graph("stencil_1d", steps=9)
+    ref = get_runtime("fused").execute(g)
+    rt = get_runtime("pallas_step", steps_per_launch="auto")
+    out = rt.execute(g)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+    # auto picks a deep schedule for this tiny shape -> few launches
+    assert rt.dispatches_per_run(g) < g.steps
 
 
 def test_pallas_step_rejects_non_halo_patterns():
@@ -311,7 +421,20 @@ def test_ensemble_heterogeneous_steps_dispatch_accounting():
     assert get_runtime("bsp").ensemble_dispatches_per_run(ens) == 3 + 7
     assert (get_runtime("serialized").ensemble_dispatches_per_run(ens)
             == (3 + 7) * 8)
-    assert get_runtime("pallas_step").ensemble_dispatches_per_run(ens) == 1
+    # stacked ensemble: ALL members share each launch -> lockstep launches
+    # (1 body launch + ceil((Tmax-1)/S) combine launches), not 1
+    assert get_runtime("pallas_step").ensemble_dispatches_per_run(ens) == 7
+    assert get_runtime(
+        "pallas_step", steps_per_launch=3).ensemble_dispatches_per_run(ens) == 3
+    # mixed-spec (tuple) fallback launches each member every scan iteration
+    mixed = GraphEnsemble([
+        TaskGraph(steps=3, width=8),
+        TaskGraph(steps=7, width=8, kernel=KernelSpec("compute_bound", 99)),
+    ])
+    assert get_runtime("pallas_step").ensemble_dispatches_per_run(mixed) == 14
+    assert get_runtime(
+        "pallas_step", steps_per_launch=3
+    ).ensemble_dispatches_per_run(mixed) == 6
 
 
 def test_ensemble_padded_dependency_arrays():
