@@ -8,7 +8,15 @@ round-robin supersteps) pays the full serial sum.
 
 Sweep: K = 1..8 stencil graphs per run, small grains (communication NOT
 negligible), `overlap` vs `bsp` (plus `bsp_scan` to separate dispatch
-amortization from scheduling freedom). Each worker times BOTH the
+amortization from scheduling freedom), and — since the double-buffered
+deep-halo pipeline landed — `pallas_step` in both schedules: the pipelined
+default and the `pipeline=False` serial-exchange ablation (rows
+``pallas_step`` / ``pallas_step[nopipe]``), so the latency-hiding figure
+includes the repo's fastest backend. pallas_step runs at its own (larger)
+overdecomposition: the deep-halo pipeline needs a block wide enough for an
+interior that covers the exchange (kernels/schedule.py), and the
+concurrency ratio is self-normalized per backend so the width difference
+does not pollute the cross-backend reading. Each worker times BOTH the
 concurrent ensemble and the same K graphs run serially back-to-back, so
 the concurrency ratio wall(concurrent)/wall(serial) is self-normalized
 (same process, devices, compile state) rather than relying on a separately
@@ -17,6 +25,11 @@ graphs; round-robin backends sit at ~1 by construction. Outputs:
 
   artifacts/bench/fig4.csv    one row per (backend, K, grain)
   artifacts/bench/fig4.json   summary incl. concurrency ratios per (K, grain)
+
+``--smoke`` shrinks the sweep to a seconds-long CI guard (2 devices, tiny
+steps/K) that exercises every backend row — including the pipelined
+pallas_step ensemble path — and the artifact schema; it writes to
+``fig4_smoke.{csv,json}`` so the committed full-run artifacts survive.
 """
 from __future__ import annotations
 
@@ -34,28 +47,62 @@ from benchmarks.common import (
 
 from repro.configs.taskbench import PRESETS
 
+#: overdecomposition for the pallas_step rows (block = od * devices/devices
+#: = od per device): wide enough that the tuner's covering rule keeps the
+#: pipeline on (see kernels/schedule.PIPELINE_EXCHANGE_ROW_STEPS)
+PALLAS_OVERDECOMPOSITION = 128
+
+#: variant label -> extra pallas_step options (empty label = the default
+#: pipelined schedule; rows surface as "pallas_step" / "pallas_step[nopipe]")
+PALLAS_VARIANTS = {
+    "": {"steps_per_launch": "auto"},
+    "nopipe": {"steps_per_launch": "auto", "pipeline": False},
+}
+
+
+def _backend_label(runtime: str, variant: str) -> str:
+    return f"{runtime}[{variant}]" if variant else runtime
+
 
 def run(devices: int = 4, steps: int = 100, reps: int = 5,
         grains=(1, 8, 64), ensemble_sizes=(1, 2, 4, 8),
         overdecomposition: int = 8, payload: int = 64,
-        backends=("overlap", "bsp", "bsp_scan"), options=None,
-        verbose: bool = True):
+        backends=("overlap", "bsp", "bsp_scan", "pallas_step"),
+        pallas_overdecomposition: int = PALLAS_OVERDECOMPOSITION,
+        options=None, verbose: bool = True, smoke: bool = False):
+    classic = tuple(b for b in backends if b != "pallas_step")
+    with_pallas = "pallas_step" in backends
     rows_out = []
     ratios = {}  # (backend, grain) -> {K: concurrent/serial}
     walls = {}  # (backend, K, grain) -> ensemble wall
     for k in ensemble_sizes:
         # all backends measured back-to-back in ONE worker process so their
         # wall ratio is not polluted by scheduling differences across workers
-        spec = SweepSpec(
-            runtime=backends[0], compare_runtimes=tuple(backends),
-            pattern="stencil_1d", devices=devices,
-            overdecomposition=overdecomposition, steps=steps,
-            grains=tuple(grains), reps=reps, payload=payload, ensemble=k,
-            serial_baseline=k > 1, options=dict(options or {}),
-        )
-        rows = run_worker(spec)
+        specs = []
+        if classic:
+            specs.append(SweepSpec(
+                runtime=classic[0], compare_runtimes=classic,
+                pattern="stencil_1d", devices=devices,
+                overdecomposition=overdecomposition, steps=steps,
+                grains=tuple(grains), reps=reps, payload=payload, ensemble=k,
+                serial_baseline=k > 1, options=dict(options or {}),
+            ))
+        if with_pallas:
+            # pallas_step rides its own worker (larger od, pipeline pair
+            # via option_variants) — the concurrency ratio it reports is
+            # still within-worker
+            specs.append(SweepSpec(
+                runtime="pallas_step", pattern="stencil_1d",
+                devices=devices,
+                overdecomposition=pallas_overdecomposition, steps=steps,
+                grains=tuple(grains), reps=reps, payload=payload,
+                ensemble=k, serial_baseline=k > 1,
+                options=dict(options or {}),
+                option_variants=dict(PALLAS_VARIANTS),
+            ))
+        rows = [r for spec in specs for r in run_worker(spec)]
         for r in rows:
-            backend = r["runtime"]
+            backend = _backend_label(r["runtime"], r.get("variant", ""))
             if "skip" in r:
                 if verbose:
                     print(f"fig4 {backend:9s} K={k} grain={r['grain']}: "
@@ -72,12 +119,17 @@ def run(devices: int = 4, steps: int = 100, reps: int = 5,
                              r["gran_us"], r["rate"], r["tasks"],
                              r["dispatches"]])
         if verbose:
-            for backend in backends:
+            shown_backends = list(classic) + (
+                [_backend_label("pallas_step", v) for v in PALLAS_VARIANTS]
+                if with_pallas else [])
+            for backend in shown_backends:
                 shown = ", ".join(
                     f"g{r['grain']}={r['wall'] * 1e3:.1f}ms"
-                    for r in rows if r["runtime"] == backend and "skip" not in r)
+                    for r in rows
+                    if _backend_label(r["runtime"], r.get("variant", ""))
+                    == backend and "skip" not in r)
                 if shown:
-                    print(f"fig4 {backend:9s} K={k}: {shown}", flush=True)
+                    print(f"fig4 {backend:20s} K={k}: {shown}", flush=True)
 
     # Concurrency ratio: ensemble wall / serial-sum wall. < 1.0 = the
     # runtime overlapped one graph's communication/dispatch with another's
@@ -100,33 +152,51 @@ def run(devices: int = 4, steps: int = 100, reps: int = 5,
         if bsp_wall:
             overlap_over_bsp.setdefault(str(grain), {})[str(k)] = wall / bsp_wall
 
+    # pallas_step's pipeline against its own serial-exchange ablation at
+    # the same K/grain — the fig4 view of the latency-hiding schedule
+    pipe_over_nopipe = {}
+    for (backend, k, grain), wall in sorted(walls.items()):
+        if backend != "pallas_step":
+            continue
+        nopipe = walls.get(("pallas_step[nopipe]", k, grain))
+        if nopipe:
+            pipe_over_nopipe.setdefault(str(grain), {})[str(k)] = wall / nopipe
+
+    stem = "fig4_smoke" if smoke else "fig4"
     path_csv = write_csv(
-        "fig4.csv",
+        f"{stem}.csv",
         ["backend", "ensemble_k", "grain", "wall_s", "serial_wall_s",
          "concurrent_over_serial", "granularity_us", "flops_per_s", "tasks",
          "dispatches"],
         rows_out,
     )
-    path_json = bench_path("fig4.json")
+    path_json = bench_path(f"{stem}.json")
     with open(path_json, "w") as f:
         json.dump({
             "devices": devices, "steps": steps,
             "overdecomposition": overdecomposition,
+            "pallas_overdecomposition":
+                pallas_overdecomposition if with_pallas else None,
             "concurrent_over_serial": summary,
             "overlap_over_bsp": overlap_over_bsp,
+            "pallas_pipe_over_nopipe": pipe_over_nopipe,
         }, f, indent=2)
     if verbose:
         for backend, by_grain in summary.items():
             for grain, by_k in by_grain.items():
-                print(f"fig4 {backend:9s} grain={grain}: "
+                print(f"fig4 {backend:20s} grain={grain}: "
                       f"concurrent/serial = "
                       + ", ".join(f"K{k}:{v:.2f}" for k, v in by_k.items()))
         for grain, by_k in overlap_over_bsp.items():
             print(f"fig4 overlap/bsp grain={grain}: "
                   + ", ".join(f"K{k}:{v:.2f}" for k, v in by_k.items()))
+        for grain, by_k in pipe_over_nopipe.items():
+            print(f"fig4 pallas pipe/nopipe grain={grain}: "
+                  + ", ".join(f"K{k}:{v:.2f}" for k, v in by_k.items()))
         print(f"wrote {path_csv} and {path_json}")
     return {"concurrent_over_serial": summary,
-            "overlap_over_bsp": overlap_over_bsp}
+            "overlap_over_bsp": overlap_over_bsp,
+            "pallas_pipe_over_nopipe": pipe_over_nopipe}
 
 
 def main(argv=None):
@@ -136,10 +206,26 @@ def main(argv=None):
                     help="override the preset's step count")
     ap.add_argument("--reps", type=int, default=None)
     ap.add_argument("--preset", default="fig4", choices=sorted(PRESETS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-long CI guard: 2 devices, tiny steps/K, "
+                         "every backend row incl. pipelined pallas_step")
     backend_options_args(ap)
     a = ap.parse_args(argv)
     cfg = PRESETS[a.preset]
     opts = parse_backend_options(a)
+    if a.smoke:
+        res = run(devices=2, steps=12, reps=1, grains=(1,),
+                  ensemble_sizes=(1, 2), overdecomposition=8,
+                  payload=cfg.payload, backends=cfg.runtimes, options=opts,
+                  smoke=True)
+        # schema guard: every backend (incl. both pallas_step schedules)
+        # must have produced concurrency ratios at K=2
+        summary = res["concurrent_over_serial"]
+        want = [b for b in cfg.runtimes if b != "pallas_step"]
+        if "pallas_step" in cfg.runtimes:
+            want += ["pallas_step", "pallas_step[nopipe]"]
+        ok = all(b in summary and summary[b] for b in want)
+        return 0 if ok else 1
     run(devices=a.devices, steps=a.steps or cfg.steps,
         reps=a.reps or cfg.reps, grains=cfg.grains,
         ensemble_sizes=cfg.ensemble_sizes,

@@ -1,0 +1,96 @@
+"""CI floor-regression guard for the pallas_step smoke benchmark.
+
+Compares a freshly produced ``pallas_floor_smoke.json`` (written by
+``python -m benchmarks.pallas_floor --smoke``) against the committed
+baseline ``pallas_floor_smoke_baseline.json`` and fails when the smoke
+run's headline floor — best pallas_step wall/step per width, the
+``floor_wall_per_step`` field — regresses by more than ``--factor``
+(default 2x).
+
+Cross-machine wall-clock comparisons are inherently shaky (the baseline
+was produced on the dev container; shared CI runners drift), so an
+absolute regression alone does not fail the guard: it must coincide with
+the smoke run's own IN-RUN amortization signal collapsing —
+``s1_over_s8_speedup`` dropping below ``--min-amortization`` (default
+1.05x — a degraded fast path measures ~1.0x, a healthy noisy run 1.3-9x). The failure mode this guard exists for (the blocked/pipelined fast
+path silently degrading to per-step dispatch — the tuner collapsing to
+S=1, the pipeline gating itself off into a slow path, an accidental
+per-step dispatch) produces exactly that signature: wall/step jumps 5-30x
+AND deep launches stop beating S=1, both far outside runner variance. A
+uniformly slow runner keeps the in-run ratio healthy and only warns.
+Widths present in only one file are reported but not judged.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(current: dict, baseline: dict, factor: float,
+          min_amortization: float) -> list:
+    """Returns a list of human-readable failures (empty = pass)."""
+    failures = []
+    cur = current.get("floor_wall_per_step", {})
+    base = baseline.get("floor_wall_per_step", {})
+    speedups = current.get("s1_over_s8_speedup", {})
+    if not base:
+        failures.append("baseline has no floor_wall_per_step field")
+        return failures
+    judged = 0
+    for width, b in sorted(base.items(), key=lambda kv: int(kv[0])):
+        c = cur.get(width)
+        if c is None:
+            print(f"floor_guard: width {width} missing from current run "
+                  f"(not judged)")
+            continue
+        judged += 1
+        ratio = c / b
+        amort = speedups.get(width)
+        regressed = ratio > factor
+        collapsed = amort is not None and amort < min_amortization
+        if regressed and collapsed:
+            verdict = "REGRESSED"
+            failures.append(
+                f"width {width}: {c*1e6:.2f} us/step is {ratio:.2f}x the "
+                f"baseline {b*1e6:.2f} us/step (limit {factor}x) AND the "
+                f"in-run S1/S8 amortization collapsed to {amort:.2f}x "
+                f"(floor {min_amortization}x) — the blocked fast path "
+                f"degraded, not the runner")
+        elif regressed:
+            verdict = "SLOW-RUNNER? (absolute regression, in-run signal healthy)"
+        else:
+            verdict = "OK"
+        amort_txt = f", S1/S8 {amort:.2f}x" if amort is not None else ""
+        print(f"floor_guard: W={width}: baseline {b*1e6:.2f} us/step, "
+              f"current {c*1e6:.2f} us/step ({ratio:.2f}x{amort_txt}) "
+              f"{verdict}")
+    if judged == 0:
+        failures.append("no width was present in both files")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current",
+                    default="artifacts/bench/pallas_floor_smoke.json")
+    ap.add_argument("--baseline",
+                    default="artifacts/bench/pallas_floor_smoke_baseline.json")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="max allowed current/baseline wall-per-step ratio")
+    ap.add_argument("--min-amortization", type=float, default=1.05,
+                    help="in-run S1/S8 speedup below which an absolute "
+                         "regression counts as a fast-path failure")
+    a = ap.parse_args(argv)
+    with open(a.current) as f:
+        current = json.load(f)
+    with open(a.baseline) as f:
+        baseline = json.load(f)
+    failures = check(current, baseline, a.factor, a.min_amortization)
+    for msg in failures:
+        print(f"floor_guard: FAIL: {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

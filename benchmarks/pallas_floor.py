@@ -1,13 +1,14 @@
-"""Fused-timestep floor: pallas_step vs fused, and launch amortization vs S.
+"""Fused-timestep floor: pallas_step vs fused, launch amortization vs S,
+and the double-buffered deep-halo pipeline vs its serial-exchange ablation.
 
 Fig-1-style sweep at the finest grain (iterations=1), where wall time per
 step measures the runtime's per-step control path, not arithmetic — the
-regime where the paper's METG collapses. Two measurements:
+regime where the paper's METG collapses. Three measurements:
 
   1. `fused` vs `pallas_step` (PR 2): one gather + masked-mean chain + body
      op per step vs the whole step as one fused kernel. Acceptance:
      pallas_step's wall/step STRICTLY lower than fused's at every width.
-  2. Temporal blocking (this PR): pallas_step with steps_per_launch =
+  2. Temporal blocking (PR 3): pallas_step with steps_per_launch =
      S in {1, 2, 4, 8, 16} (+ the VMEM auto-tuner's pick). S timesteps
      share one kernel launch and one deep-halo exchange, so launches and
      exchanges per run drop by S x. The sweep runs MULTI-device (default
@@ -17,6 +18,14 @@ regime where the paper's METG collapses. Two measurements:
      there is nothing left to amortize and the sweep would only measure
      noise). Acceptance: wall/step monotonically non-increasing in S,
      with S=8 at least 1.5x under S=1.
+  3. Pipeline (this PR): at the TUNED S (kernels/schedule.py with
+     pipeline=True), pipeline=True vs the pipeline=False ablation —
+     the serial-exchange schedule every deep exchange previously sat in.
+     The pair is measured in interleaved ROUNDS inside one worker (pipe,
+     nopipe, pipe, nopipe, ...) and best-of taken per label, because on
+     this container the collective rendezvous cost drifts with machine
+     load far more than the effect size. Acceptance: pipelined wall/step
+     <= 0.85x of the ablation's.
 
 All variants of a width run back-to-back in ONE worker process
 (SweepSpec.compare_runtimes / option_variants), so ratios are not polluted
@@ -24,12 +33,16 @@ by scheduling differences across workers. Outputs:
 
   artifacts/bench/pallas_floor.csv   one row per (width, backend, variant)
   artifacts/bench/pallas_floor.json  summary incl. per-width ratios, the
-                                     strictly-lower verdict, and the
-                                     steps_per_launch sweep + verdicts
+                                     strictly-lower verdict, the
+                                     steps_per_launch sweep + verdicts,
+                                     and the pipeline speedup at tuned S
 
 ``--smoke`` shrinks the sweep to a seconds-long CI guard (tiny width/steps,
 no timing assertions — it exists so the launch-amortization artifact and
-the blocked code path can never silently bit-rot).
+the blocked + pipelined code paths can never silently bit-rot) and writes
+to ``pallas_floor_smoke.{csv,json}`` so the committed full-run artifacts
+survive a smoke run. ``benchmarks.floor_guard`` compares a fresh smoke
+JSON against the committed ``pallas_floor_smoke_baseline.json``.
 """
 from __future__ import annotations
 
@@ -46,6 +59,7 @@ from benchmarks.common import (
 )
 
 from repro.configs.taskbench import PRESETS
+from repro.kernels import schedule as _schedule
 
 WIDTHS = (64, 256, 1024, 4096)
 #: temporal-blocking depths swept (plus the auto-tuner row); widths for the
@@ -54,6 +68,11 @@ WIDTHS = (64, 256, 1024, 4096)
 SWEEP_S = (1, 2, 4, 8, 16)
 SWEEP_WIDTHS = (256, 1024)
 SWEEP_DEVICES = 4
+#: widths for the pipeline-vs-ablation pair (need a block wide enough that
+#: the interior covers the exchange at the tuned S — see kernels/schedule)
+PIPE_WIDTHS = (512, 1024)
+#: interleaved measurement rounds for the pipeline pair (noise resistance)
+PIPE_ROUNDS = 4
 
 
 def _per_step_walls(rows, steps, runtime):
@@ -70,8 +89,9 @@ def _per_step_walls(rows, steps, runtime):
 
 def run(devices: int = 1, steps: int = 0, reps: int = 0,
         widths=WIDTHS, sweep_widths=SWEEP_WIDTHS, sweep_s=SWEEP_S,
-        sweep_devices: int = SWEEP_DEVICES, payload: int = 64,
-        options=None, verbose: bool = True, smoke: bool = False):
+        sweep_devices: int = SWEEP_DEVICES, pipe_widths=PIPE_WIDTHS,
+        payload: int = 64, options=None, verbose: bool = True,
+        smoke: bool = False):
     cfg = PRESETS["floor"]
     steps = steps or cfg.steps
     reps = reps or cfg.reps
@@ -138,6 +158,52 @@ def run(devices: int = 1, steps: int = 0, reps: int = 0,
             print(f"floor W={width:5d} steps_per_launch: {ladder}",
                   flush=True)
 
+    # ---- 3. pipeline vs serial-exchange ablation at the tuned S -----------
+    pipeline = {}
+    for width in pipe_widths:
+        tuned = _schedule.choose_steps_per_launch(
+            block=width // sweep_devices, radius=1, payload=payload,
+            total_steps=steps, combine="window", pipeline=True)
+        pair = {"pipe": {"steps_per_launch": tuned},
+                "nopipe": {"steps_per_launch": tuned, "pipeline": False}}
+        # interleaved rounds: pipe#0, nopipe#0, pipe#1, ... so machine-load
+        # drift hits both labels alike; best-of folds the rounds per label
+        rounds = 1 if smoke else PIPE_ROUNDS
+        pvariants = {f"{lbl}#{i}": opts for i in range(rounds)
+                     for lbl, opts in pair.items()}
+        spec = SweepSpec(
+            runtime="pallas_step", pattern="stencil_1d",
+            devices=sweep_devices, width=width, steps=steps,
+            grains=cfg.grains, reps=max(reps, 10) if not smoke else reps,
+            payload=payload, options=dict(options or {}),
+            option_variants=pvariants,
+        )
+        rows = run_worker(spec)
+        raw = _per_step_walls(rows, steps, "pallas_step")
+        walls = {}
+        for lbl, w in raw.items():
+            base = lbl.split("#")[0]
+            walls[base] = min(walls.get(base, w), w)
+        for r in rows:
+            if "skip" in r:
+                continue
+            rows_out.append([r["runtime"], f"S{tuned}:{r['variant']}", width,
+                             r["grain"], steps, r["wall"], r["wall"] / steps,
+                             r["gran_us"], r["dispatches"]])
+        if "pipe" in walls and "nopipe" in walls:
+            pipeline[str(width)] = {
+                "steps_per_launch": tuned,
+                "pipe_wall_per_step": walls["pipe"],
+                "nopipe_wall_per_step": walls["nopipe"],
+                "pipe_over_nopipe": walls["pipe"] / walls["nopipe"],
+            }
+            if verbose:
+                print(f"floor W={width:5d} pipeline@S{tuned}: "
+                      f"pipe {walls['pipe']*1e6:.2f}us "
+                      f"nopipe {walls['nopipe']*1e6:.2f}us "
+                      f"(ratio {walls['pipe']/walls['nopipe']:.3f})",
+                      flush=True)
+
     # verdicts over the numeric ladder (auto row reported but not judged)
     monotone = bool(sweep)
     s8_speedups = {}
@@ -150,15 +216,24 @@ def run(devices: int = 1, steps: int = 0, reps: int = 0,
             s8_speedups[width] = walls["S1"] / walls["S8"]
     amortization_ok = bool(s8_speedups) and all(
         v >= 1.5 for v in s8_speedups.values())
+    pipeline_ok = bool(pipeline) and all(
+        v["pipe_over_nopipe"] <= 0.85 for v in pipeline.values())
+
+    # headline floor per width (best pallas_step wall/step across variants)
+    # — the quantity benchmarks.floor_guard regression-checks in CI
+    floor_walls = {
+        width: min(walls.values()) for width, walls in sweep.items() if walls
+    }
 
     strictly_lower = bool(ratios) and all(v < 1.0 for v in ratios.values())
+    stem = "pallas_floor_smoke" if smoke else "pallas_floor"
     path_csv = write_csv(
-        "pallas_floor.csv",
+        f"{stem}.csv",
         ["backend", "variant", "width", "grain", "steps", "wall_s",
          "wall_per_step_s", "granularity_us", "dispatches"],
         rows_out,
     )
-    path_json = bench_path("pallas_floor.json")
+    path_json = bench_path(f"{stem}.json")
     with open(path_json, "w") as f:
         json.dump({
             "devices": devices, "sweep_devices": sweep_devices,
@@ -172,6 +247,9 @@ def run(devices: int = 1, steps: int = 0, reps: int = 0,
             "s1_over_s8_speedup": s8_speedups,
             "sweep_monotone_nonincreasing": monotone,
             "amortization_ok_s8_1p5x": amortization_ok,
+            "floor_wall_per_step": floor_walls,
+            "pipeline_at_tuned_s": pipeline,
+            "pipeline_ok_0p85": pipeline_ok,
         }, f, indent=2)
     if verbose:
         print(f"pallas_step strictly lower wall/step than fused: "
@@ -182,10 +260,18 @@ def run(devices: int = 1, steps: int = 0, reps: int = 0,
                   + ", ".join(f"W={w}: {v:.2f}x"
                               for w, v in sorted(s8_speedups.items(),
                                                  key=lambda kv: int(kv[0]))))
+        if pipeline:
+            print("pipeline <= 0.85x ablation at tuned S: "
+                  f"{pipeline_ok} ("
+                  + ", ".join(f"W={w}: {v['pipe_over_nopipe']:.3f}"
+                              for w, v in sorted(pipeline.items(),
+                                                 key=lambda kv: int(kv[0])))
+                  + ")")
         print(f"wrote {path_csv} and {path_json}")
     return {"ratios": ratios, "strictly_lower": strictly_lower,
             "sweep": sweep, "monotone": monotone,
-            "s8_speedups": s8_speedups, "amortization_ok": amortization_ok}
+            "s8_speedups": s8_speedups, "amortization_ok": amortization_ok,
+            "pipeline": pipeline, "pipeline_ok": pipeline_ok}
 
 
 def main(argv=None):
@@ -204,26 +290,42 @@ def main(argv=None):
                     help="device count for the steps_per_launch sweep "
                          "(multi-device: the per-step collective is the "
                          "cost blocking amortizes)")
+    ap.add_argument("--pipe-widths",
+                    default=",".join(str(w) for w in PIPE_WIDTHS),
+                    help="widths for the pipeline-vs-ablation pair")
     ap.add_argument("--smoke", action="store_true",
-                    help="seconds-long CI guard: tiny sweep, no assertions")
+                    help="seconds-long CI guard: tiny sweep, no assertions, "
+                         "writes pallas_floor_smoke.* (committed artifacts "
+                         "untouched)")
     backend_options_args(ap)
     a = ap.parse_args(argv)
     opts = parse_backend_options(a)
     if a.smoke:
-        res = run(devices=a.devices, steps=17, reps=1, widths=(64,),
+        # reps=3 (not 1): the floor guard compares this run's best-of
+        # against the committed baseline, and a single rep on a shared
+        # runner is all jitter
+        res = run(devices=a.devices, steps=17, reps=3, widths=(64,),
                   sweep_widths=(64,), sweep_s=(1, 2, 4, 8),
-                  sweep_devices=2, options=opts, smoke=True)
+                  sweep_devices=2, pipe_widths=(256,), options=opts,
+                  smoke=True)
         # the smoke run guards the CODE PATHS (blocked kernel, deep
-        # exchange, artifact schema), not the timing verdicts — but every
-        # swept width must have actually produced variant rows (a width
-        # whose variants were all skipped means the blocked path never ran)
+        # exchange, pipelined phase split, artifact schema), not the timing
+        # verdicts — but every swept width must have actually produced
+        # variant rows (a width whose variants were all skipped means the
+        # blocked path never ran), and the pipeline pair must have run both
+        # labels
         ok = bool(res["sweep"]) and all(res["sweep"].values())
+        ok = ok and bool(res["pipeline"]) and all(
+            set(v) >= {"pipe_wall_per_step", "nopipe_wall_per_step"}
+            for v in res["pipeline"].values())
         return 0 if ok else 1
     run(devices=a.devices, steps=a.steps, reps=a.reps,
         widths=tuple(int(w) for w in a.widths.split(",")),
         sweep_widths=tuple(int(w) for w in a.sweep_widths.split(",")),
         sweep_s=tuple(int(s) for s in a.sweep_s.split(",")),
-        sweep_devices=a.sweep_devices, options=opts)
+        sweep_devices=a.sweep_devices,
+        pipe_widths=tuple(int(w) for w in a.pipe_widths.split(",")),
+        options=opts)
     return 0
 
 

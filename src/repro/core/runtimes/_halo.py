@@ -10,10 +10,24 @@ per direction supplies all remote inputs.
 distributed backends stay bit-compatible — the masks below must mirror
 patterns.dependencies for every edge case (global edges, dom's asymmetry,
 random_nearest's keep set).
+
+Async interface (the pipelined `pallas_step` path): ``exchange_halos_start``
+/ ``exchange_edges_start`` issue the ring transfer and return a
+``HaloHandle``; ``exchange_halos_join`` yields the received rows. The
+default (and only off-TPU) implementation issues ``ppermute`` ops whose
+results nothing touches until the join point — the asynchrony is the SSA
+dataflow itself: XLA's latency-hiding scheduler splits the collective into
+start/done thunks and runs any independent compute between issue and join
+under the transfer. On TPU, a Mosaic ``make_async_remote_copy`` ring kernel
+(double-buffered VMEM halo slots, send/recv semaphores per direction) can
+slot in behind the same start/join interface; it is not implemented here
+because this container cannot lower or validate it — the interface is the
+contract, `HALO_ASYNC_IMPLS` the registry a TPU build extends.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+import dataclasses
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -101,6 +115,142 @@ def ring_perms(num_devices: int, axis: str = "shard"):
     return fwd, bwd
 
 
+@dataclasses.dataclass(frozen=True)
+class HaloHandle:
+    """An in-flight ring exchange: the double-buffered halo slots.
+
+    ``recv_left``/``recv_right`` are the transfer's landing buffers. Under
+    the XLA implementation they are ordinary traced arrays that no op may
+    consume before ``exchange_halos_join`` — keeping the window between
+    start and join free of data dependences is what lets the scheduler run
+    the collective under unrelated compute. A Mosaic implementation would
+    carry (buffer, semaphore) pairs here instead; only the join may touch
+    the buffers in either case.
+    """
+
+    recv_left: jax.Array
+    recv_right: jax.Array
+
+    def join(self) -> Tuple[jax.Array, jax.Array]:
+        return self.recv_left, self.recv_right
+
+
+def _gather_edges_start(first: jax.Array, last: jax.Array, num_devices: int,
+                        axis: str = "shard", *, row_axis: int = 0) -> HaloHandle:
+    """Fused default: ONE collective moves both directions.
+
+    Having both edge buffers in hand at issue time — the property the
+    double-buffered interface guarantees — lets the two ring directions
+    share a single all-gather of the packed [first | last] edges instead of
+    paying one collective rendezvous per direction (two back-to-back
+    ppermutes cost ~3x one collective on this container's forced-host
+    devices). Each device then slices its left neighbor's ``last`` and
+    right neighbor's ``first`` out of the gathered ring locally; the moved
+    rows are exact copies either way, so transports are bit-identical.
+    """
+    r = first.shape[row_axis]
+    packed = jnp.concatenate([first, last], axis=row_axis)  # (2r, ...)
+    ring = jax.lax.all_gather(
+        packed, axis, axis=row_axis, tiled=True)  # (D * 2r, ...)
+    d = jax.lax.axis_index(axis)
+    left = jnp.mod(d - 1, num_devices) * 2 * r + r   # d-1's `last` rows
+    right = jnp.mod(d + 1, num_devices) * 2 * r      # d+1's `first` rows
+    return HaloHandle(
+        recv_left=jax.lax.dynamic_slice_in_dim(ring, left, r, axis=row_axis),
+        recv_right=jax.lax.dynamic_slice_in_dim(ring, right, r, axis=row_axis),
+    )
+
+
+def _ppermute_edges_start(first: jax.Array, last: jax.Array, num_devices: int,
+                          axis: str = "shard", *, row_axis: int = 0) -> HaloHandle:
+    """ppermute variant: one collective per direction, results untouched
+    until the join — the transport ``exchange_halos`` uses, kept for
+    parity testing and as the donated-buffer fallback where an all-gather
+    does not lower."""
+    del row_axis  # ppermute moves whole buffers; the slicing already happened
+    fwd, bwd = ring_perms(num_devices, axis)
+    return HaloHandle(
+        recv_left=jax.lax.ppermute(last, axis, fwd),   # from d-1: its last r
+        recv_right=jax.lax.ppermute(first, axis, bwd),  # from d+1: its first r
+    )
+
+
+#: name -> edge-transfer starter. "xla" (the fused single-collective
+#: transport) is the portable default, "ppermute" the per-direction
+#: variant; a TPU build registers "mosaic" (make_async_remote_copy ring
+#: kernel) under the same signature and everything above this module is
+#: unchanged.
+HALO_ASYNC_IMPLS = {
+    "xla": _gather_edges_start,
+    "ppermute": _ppermute_edges_start,
+}
+
+
+def exchange_edges_start(first: jax.Array, last: jax.Array, num_devices: int,
+                         axis: str = "shard", *, row_axis: int = 0,
+                         impl: str = "xla") -> HaloHandle:
+    """Start a ring exchange of PRE-SLICED edge rows (``r <= block``).
+
+    ``first``/``last`` are this device's leading/trailing r rows (along
+    ``row_axis``) — e.g. the boundary-phase outputs of a pipelined launch,
+    which are exactly the rows the next launch's neighbors need, so the
+    transfer can be issued the moment they exist, before any interior
+    compute. Join with ``exchange_halos_join``.
+    """
+    try:
+        start = HALO_ASYNC_IMPLS[impl]
+    except KeyError:
+        raise ValueError(
+            f"unknown halo async impl {impl!r}; known {sorted(HALO_ASYNC_IMPLS)}"
+        ) from None
+    return start(first, last, num_devices, axis, row_axis=row_axis)
+
+
+def exchange_halos_start(local: jax.Array, r: int, num_devices: int,
+                         axis: str = "shard", *, row_axis: int = 0,
+                         impl: str = "xla") -> HaloHandle:
+    """Start a ring exchange of r edge rows each way; join for the results.
+
+    The async counterpart of ``exchange_halos`` (same depth semantics,
+    including the multi-hop deep path): slices the edge rows and issues the
+    transfers, returning a ``HaloHandle`` whose buffers must not be
+    consumed before ``exchange_halos_join``. Multi-hop depths (``r >
+    block``) issue the whole chain of block shifts up front; the chain is
+    still one dependence-free island the scheduler may sink under
+    independent compute.
+    """
+    n = local.shape[row_axis]
+    if r <= n:
+        last = jax.lax.slice_in_dim(local, n - r, n, axis=row_axis)
+        first = jax.lax.slice_in_dim(local, 0, r, axis=row_axis)
+        return exchange_edges_start(first, last, num_devices, axis,
+                                    row_axis=row_axis, impl=impl)
+
+    fwd, bwd = ring_perms(num_devices, axis)
+    hops = -(-r // n)  # ceil: whole-block shifts per direction
+    left_blocks = []   # hop h holds block d-h: collect nearest-first
+    right_blocks = []  # hop h holds block d+h
+    cur_l = cur_r = local
+    for _ in range(hops):
+        cur_l = jax.lax.ppermute(cur_l, axis, fwd)
+        cur_r = jax.lax.ppermute(cur_r, axis, bwd)
+        left_blocks.append(cur_l)
+        right_blocks.append(cur_r)
+    # global row order: [d-hops .. d-1] on the left, [d+1 .. d+hops] right
+    left_full = jnp.concatenate(list(reversed(left_blocks)), axis=row_axis)
+    right_full = jnp.concatenate(right_blocks, axis=row_axis)
+    total = hops * n
+    recv_left = jax.lax.slice_in_dim(
+        left_full, total - r, total, axis=row_axis)
+    recv_right = jax.lax.slice_in_dim(right_full, 0, r, axis=row_axis)
+    return HaloHandle(recv_left=recv_left, recv_right=recv_right)
+
+
+def exchange_halos_join(handle: HaloHandle) -> Tuple[jax.Array, jax.Array]:
+    """Complete an exchange: (recv_left, recv_right), now safe to consume."""
+    return handle.join()
+
+
 def exchange_halos(local: jax.Array, r: int, num_devices: int,
                    axis: str = "shard", *, row_axis: int = 0):
     """Ring-exchange r edge rows each way (multi-hop when r exceeds a block).
@@ -120,30 +270,15 @@ def exchange_halos(local: jax.Array, r: int, num_devices: int,
     returned. Depths past a full ring wrap (hop count may exceed the device
     count) simply revisit blocks, which is exactly the periodic/mod-W
     semantics the halo combines expect.
-    """
-    fwd, bwd = ring_perms(num_devices, axis)
-    n = local.shape[row_axis]
-    if r <= n:
-        last = jax.lax.slice_in_dim(local, n - r, n, axis=row_axis)
-        first = jax.lax.slice_in_dim(local, 0, r, axis=row_axis)
-        recv_left = jax.lax.ppermute(last, axis, fwd)  # from d-1: its last r
-        recv_right = jax.lax.ppermute(first, axis, bwd)  # from d+1: its first r
-        return recv_left, recv_right
 
-    hops = -(-r // n)  # ceil: whole-block shifts per direction
-    left_blocks = []   # hop h holds block d-h: collect nearest-first
-    right_blocks = []  # hop h holds block d+h
-    cur_l = cur_r = local
-    for _ in range(hops):
-        cur_l = jax.lax.ppermute(cur_l, axis, fwd)
-        cur_r = jax.lax.ppermute(cur_r, axis, bwd)
-        left_blocks.append(cur_l)
-        right_blocks.append(cur_r)
-    # global row order: [d-hops .. d-1] on the left, [d+1 .. d+hops] right
-    left_full = jnp.concatenate(list(reversed(left_blocks)), axis=row_axis)
-    right_full = jnp.concatenate(right_blocks, axis=row_axis)
-    total = hops * n
-    recv_left = jax.lax.slice_in_dim(
-        left_full, total - r, total, axis=row_axis)
-    recv_right = jax.lax.slice_in_dim(right_full, 0, r, axis=row_axis)
-    return recv_left, recv_right
+    This is the synchronous spelling — start and join back-to-back, pinned
+    to the established per-direction ppermute transport so every backend
+    that predates the pipeline (bsp/bsp_scan/overlap, and pallas_step's
+    serial schedule) keeps its measured behavior. The pipelined paths call
+    start/join themselves to put compute between, and default to the fused
+    single-collective transport instead.
+    """
+    return exchange_halos_join(
+        exchange_halos_start(local, r, num_devices, axis, row_axis=row_axis,
+                             impl="ppermute")
+    )

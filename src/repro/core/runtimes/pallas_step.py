@@ -44,12 +44,28 @@ axis); one deep ring exchange moves every member's halos for S steps at
 once. Mixed-spec or ragged-shape ensembles fall back to one launch per
 member inside the same jitted scan.
 
+Double-buffered deep-halo pipeline (``pipeline=True``, the default): with
+blocking alone every deep exchange still sits serially between launches, so
+at fine grain the wall/step floor measures ring latency. The pipelined
+schedule splits each blocked launch into a boundary phase (the 2*S*r edge
+rows whose S-step light cone touches the incoming halo) and an interior
+phase (everything else), and issues the NEXT launch's exchange on the
+boundary outputs — which are exactly the rows the neighbors need — before
+running the interior, so in steady state the exchange of launch l+1 is in
+flight under the interior compute of launch l (`_halo.exchange_edges_start`
+/ the HaloHandle carried in the scan are the double-buffered halo slots).
+``pipeline=False`` is the serial-exchange ablation, mirroring the overlap
+runtime's ``overlap=False``; blocks with no interior (B <= 2*S*r, where
+splitting buys nothing and costs a second launch) fall back to it
+automatically. The scan's final iteration issues one dead exchange (uniform
+bodies); its cost is 1/L of the exchanges and it keeps the loop rolled.
+
 Options: combine="window"|"gather"|"onehot" (see taskbench_step.py),
-steps_per_launch=int|"auto", block_rows, unroll.
+steps_per_launch=int|"auto", pipeline=True|False, block_rows, unroll.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Sequence, Tuple
+from typing import Callable, List, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -191,25 +207,120 @@ def _extend_state(s: jax.Array, depth: int, num_devices: int,
     return jnp.concatenate([rl, s, rr], axis=row_axis)
 
 
+def _rebase_rows(rel: jax.Array, *, row_axis: int = 0) -> jax.Array:
+    """Signed window offsets -> absolute rows of THIS working buffer
+    (``+ arange(M)``, clipped; the clip only ever binds on edge-garbage
+    rows, which are never consumed by valid rows)."""
+    m = rel.shape[row_axis]
+    shape = [1] * rel.ndim
+    shape[row_axis] = m
+    rows = jnp.arange(m, dtype=jnp.int32).reshape(shape)
+    return jnp.clip(rel + rows, 0, m - 1)
+
+
 def _extend_tables(idx: jax.Array, wgt: jax.Array, depth: int,
                    num_devices: int, mode: str, *, row_axis: int = 0):
     """Deep-exchange the per-row operand tables ONCE for a blocked run.
 
     Weights (per global row, depth-invariant) extend exactly like state.
     Gather/onehot offset tables additionally rebase from signed offsets to
-    absolute working-buffer rows via ``+ arange(M)``; the clip only ever
-    binds on edge-garbage rows, which are never consumed by valid rows.
-    Window mode returns idx untouched (it is a dummy the kernel replaces).
+    absolute working-buffer rows (``_rebase_rows``). Window mode returns
+    idx untouched (it is a dummy the kernel replaces).
     """
     wext = _extend_state(wgt, depth, num_devices, row_axis=row_axis)
     if mode == "window":
         return idx, wext
     rel = _extend_state(idx, depth, num_devices, row_axis=row_axis)
-    m = rel.shape[row_axis]
-    shape = [1] * rel.ndim
-    shape[row_axis] = m
-    rows = jnp.arange(m, dtype=jnp.int32).reshape(shape)
-    return jnp.clip(rel + rows, 0, m - 1), wext
+    return _rebase_rows(rel, row_axis=row_axis), wext
+
+
+class _PhaseTables(NamedTuple):
+    """Per-phase operand tables for one pipelined member (leading K axis).
+
+    ``i_int``/``w_int`` cover the interior working buffer (the owned B
+    rows); ``i_bnd``/``w_bnd`` cover the fused (K, 6*depth) boundary
+    working buffer — rows [left buffer..., right buffer...] — matching
+    ``taskbench_step_boundary``'s layout.
+    """
+
+    i_int: jax.Array
+    w_int: jax.Array
+    i_bnd: jax.Array
+    w_bnd: jax.Array
+
+
+def _phase_tables(idx: jax.Array, wgt: jax.Array, depth: int,
+                  num_devices: int, mode: str) -> _PhaseTables:
+    """Deep-exchange the tables once and slice them per pipeline phase.
+
+    All arrays carry a leading K axis; rows live on axis 1. The extended
+    table wext has B + 2*depth rows covering global rows [p0 - depth,
+    p0 + B + depth): the interior buffer (owned rows [p0, p0 + B)) is
+    wext[depth : depth + B], the left boundary buffer (rows [p0 - depth,
+    p0 + 2*depth)) is wext[:3*depth], the right one wext[B - depth:].
+    Gather/onehot offsets are rebased per buffer AFTER slicing — each
+    phase's idx addresses its own working buffer.
+    """
+    K, B = wgt.shape[0], wgt.shape[1]
+
+    def phases(ext):
+        interior = jax.lax.slice_in_dim(ext, depth, depth + B, axis=1)
+        boundary = jnp.concatenate([  # fused rows: [left 3d | right 3d]
+            jax.lax.slice_in_dim(ext, 0, 3 * depth, axis=1),
+            jax.lax.slice_in_dim(ext, B - depth, B + 2 * depth, axis=1),
+        ], axis=1)
+        return interior, boundary
+
+    w_int, w_bnd = phases(_extend_state(wgt, depth, num_devices, row_axis=1))
+    if mode == "window":  # idx is a dummy the kernel replaces
+        i_int = jnp.zeros((K, 1, 1), jnp.int32)
+        i_bnd = jnp.zeros((K, 1, 1), jnp.int32)
+    else:
+        rel_int, rel_bnd = phases(
+            _extend_state(idx, depth, num_devices, row_axis=1))
+        i_int = _rebase_rows(rel_int, row_axis=1)
+        i_bnd = _rebase_rows(rel_bnd, row_axis=1)
+    return _PhaseTables(i_int, w_int, i_bnd, w_bnd)
+
+
+def _pipelined_launch(s, hl, hr, a, ph: _PhaseTables, depth: int,
+                      num_devices: int, kwb: dict, impl: str = "xla"):
+    """One software-pipelined blocked launch on stacked (K, B, payload)
+    state. Steady-state schedule (DESIGN.md §6):
+
+      1. boundary phase — consumes the halo received for THIS launch
+         (``hl``/``hr``, issued at the end of the previous launch);
+      2. the NEXT launch's deep exchange starts on the boundary outputs
+         (they ARE the edge rows the neighbors need);
+      3. the interior phase — no data dependence on the halo, the boundary
+         launch, or the in-flight collective, so the scheduler may run the
+         exchange under it.
+
+    Returns (s_next, HaloHandle for the next launch).
+    """
+    B = s.shape[1]
+    bl = jnp.concatenate(
+        [hl, jax.lax.slice_in_dim(s, 0, 2 * depth, axis=1)], axis=1)
+    br = jnp.concatenate(
+        [jax.lax.slice_in_dim(s, B - 2 * depth, B, axis=1), hr], axis=1)
+    bl_out, br_out = _kops.taskbench_boundary(
+        bl, br, ph.i_bnd, ph.w_bnd, a, depth=depth, **kwb)
+    handle = _halo.exchange_edges_start(
+        bl_out, br_out, num_devices, AXIS, row_axis=1, impl=impl)
+    mid = _kops.taskbench_interior(
+        s, ph.i_int, ph.w_int, a, depth=depth, **kwb)
+    return jnp.concatenate([bl_out, mid, br_out], axis=1), handle
+
+
+def _prologue_exchange(state, depth, num_devices, impl: str = "xla"):
+    """Start the FIRST blocked launch's exchange on the t=0 state's edges
+    (the pipeline's fill step; the scan body then keeps one exchange in
+    flight per launch)."""
+    B = state.shape[1]
+    return _halo.exchange_edges_start(
+        jax.lax.slice_in_dim(state, 0, depth, axis=1),
+        jax.lax.slice_in_dim(state, B - depth, B, axis=1),
+        num_devices, AXIS, row_axis=1, impl=impl)
 
 
 def _act_schedule(
@@ -291,6 +402,37 @@ class PallasStepRuntime(_BspBase):
             kw["block_rows"] = int(self.options["block_rows"])
         return kw
 
+    # ---------------------------------------------------------- pipelining
+
+    def _pipeline_requested(self) -> bool:
+        """``pipeline=False`` is the serial-exchange ablation (mirrors the
+        overlap runtime's ``overlap=False``); default on."""
+        return bool(self.options.get("pipeline", True))
+
+    def _halo_impl(self) -> str:
+        """Transport for the pipelined edge exchange: "xla" (fused
+        single-collective default) or "ppermute" (per-direction; isolates
+        the pure scheduling effect in ablations)."""
+        return str(self.options.get("halo_impl", "xla"))
+
+    def _pipeline_active(self, block: int, s: int, halo: int) -> bool:
+        """The pipelined schedule applies when blocking is on AND the owned
+        block keeps a nonempty interior once 2*S*r edge rows belong to the
+        boundary phase. Tiny blocks (block <= 2*S*r) have nothing to hide
+        the exchange under — the regime where pipeline=False wins anyway by
+        not paying the second launch — so they fall back to the serial
+        schedule. Note S*r < block here, so the pipelined exchange is
+        always single-hop. Under ``steps_per_launch="auto"`` the tuner's
+        profitability verdict also binds (a fallback depth chosen with no
+        covering candidate runs serial); an EXPLICIT S is the user's
+        ablation choice and pipelines whenever structurally possible."""
+        if not (s > 1 and halo > 0 and self._pipeline_requested()
+                and block > 2 * s * halo):
+            return False
+        if _schedule.is_auto(self.options.get("steps_per_launch")):
+            return _schedule.pipeline_interior_covers_exchange(block, halo, s)
+        return True
+
     # ------------------------------------------------------- launch depth
 
     def _steps_per_launch(self, block: int, radius: int, payload: int,
@@ -299,6 +441,7 @@ class PallasStepRuntime(_BspBase):
             self.options.get("steps_per_launch"),
             block=block, radius=radius, payload=payload,
             total_steps=total_steps, combine=self._combine_mode(),
+            pipeline=self._pipeline_requested(),
         )
 
     def _graph_steps_per_launch(self, graph: TaskGraph) -> int:
@@ -381,7 +524,11 @@ class PallasStepRuntime(_BspBase):
 
     def _build_blocked(self, graph: TaskGraph, S: int) -> Callable:
         """ceil((T-1)/S) launches: one deep exchange + one S-step kernel
-        per launch instead of one exchange + one launch per step."""
+        per launch instead of one exchange + one launch per step. When the
+        pipeline applies (DESIGN.md §6) each launch splits into boundary +
+        interior phases and the next launch's exchange rides under the
+        interior; otherwise the exchange sits serially before the launch.
+        """
         unroll = int(self.options.get("unroll", 1))
         mesh = self._mesh()
         D = len(self.devices)
@@ -394,6 +541,8 @@ class PallasStepRuntime(_BspBase):
         idx, wgt, idx0, wgt0 = self._blocked_operands(graph, H)
         acts = _act_schedule((graph.steps,), graph.steps, S)[:, 0]  # (L, S)
         T = graph.steps
+        pipelined = self._pipeline_active(self._block(graph), S, H)
+        impl = self._halo_impl()
 
         def local_run(local, i, w, i0, w0, act_seq):
             state = _kops.taskbench_step(
@@ -401,6 +550,21 @@ class PallasStepRuntime(_BspBase):
             if T == 1:
                 return state
             B = local.shape[0]
+            if pipelined:
+                ph = _phase_tables(i[None], w[None], depth, D, mode)
+                h = _prologue_exchange(state[None], depth, D, impl)
+
+                def pbody(carry, a):  # a: (S,) per-depth activity
+                    s, hl, hr = carry
+                    s2, h2 = _pipelined_launch(
+                        s, hl, hr, a[None], ph, depth, D, kwb, impl)
+                    return (s2, h2.recv_left, h2.recv_right), None
+
+                (state3, _, _), _ = jax.lax.scan(
+                    pbody, (state[None], h.recv_left, h.recv_right),
+                    act_seq, unroll=unroll)
+                return state3[0]
+
             # the per-row operand tables are deep-exchanged ONCE: every
             # working row then owns its exact (edge-clipped) weights
             iext, wext = _extend_tables(i, w, depth, D, mode)
@@ -513,12 +677,32 @@ class PallasStepRuntime(_BspBase):
         ops4 = [self._blocked_operands(g, H) for g in members]
         idx, wgt, idx0, wgt0 = _stack_operands(ops4)
         acts = _act_schedule(ensemble.member_steps, steps, S)  # (L, K, S)
+        pipelined = self._pipeline_active(self._block(members[0]), S, H)
+        impl = self._halo_impl()
 
         def local_run(local, i, w, i0, w0, act_seq):  # local (K, B, P)
             state = _kops.taskbench_step(local, i0, w0, **kw0)
             if steps == 1:
                 return state
             B = local.shape[1]
+            if pipelined:
+                # one boundary launch (K row-fused 6*depth-row programs) +
+                # one interior launch per deep exchange — every member
+                # shares both
+                ph = _phase_tables(i, w, depth, D, mode)
+                h = _prologue_exchange(state, depth, D, impl)
+
+                def pbody(carry, a):  # a: (K, S)
+                    s, hl, hr = carry
+                    s2, h2 = _pipelined_launch(
+                        s, hl, hr, a, ph, depth, D, kwb, impl)
+                    return (s2, h2.recv_left, h2.recv_right), None
+
+                (state, _, _), _ = jax.lax.scan(
+                    pbody, (state, h.recv_left, h.recv_right),
+                    act_seq, unroll=unroll)
+                return state
+
             iext, wext = _extend_tables(i, w, depth, D, mode, row_axis=1)
 
             def body(s, a):  # a: (K, S) per-member per-depth activity
@@ -626,6 +810,14 @@ class PallasStepRuntime(_BspBase):
             kwb.pop("block_rows", None)
         ops4 = [self._blocked_operands(g, h) for g, h in zip(members, halos)]
         acts = _act_schedule(ensemble.member_steps, steps, S)  # (L, K, S)
+        # per-member pipeline gate: the cadence is shared, but a member with
+        # no interior at depth S*h_k keeps the serial exchange inside the
+        # same scan body
+        piped = [
+            self._pipeline_active(self._block(g), S, h)
+            for g, h in zip(members, halos)
+        ]
+        impl = self._halo_impl()
 
         def local_run(states, operands, act_seq):
             states = tuple(
@@ -635,15 +827,34 @@ class PallasStepRuntime(_BspBase):
             if steps == 1:
                 return states
 
-            exts = [  # per member: deep-exchanged (iext, wext) tables
-                _extend_tables(o[0], o[1], depths[k], D, mode)
-                for k, o in enumerate(operands)
-            ]
+            exts = []   # serial members: deep-exchanged (iext, wext) tables
+            phs = []    # pipelined members: per-phase tables
+            halos0 = []  # pipelined members: the fill-step exchange
+            for k, (s, o) in enumerate(zip(states, operands)):
+                if piped[k]:
+                    exts.append(None)
+                    phs.append(_phase_tables(
+                        o[0][None], o[1][None], depths[k], D, mode))
+                    h = _prologue_exchange(s[None], depths[k], D, impl)
+                    halos0.append((h.recv_left, h.recv_right))
+                else:
+                    exts.append(_extend_tables(o[0], o[1], depths[k], D, mode))
+                    phs.append(None)
+                    halos0.append(())
 
-            def body(ss, a):  # a: (K, S)
-                nxt = []
+            def body(carry, a):  # a: (K, S)
+                ss, hh = carry
+                nxt, nh = [], []
                 for k, s in enumerate(ss):
                     dep = depths[k]
+                    if piped[k]:
+                        hl, hr = hh[k]
+                        s2, h2 = _pipelined_launch(
+                            s[None], hl, hr, a[k][None], phs[k], dep, D,
+                            kwbs[k], impl)
+                        nxt.append(s2[0])
+                        nh.append((h2.recv_left, h2.recv_right))
+                        continue
                     B = s.shape[0]
                     ext = _extend_state(s, dep, D)
                     iext, wext = exts[k]
@@ -652,9 +863,11 @@ class PallasStepRuntime(_BspBase):
                         **kwbs[k])[0]
                     nxt.append(
                         jax.lax.slice_in_dim(nf, dep, dep + B, axis=0))
-                return tuple(nxt), None
+                    nh.append(())
+                return (tuple(nxt), tuple(nh)), None
 
-            states, _ = jax.lax.scan(body, states, act_seq, unroll=unroll)
+            (states, _), _ = jax.lax.scan(
+                body, (states, tuple(halos0)), act_seq, unroll=unroll)
             return states
 
         fn = jax.jit(
@@ -677,19 +890,39 @@ class PallasStepRuntime(_BspBase):
 
     def dispatches_per_run(self, graph: TaskGraph) -> int:
         """Actual kernel launches: the t=0 body-only launch plus
-        ceil((T-1)/S) blocked combine launches (S=1 degenerates to T)."""
-        return self._launches(graph.steps, self._graph_steps_per_launch(graph))
+        ceil((T-1)/S) blocked combine launches (S=1 degenerates to T).
+        The pipelined schedule splits every blocked launch into a boundary
+        launch + an interior launch — TWO kernel launches per deep
+        exchange; the accounting stays honest about it (hiding the
+        exchange is bought with an extra, smaller, launch)."""
+        S = self._graph_steps_per_launch(graph)
+        L = self._launches(graph.steps, S)
+        if self._pipeline_active(
+                self._block(graph), S, _patterns.halo_radius(graph)):
+            return 1 + 2 * (L - 1)
+        return L
 
     def ensemble_dispatches_per_run(self, ensemble: GraphEnsemble) -> int:
-        """Stacked ensembles batch all K members into each launch; the
-        tuple fallback launches each member every scan iteration (frozen
-        members included — the kernel runs, the mask discards), so it pays
-        K times the launch count."""
+        """Stacked ensembles batch all K members into each launch (the
+        pipelined split costs 2 launches per blocked iteration — boundary,
+        covering both sides of all K members, plus interior); the tuple
+        fallback launches each member every scan iteration (frozen members
+        included — the kernel runs, the mask discards), so it pays the
+        per-member count summed over members."""
         S = self._ensemble_steps_per_launch(ensemble)
         launches = self._launches(ensemble.steps, S)
+        members = ensemble.members
         if self._is_stacked(ensemble):
+            H = max(_patterns.halo_radius(g) for g in members)
+            if self._pipeline_active(self._block(members[0]), S, H):
+                return 1 + 2 * (launches - 1)
             return launches
-        return launches * len(ensemble.members)
+        total = 0
+        for g in members:
+            piped = self._pipeline_active(
+                self._block(g), S, _patterns.halo_radius(g))
+            total += 1 + (2 if piped else 1) * (launches - 1)
+        return total
 
 
 def _stack_operands(ops4):

@@ -21,7 +21,11 @@ from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.ssd_scan import ssd_chunk_pallas
 from repro.kernels.taskbench_compute import taskbench_compute_pallas
-from repro.kernels.taskbench_step import taskbench_step_pallas
+from repro.kernels.taskbench_step import (
+    taskbench_step_boundary,
+    taskbench_step_interior,
+    taskbench_step_pallas,
+)
 
 
 @functools.cache
@@ -57,6 +61,22 @@ def taskbench_step(
     """
     return taskbench_step_pallas(src, idx, wgt, act,
                                  interpret=_interpret(), **kw)
+
+
+def taskbench_interior(src, idx, wgt, act, *, depth: int, **kw):
+    """Interior phase of a pipelined blocked launch (owned block only;
+    returns the (K, B - 2*depth, payload) rows valid after S shrinks).
+    See kernels.taskbench_step.taskbench_step_interior."""
+    return taskbench_step_interior(src, idx, wgt, act, depth=depth,
+                                   interpret=_interpret(), **kw)
+
+
+def taskbench_boundary(left, right, idx, wgt, act, *, depth: int, **kw):
+    """Boundary phase of a pipelined blocked launch (both 3*depth edge
+    buffers of all K members in ONE launch; returns the new edge rows).
+    See kernels.taskbench_step.taskbench_step_boundary."""
+    return taskbench_step_boundary(left, right, idx, wgt, act, depth=depth,
+                                   interpret=_interpret(), **kw)
 
 
 def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6,

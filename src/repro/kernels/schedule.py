@@ -8,15 +8,37 @@ therefore a function of the *shape* — block rows, halo radius, payload —
 and the VMEM budget, not a constant. This module owns that policy so the
 runtime, the benchmarks, and the tests agree on one sizing rule.
 
+The pipelined schedule (``pallas_step`` option ``pipeline=True``; DESIGN.md
+§6) changes both sides of the trade. Residency: each launch splits into an
+interior program (``block`` rows, no halo) and a boundary program
+(``3*S*radius`` rows), and the double-buffered halo slots (``S*radius``
+rows per side, two generations alive across the issue/join window) ride the
+scan carry — the budget must hold the LARGER program plus the slots, not
+one monolithic ``block + 2*S*radius`` buffer. Depth choice: hiding the
+exchange only works if the interior compute is long enough to cover it, so
+``"auto"`` prefers the deepest candidate whose interior row-steps also
+clear the exchange-cost model below; with no such candidate it falls back
+to the plain VMEM-deepest choice (the runtime will then run the serial
+schedule wherever the interior is empty).
+
 ``steps_per_launch`` runtime option values:
 
   1 / None        single-step launches (the PR-2 behavior; default)
   "auto" / 0      pick the deepest candidate whose working set fits VMEM
+                  (and, when pipelining, whose interior covers the exchange)
   any int > 1     explicit depth, clamped to the graph's combine-step count
 """
 from __future__ import annotations
 
 from typing import Optional, Sequence, Union
+
+
+def is_auto(value: Union[int, str, None]) -> bool:
+    """Whether a ``steps_per_launch`` option value delegates the depth
+    choice to this tuner. THE one spelling check — the runtime consults it
+    too (the tuner's profitability verdict only binds on delegated
+    choices), so the accepted spellings can never desync."""
+    return value in ("auto", 0, "0")
 
 #: Half of a TPU core's ~16 MiB of VMEM: the working buffer coexists with
 #: the weight/idx operands, the +-halo padded copy, and the f32 accumulator.
@@ -28,6 +50,43 @@ CANDIDATES = (16, 8, 4, 2, 1)
 
 _LANE = 128  # payload pads to the TPU lane multiple inside the kernel
 
+#: Covering model for the pipeline: one deep ring exchange costs about as
+#: much wall as this many row-steps (a row-step = one working row advanced
+#: one depth). Calibrated against this container's forced-host devices,
+#: where the exchange is rendezvous-dominated (~80-200us vs ~0.1-0.2us per
+#: row-step at payload 64): S=8 at block 256 measurably pays, S=16 does
+#: not, which brackets the constant. A real-interconnect build would
+#: re-measure. Used only to rank "auto" candidates — never to forbid an
+#: explicit S.
+PIPELINE_EXCHANGE_ROW_STEPS = 512
+
+
+def _launch_set_bytes(m: int, window: int, padded_payload: int,
+                      dtype_bytes: int, combine: str,
+                      steps_per_launch: int) -> int:
+    """VMEM bytes one blocked pallas program over ``m`` rows keeps resident.
+
+    Every mode holds the src/out buffer, a working copy, and the f32
+    accumulator (~4 row-buffers of padded payload), the per-row weight
+    table, the per-depth act mask, and — for gather/onehot — the int32
+    per-row idx table (same (m, window) shape as the weights; the original
+    budget ignored it and the act mask, which let "auto" overcommit on wide
+    payloads). The non-window combines carry mode-specific intermediates on
+    top: gather materializes the (m, window, payload) gathered rows; onehot
+    the (m, m) combine matrix and its (m, window, m) one-hot expansion
+    (built once per launch).
+    """
+    buffers = 4 * m * padded_payload * dtype_bytes
+    tables = m * window * dtype_bytes  # per-row combine weights
+    tables += steps_per_launch * 4     # act mask (f32 per depth)
+    if combine != "window":
+        tables += m * window * 4       # per-row idx table (int32)
+    if combine == "gather":
+        buffers += m * window * padded_payload * dtype_bytes
+    elif combine == "onehot":
+        buffers += m * m * dtype_bytes + m * window * m * dtype_bytes
+    return buffers + tables
+
 
 def blocked_working_set_bytes(
     block: int,
@@ -37,26 +96,63 @@ def blocked_working_set_bytes(
     *,
     dtype_bytes: int = 4,
     combine: str = "window",
+    pipeline: bool = False,
 ) -> int:
     """VMEM bytes one member's blocked launch keeps resident.
 
-    M = block + 2*S*radius working rows; every mode holds the src/out
-    buffer, a working copy, and the f32 accumulator (~4 row-buffers of
-    padded payload) plus the per-row weight table. The non-window combines
-    carry mode-specific intermediates on top: gather materializes the
-    (M, D, payload) gathered rows; onehot the (M, M) combine matrix and
-    its (M, D, M) one-hot expansion (built once per launch).
+    Serial schedule: one program over ``M = block + 2*S*radius`` working
+    rows. Pipelined schedule: the interior program (``block`` rows) and the
+    boundary program (both 3*S*radius-row edge buffers ROW-FUSED into one
+    6*S*radius-row working buffer — taskbench_step_boundary's layout)
+    never coexist in VMEM, so the launch cost is their max — but the
+    double-buffered halo slots (``S*radius`` rows per side, two
+    generations alive across the issue/join window) are resident
+    throughout and are charged on top.
     """
-    m = block + 2 * steps_per_launch * radius
-    padded_payload = -(-payload // _LANE) * _LANE
     window = 2 * radius + 1
-    buffers = 4 * m * padded_payload * dtype_bytes
-    weights = m * window * dtype_bytes
-    if combine == "gather":
-        buffers += m * window * padded_payload * dtype_bytes
-    elif combine == "onehot":
-        buffers += m * m * dtype_bytes + m * window * m * dtype_bytes
-    return buffers + weights
+    padded_payload = -(-payload // _LANE) * _LANE
+    depth = steps_per_launch * radius
+    if pipeline and block > 2 * depth:
+        interior = _launch_set_bytes(
+            block, window, padded_payload, dtype_bytes, combine,
+            steps_per_launch)
+        boundary = _launch_set_bytes(
+            6 * depth, window, padded_payload, dtype_bytes, combine,
+            steps_per_launch)
+        halo_slots = 2 * 2 * depth * padded_payload * dtype_bytes
+        return max(interior, boundary) + halo_slots
+    return _launch_set_bytes(
+        block + 2 * depth, window, padded_payload, dtype_bytes, combine,
+        steps_per_launch)
+
+
+def pipeline_interior_covers_exchange(
+    block: int, radius: int, steps_per_launch: int
+) -> bool:
+    """Whether the pipelined split pays for itself at this (block, S).
+
+    Two conditions, both in row-steps against the calibrated exchange cost
+    X = PIPELINE_EXCHANGE_ROW_STEPS:
+
+      covers:   ``S * (block - 2*S*r) >= X + 2*S*r`` — the interior phase
+                must be long enough to hide one deep exchange (latency
+                floor plus the exchanged volume). An empty interior can
+                cover nothing.
+      pays off: ``6 * S**2 * r <= X`` — the boundary phase's extra work per
+                launch (a 6*S*r-row buffer advanced S depths) must not
+                exceed the exchange it helps hide; past this depth the
+                amortized exchange (X/S per step) is already cheaper than
+                the split's overhead and the serial schedule wins.
+    """
+    depth = steps_per_launch * radius
+    interior_rows = block - 2 * depth
+    if interior_rows <= 0:
+        return False
+    covers = (steps_per_launch * interior_rows
+              >= PIPELINE_EXCHANGE_ROW_STEPS + 2 * depth)
+    pays_off = (6 * steps_per_launch * depth
+                <= PIPELINE_EXCHANGE_ROW_STEPS)
+    return covers and pays_off
 
 
 def choose_steps_per_launch(
@@ -68,23 +164,38 @@ def choose_steps_per_launch(
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     candidates: Sequence[int] = CANDIDATES,
     combine: str = "window",
+    pipeline: bool = False,
 ) -> int:
     """Deepest candidate S whose blocked working set fits the VMEM budget.
 
     Also refuses depths that cannot possibly pay off: S is capped at the
     graph's combine-step count (``total_steps - 1``; a launch deeper than
-    the remaining steps is all masked tail).
+    the remaining steps is all masked tail). With ``pipeline`` the deepest
+    candidate whose interior covers the exchange AND whose pipelined
+    working set fits wins; if none covers, the runtime will run the SERIAL
+    schedule at whatever depth is returned, so the fallback is the deepest
+    candidate that fits the serial sizing — each candidate is budgeted
+    against the schedule it would actually execute.
     """
     cap = max(1, total_steps - 1) if total_steps and total_steps > 1 else None
+    best_fit = None
     for s in sorted(set(int(c) for c in candidates), reverse=True):
         if s < 1:
             continue
         if cap is not None and s > cap:
             continue
-        if blocked_working_set_bytes(
+        if pipeline and pipeline_interior_covers_exchange(block, radius, s):
+            if blocked_working_set_bytes(
+                    block, radius, s, payload, combine=combine,
+                    pipeline=True) <= vmem_budget:
+                return s
+            continue  # pipelined at this depth would overflow; go shallower
+        if best_fit is None and blocked_working_set_bytes(
                 block, radius, s, payload, combine=combine) <= vmem_budget:
-            return s
-    return 1
+            if not pipeline:
+                return s
+            best_fit = s
+    return best_fit if best_fit is not None else 1
 
 
 def resolve_steps_per_launch(
@@ -96,15 +207,16 @@ def resolve_steps_per_launch(
     total_steps: Optional[int] = None,
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     combine: str = "window",
+    pipeline: bool = False,
 ) -> int:
     """Turn the ``steps_per_launch`` runtime option into a concrete S."""
     if value in (None, 1):
         return 1
-    if value in ("auto", 0, "0"):
+    if is_auto(value):
         return choose_steps_per_launch(
             block=block, radius=radius, payload=payload,
             total_steps=total_steps, vmem_budget=vmem_budget,
-            combine=combine,
+            combine=combine, pipeline=pipeline,
         )
     s = int(value)
     if s < 1:

@@ -51,6 +51,14 @@ the single-step path:
     cross-tile dependences, so the whole working buffer stays resident in
     VMEM for all S depths (kernels/schedule.py sizes S to the VMEM budget).
 
+Pipeline phase split (``taskbench_step_interior`` / ``taskbench_step_boundary``):
+the same blocked kernel invoked on two disjoint working buffers so the
+runtime can overlap the next deep exchange with compute — the interior
+entry runs on the owned block alone (its surviving rows touch no halo),
+the boundary entry stacks both 3*depth-row edge buffers of all K members
+onto the member axis of ONE launch and returns the rows the next exchange
+sends. Both reuse the valid-span machinery unchanged; see DESIGN.md §6.
+
 Three combine strategies, selected statically:
 
   window  for halo-expressible dependence patterns (the pallas_step
@@ -72,6 +80,7 @@ body functions from ``bodies.py``) in interpret mode; see tests/test_kernels.
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -397,6 +406,75 @@ def taskbench_step_pallas(
         interpret=interpret,
     )(srcp, idxp, wgtp)
     return out[:, :W, :payload]
+
+
+def taskbench_step_interior(
+    src: jax.Array,
+    idx: jax.Array,
+    wgt: jax.Array,
+    act: jax.Array,
+    *,
+    depth: int,
+    **kw,
+) -> jax.Array:
+    """Interior phase of a software-pipelined blocked launch.
+
+    The working buffer is the OWNED (K, B, payload) block alone — no halo
+    rows at all. The valid span still shrinks by ``r`` rows per side per
+    inner step (the standard blocked contract), so after S steps exactly the
+    rows whose S-step light cone never left the block survive: [depth,
+    B - depth) with ``depth = S*r``. Those rows are what this entry point
+    returns, and by construction they depend on no in-flight halo — the
+    property the pipelined runtime exploits to run this launch UNDER the
+    next exchange. Requires ``B > 2*depth`` (a nonempty interior); operands
+    are per-row tables for the owned rows (wgt (K, B, D)).
+    """
+    B = src.shape[1]
+    if B <= 2 * depth:
+        raise ValueError(
+            f"interior phase needs block > 2*depth, got {B} <= {2 * depth}")
+    out = taskbench_step_pallas(src, idx, wgt, act, **kw)
+    return jax.lax.slice_in_dim(out, depth, B - depth, axis=1)
+
+
+def taskbench_step_boundary(
+    left: jax.Array,
+    right: jax.Array,
+    idx: jax.Array,
+    wgt: jax.Array,
+    act: jax.Array,
+    *,
+    depth: int,
+    **kw,
+) -> Tuple[jax.Array, jax.Array]:
+    """Boundary phase of a software-pipelined blocked launch.
+
+    ``left``/``right`` are the two (K, 3*depth, payload) edge working
+    buffers — [received halo | first 2*depth owned rows] and [last 2*depth
+    owned rows | received halo] — fused ROW-WISE into one (K, 6*depth)
+    working buffer so both sides of all K members ride ONE program instance
+    per member. The fusion is exact: the left side's surviving rows are
+    buffer rows [depth, 2*depth) whose S-step light cone spans buffer rows
+    [0, 3*depth - 1], the right side's are rows [4*depth, 5*depth) with
+    cone [3*depth, 6*depth - 1] — neither cone crosses the junction at row
+    3*depth, so the halves cannot contaminate each other (junction-adjacent
+    rows DO mix across it at depth >= 1, but those are garbage rows outside
+    both cones). Each side's middle ``depth`` rows are the new edge rows of
+    the block — precisely the rows the NEXT launch's exchange must send,
+    which is why the pipelined runtime issues that exchange on this entry
+    point's outputs. idx/wgt follow the fused buffer layout (rows
+    [left..., right...] on the row axis); ``act`` is the member mask
+    (K, S), shared by both sides. Returns (left_out, right_out), each
+    (K, depth, payload).
+    """
+    if left.shape != right.shape or left.shape[1] != 3 * depth:
+        raise ValueError(
+            f"boundary buffers must both be (K, {3 * depth}, payload), got "
+            f"{left.shape}/{right.shape}")
+    src = jnp.concatenate([left, right], axis=1)
+    out = taskbench_step_pallas(src, idx, wgt, act, **kw)
+    return (jax.lax.slice_in_dim(out, depth, 2 * depth, axis=1),
+            jax.lax.slice_in_dim(out, 4 * depth, 5 * depth, axis=1))
 
 
 def prepare_step_operands(dep_lists, width: int, self_pos) -> tuple:

@@ -51,7 +51,8 @@ def test_pallas_step_multi_device_matches_fused():
     steps_per_launch in {1, 4, 8}, vs the fused oracle. W=16 on 4 devices
     gives B=4, so S=8 with r=1 (and any S with r=2) needs deep halos past
     the block — the multi-hop ring exchange path — and T=10 with S=4/8
-    exercises the masked-tail launch."""
+    exercises the masked-tail launch. B=4 never keeps an interior, so the
+    (default-on) pipeline gates itself off and launch counts stay serial."""
     run_sub("""
         import numpy as np
         from repro.core import TaskGraph, KernelSpec, get_runtime
@@ -74,25 +75,125 @@ def test_pallas_step_multi_device_matches_fused():
     """, devices=4)
 
 
+def test_halo_async_exchange_parity_multi_device():
+    """exchange_halos_start/join == the sync exchange_halos == a numpy
+    roll oracle, for depths below a block, exactly a block, past a block
+    (multi-hop), and past the whole ring (wrap), under shard_map on 4
+    devices. The fused single-collective edge transport must move the
+    same bits as the per-direction ppermute transport."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.core.runtimes import _halo
+
+        D, B, Pay = 4, 6, 5
+        W = D * B
+        mesh = Mesh(np.array(jax.devices()), ("shard",))
+        x = np.arange(W * Pay, dtype=np.float32).reshape(W, Pay)
+
+        def run(fn):
+            f = jax.jit(shard_map(fn, mesh=mesh, check_vma=False,
+                                  in_specs=P("shard"),
+                                  out_specs=(P("shard"), P("shard"))))
+            l, r = f(jax.device_put(x, NamedSharding(mesh, P("shard"))))
+            return np.asarray(l), np.asarray(r)
+
+        for r in (2, 6, 7, 13, 29):  # r<B, r==B, multi-hop, wrap, 5x wrap
+            def sync(local, r=r):
+                return _halo.exchange_halos(local, r, D, "shard")
+
+            def started(local, r=r):
+                return _halo.exchange_halos_join(
+                    _halo.exchange_halos_start(local, r, D, "shard"))
+
+            sl, sr = run(sync)
+            al, ar = run(started)
+            assert np.array_equal(sl, al) and np.array_equal(sr, ar), r
+            # oracle: rows immediately left/right of each block, mod W
+            wl = np.stack([x[(np.arange(d * B - r, d * B)) % W]
+                           for d in range(D)]).reshape(D * r, Pay)
+            wr = np.stack([x[(np.arange((d + 1) * B, (d + 1) * B + r)) % W]
+                           for d in range(D)]).reshape(D * r, Pay)
+            assert np.array_equal(sl, wl) and np.array_equal(sr, wr), r
+
+        # edge transport parity: fused all-gather vs per-direction ppermute
+        for r in (1, 3, 6):
+            def edges(local, r=r, impl="xla"):
+                h = _halo.exchange_edges_start(
+                    local[:r], local[B - r:], D, "shard", impl=impl)
+                return _halo.exchange_halos_join(h)
+
+            xl, xr = run(lambda l, r=r: edges(l, r, "xla"))
+            pl_, pr = run(lambda l, r=r: edges(l, r, "ppermute"))
+            assert np.array_equal(xl, pl_) and np.array_equal(xr, pr), r
+        print("ALL OK")
+    """, devices=4)
+
+
+def test_pallas_step_pipelined_multi_device():
+    """The software-pipelined schedule on 4 devices: W=128 keeps a real
+    interior (B=32 > 2*S*r for S=3 r=1/2 and S=8 r=1), so the pipelined
+    path engages, its deep exchange rides under the interior launch, and
+    every pattern — including dom's asymmetric and random_nearest's
+    per-row edge masks — stays bit-identical to the pipeline=False
+    ablation and allclose to fused. S=8 with r=2 (depth 16 = B/2) checks
+    the structural fallback still answers correctly."""
+    run_sub("""
+        import numpy as np
+        from repro.core import TaskGraph, KernelSpec, get_runtime
+        for pattern, radius in [("stencil_1d", 1), ("stencil_1d_periodic", 1),
+                                ("dom", 1), ("nearest", 2),
+                                ("random_nearest", 2)]:
+            g = TaskGraph(steps=10, width=128, pattern=pattern, payload=8,
+                          kernel=KernelSpec("compute_bound", 8),
+                          radius=radius, seed=7)
+            ref = get_runtime("fused").execute(g)
+            for S in (1, 3, 8):
+                outs = {}
+                for pipe in (True, False):
+                    rt = get_runtime("pallas_step", steps_per_launch=S,
+                                     pipeline=pipe)
+                    out = rt.execute(g)
+                    err = float(np.abs(out - ref).max())
+                    assert err < 1e-5, (pattern, S, pipe, err)
+                    outs[pipe] = out
+                assert np.array_equal(outs[True], outs[False]), (pattern, S)
+        # transport ablation stays bit-identical across devices too
+        g = TaskGraph(steps=10, width=128, pattern="stencil_1d", payload=8,
+                      kernel=KernelSpec("compute_bound", 8), seed=7)
+        a = get_runtime("pallas_step", steps_per_launch=4).execute(g)
+        b = get_runtime("pallas_step", steps_per_launch=4,
+                        halo_impl="ppermute").execute(g)
+        assert np.array_equal(a, b)
+        print("ALL OK")
+    """, devices=4)
+
+
 def test_pallas_step_multi_device_blocked_ensemble():
     """Stacked hetero-steps ensemble on 4 devices with deep exchanges: one
-    launch cadence, members frozen mid-launch, each matches fused."""
+    launch cadence, members frozen mid-launch, each matches fused. W=16
+    (B=4) exercises the serial fallback, W=128 (B=32) the pipelined
+    schedule — whose boundary launch batches both sides of all K members."""
     run_sub("""
         import numpy as np
         from repro.core import (GraphEnsemble, TaskGraph, KernelSpec,
                                 get_runtime)
-        members = [TaskGraph(steps=t, width=16, payload=8,
-                             pattern="stencil_1d",
-                             kernel=KernelSpec("compute_bound", 8), seed=k)
-                   for k, t in enumerate((3, 10, 6))]
-        ens = GraphEnsemble(members)
-        for S in (1, 4):
-            rt = get_runtime("pallas_step", steps_per_launch=S)
-            outs = rt.execute_ensemble(ens)
-            for k, (g, out) in enumerate(zip(members, outs)):
-                ref = get_runtime("fused").execute(g)
-                err = float(np.abs(out - ref).max())
-                assert err < 1e-5, (S, k, err)
+        for width in (16, 128):
+            members = [TaskGraph(steps=t, width=width, payload=8,
+                                 pattern="stencil_1d",
+                                 kernel=KernelSpec("compute_bound", 8), seed=k)
+                       for k, t in enumerate((3, 10, 6))]
+            ens = GraphEnsemble(members)
+            for S in (1, 4):
+                for pipe in (True, False):
+                    rt = get_runtime("pallas_step", steps_per_launch=S,
+                                     pipeline=pipe)
+                    outs = rt.execute_ensemble(ens)
+                    for k, (g, out) in enumerate(zip(members, outs)):
+                        ref = get_runtime("fused").execute(g)
+                        err = float(np.abs(out - ref).max())
+                        assert err < 1e-5, (width, S, pipe, k, err)
         print("ALL OK")
     """, devices=4)
 

@@ -268,6 +268,64 @@ def test_taskbench_step_blocked_requires_act_and_square_operands():
                               steps_per_launch=3, interpret=True)
 
 
+# ------------------------------------------ pipelined phase entry points
+
+
+@pytest.mark.parametrize("tail", [0, 2])
+def test_taskbench_phase_split_matches_full_blocked(tail):
+    """interior + boundary entry points == the one-buffer blocked launch:
+    stitching [left_out | interior | right_out] must be bit-identical to
+    slicing the owned rows out of the full deep-halo kernel, including a
+    masked tail (the hetero/final-launch case)."""
+    from repro.kernels.taskbench_step import (taskbench_step_boundary,
+                                              taskbench_step_interior)
+    K, W, P, h, S = 2, 24, 6, 1, 4
+    depth = S * h
+    state = jax.random.uniform(jax.random.PRNGKey(32), (K, W, P),
+                               jnp.float32, 0.1, 1.0)
+    wfull = _stencil_window_weights(W, h)
+    gids = (np.arange(-depth, W + depth)) % W
+    wext = jnp.asarray(np.broadcast_to(wfull[gids], (K, W + 2 * depth, 3)).copy())
+    idx = jnp.zeros((K, 1, 1), jnp.int32)
+    act = jnp.asarray(np.broadcast_to(
+        (np.arange(S) < S - tail).astype(np.float32), (K, S)).copy())
+    kw = dict(kind="compute_bound", iterations=2, combine="window",
+              steps_per_launch=S, interpret=True)
+
+    ext = jnp.asarray(_periodic_ext(np.asarray(state), depth))
+    full = taskbench_step_pallas(ext, idx, wext, act, **kw)[:, depth:depth + W]
+
+    hl, hr = ext[:, :depth], ext[:, W + depth:]
+    left = jnp.concatenate([hl, state[:, :2 * depth]], axis=1)
+    right = jnp.concatenate([state[:, W - 2 * depth:], hr], axis=1)
+    w_bnd = jnp.concatenate(
+        [wext[:, :3 * depth], wext[:, W - depth:]], axis=1)
+    blo, bro = taskbench_step_boundary(
+        left, right, idx, w_bnd, act, depth=depth, **kw)
+    mid = taskbench_step_interior(
+        state, idx, wext[:, depth:depth + W], act, depth=depth, **kw)
+    got = jnp.concatenate([blo, mid, bro], axis=1)
+    assert np.array_equal(np.asarray(got), np.asarray(full)), \
+        f"phase split changed bits (tail={tail})"
+
+
+def test_taskbench_phase_entry_points_validate_shapes():
+    from repro.kernels.taskbench_step import (taskbench_step_boundary,
+                                              taskbench_step_interior)
+    act = jnp.ones((1, 2), jnp.float32)
+    idx = jnp.zeros((1, 1, 1), jnp.int32)
+    with pytest.raises(ValueError, match="interior"):
+        taskbench_step_interior(jnp.ones((1, 8, 4)), idx,
+                                jnp.ones((1, 8, 3)), act, depth=4,
+                                combine="window", steps_per_launch=2,
+                                interpret=True)
+    with pytest.raises(ValueError, match="boundary"):
+        taskbench_step_boundary(jnp.ones((1, 8, 4)), jnp.ones((1, 6, 4)),
+                                idx, jnp.ones((1, 12, 3)), act, depth=2,
+                                combine="window", steps_per_launch=2,
+                                interpret=True)
+
+
 # ----------------------------------------------------------- schedule tuner
 
 
@@ -317,6 +375,70 @@ def test_schedule_resolve_values():
     assert auto == schedule.choose_steps_per_launch(**kw)
     with pytest.raises(ValueError):
         schedule.resolve_steps_per_launch(-2, **kw)
+
+
+def test_schedule_accounts_for_act_and_idx_operands():
+    """The VMEM model charges the act mask (S f32s even at radius 0, where
+    the buffer itself is S-invariant) and, for the non-window combines, the
+    per-row int32 idx table on top of gather's row intermediate."""
+    for s in (1, 2, 4, 8):
+        assert (schedule.blocked_working_set_bytes(64, 0, s + 1, 64)
+                - schedule.blocked_working_set_bytes(64, 0, s, 64)) == 4
+    m = 256 + 2 * 4 * 2
+    window = 2 * 2 + 1
+    base = schedule.blocked_working_set_bytes(256, 2, 4, 64)
+    gat = schedule.blocked_working_set_bytes(256, 2, 4, 64, combine="gather")
+    gathered_rows = m * window * 128 * 4  # the (m, window, payload) gather
+    assert gat - base - gathered_rows == m * window * 4  # idx table itself
+
+
+def test_schedule_pipeline_working_set_and_covering():
+    """Pipelined residency = max(interior, boundary program) + double-
+    buffered halo slots — smaller than the monolithic serial buffer at
+    wide blocks; empty-interior shapes fall back to serial accounting.
+    The covering rule admits S=8 at block 256 (r=1) but rejects S=16
+    (boundary work outgrows the exchange) and tiny blocks (nothing to
+    hide under), and 'auto' follows it."""
+    serial = schedule.blocked_working_set_bytes(1024, 8, 8, 512)
+    piped = schedule.blocked_working_set_bytes(1024, 8, 8, 512,
+                                               pipeline=True)
+    assert piped < serial
+    assert schedule.blocked_working_set_bytes(
+        64, 8, 8, 512, pipeline=True) == schedule.blocked_working_set_bytes(
+        64, 8, 8, 512)  # block 64 <= 2*64: no interior, serial layout
+    assert schedule.pipeline_interior_covers_exchange(256, 1, 8)
+    assert not schedule.pipeline_interior_covers_exchange(256, 1, 16)
+    assert not schedule.pipeline_interior_covers_exchange(64, 1, 8)
+    kw = dict(block=256, radius=1, payload=64, total_steps=200)
+    assert schedule.choose_steps_per_launch(**kw) == 16
+    assert schedule.choose_steps_per_launch(pipeline=True, **kw) == 8
+    # no covering candidate -> fall back to the deepest fitting depth
+    assert schedule.choose_steps_per_launch(
+        block=64, radius=1, payload=64, total_steps=200, pipeline=True) == 16
+
+
+def test_schedule_auto_budgets_the_schedule_it_executes():
+    """A pipeline=True pick whose interior does NOT cover the exchange
+    runs the SERIAL schedule, so the fallback depth must be validated
+    against the serial (monolithic-buffer) sizing — not the smaller
+    pipelined one (it once wasn't: block=224/r=2/payload=1024/gather
+    picked S=2 whose serial working set overflowed the default budget)."""
+    for combine in ("window", "gather", "onehot"):
+        for radius in (1, 2, 4, 8):
+            for block in (32, 64, 224, 256, 1024):
+                for payload in (64, 256, 1024):
+                    s = schedule.choose_steps_per_launch(
+                        block=block, radius=radius, payload=payload,
+                        combine=combine, pipeline=True)
+                    if s <= 1:  # S=1 is the per-step path: no blocked buffer
+                        continue
+                    cov = schedule.pipeline_interior_covers_exchange(
+                        block, radius, s)
+                    ws = schedule.blocked_working_set_bytes(
+                        block, radius, s, payload, combine=combine,
+                        pipeline=cov)
+                    assert ws <= schedule.DEFAULT_VMEM_BUDGET, \
+                        (combine, radius, block, payload, s)
 
 
 def test_finalize_weights_single_rounding():

@@ -105,15 +105,21 @@ def test_dispatch_accounting():
     assert get_runtime("bsp_scan").dispatches_per_run(g) == 1
     # pallas_step reports actual KERNEL LAUNCHES (the overhead its METG
     # floor measures), not host dispatches: one t=0 body-only launch plus
-    # ceil((T-1)/S) blocked combine launches
+    # ceil((T-1)/S) blocked combine launches. The (default) pipelined
+    # schedule pays TWO launches per blocked iteration — boundary +
+    # interior — and the accounting stays honest about it.
     assert get_runtime("pallas_step").dispatches_per_run(g) == 7
     assert get_runtime(
-        "pallas_step", steps_per_launch=3).dispatches_per_run(g) == 3
-    assert get_runtime(
-        "pallas_step", steps_per_launch=6).dispatches_per_run(g) == 2
+        "pallas_step", steps_per_launch=3).dispatches_per_run(g) == 5
+    assert get_runtime("pallas_step", steps_per_launch=3,
+                       pipeline=False).dispatches_per_run(g) == 3
+    assert get_runtime("pallas_step", steps_per_launch=6,
+                       pipeline=False).dispatches_per_run(g) == 2
     # depth clamps to the graph's T-1 combine steps (rest is masked tail)
+    assert get_runtime("pallas_step", steps_per_launch=100,
+                       pipeline=False).dispatches_per_run(g) == 2
     assert get_runtime(
-        "pallas_step", steps_per_launch=100).dispatches_per_run(g) == 2
+        "pallas_step", steps_per_launch=100).dispatches_per_run(g) == 3
     assert get_runtime(
         "pallas_step").dispatches_per_run(graph("stencil_1d", steps=1)) == 1
     assert get_runtime("serialized").dispatches_per_run(g) == 7 * 16
@@ -257,6 +263,101 @@ def test_pallas_step_auto_steps_per_launch():
     np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
     # auto picks a deep schedule for this tiny shape -> few launches
     assert rt.dispatches_per_run(g) < g.steps
+
+
+# ----------------------------- pallas_step pipelined deep-halo exchange
+
+
+@pytest.mark.parametrize("pattern", HALO_LIKE)
+@pytest.mark.parametrize("S", [1, 3, 8])
+def test_pallas_step_pipeline_bit_identical_to_ablation(pattern, S):
+    """The pipelined schedule is a pure dataflow reshuffle: for every halo
+    pattern and S in {1, 3, 8}, pipeline=True must be BIT-identical to the
+    pipeline=False ablation and allclose to fused. Width 48 keeps a
+    nonempty interior at every depth (r=1 patterns at S=8: 48 > 16; r=2:
+    48 > 32), so the pipelined path actually engages for S > 1."""
+    g = graph(pattern, width=48, steps=10)
+    ref = get_runtime("fused").execute(g)
+    on = get_runtime("pallas_step", steps_per_launch=S).execute(g)
+    off = get_runtime(
+        "pallas_step", steps_per_launch=S, pipeline=False).execute(g)
+    np.testing.assert_allclose(on, ref, rtol=1e-5, atol=1e-6,
+                               err_msg=f"{pattern} S={S} vs fused")
+    assert np.array_equal(on, off), f"{pattern} S={S}: pipeline changed bits"
+
+
+def test_pallas_step_pipeline_halo_impls_bit_identical():
+    """Both edge-exchange transports (fused single-collective vs
+    per-direction ppermute) move exact row copies; outputs must not differ
+    by a bit. Unknown impls fail loudly."""
+    g = graph("stencil_1d", width=48, steps=10)
+    a = get_runtime("pallas_step", steps_per_launch=4).execute(g)
+    b = get_runtime("pallas_step", steps_per_launch=4,
+                    halo_impl="ppermute").execute(g)
+    assert np.array_equal(a, b)
+    with pytest.raises(ValueError, match="halo async impl"):
+        get_runtime("pallas_step", steps_per_launch=4,
+                    halo_impl="smoke_signals").execute(g)
+
+
+@pytest.mark.parametrize("S", [3, 4])
+def test_pallas_step_pipeline_hetero_stacked_ensemble(S):
+    """Pipelined stacked ensembles keep launch-granularity freezing exact:
+    members with different T (ending mid-launch) each match fused, and the
+    whole run is bit-identical to the serial-exchange ablation."""
+    members = [
+        TaskGraph(steps=t, width=48, payload=8, pattern="stencil_1d",
+                  kernel=KernelSpec("compute_bound", 8), seed=k)
+        for k, t in enumerate((3, 10, 6, 1))
+    ]
+    ens = GraphEnsemble(members)
+    assert ens.heterogeneous_steps
+    on = get_runtime(
+        "pallas_step", steps_per_launch=S).execute_ensemble(ens)
+    off = get_runtime("pallas_step", steps_per_launch=S,
+                      pipeline=False).execute_ensemble(ens)
+    for k, (g, a, b) in enumerate(zip(members, on, off)):
+        ref = get_runtime("fused").execute(g)
+        np.testing.assert_allclose(a, ref, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"S={S} member {k} T={g.steps}")
+        assert np.array_equal(a, b), f"S={S} member {k}: pipeline changed bits"
+
+
+def test_pallas_step_pipeline_tuple_mixed_applicability():
+    """The tuple path pipelines per member: a no_comm member (halo 0) and a
+    wide-halo member share one cadence with a pipelined stencil member, and
+    every member still matches fused."""
+    members = [
+        TaskGraph(steps=9, width=48, payload=8, pattern="stencil_1d",
+                  kernel=KernelSpec("compute_bound", 8), seed=0),
+        TaskGraph(steps=5, width=48, payload=8, pattern="no_comm",
+                  kernel=KernelSpec("memory_bound", 2, scratch=32), seed=1),
+        TaskGraph(steps=7, width=48, payload=8, pattern="nearest", radius=4,
+                  kernel=KernelSpec("compute_bound", 32), seed=2),
+    ]
+    ens = GraphEnsemble(members)
+    for pipe in (True, False):
+        outs = get_runtime("pallas_step", steps_per_launch=4,
+                           pipeline=pipe).execute_ensemble(ens)
+        for k, (g, out) in enumerate(zip(members, outs)):
+            ref = get_runtime("fused").execute(g)
+            np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6,
+                                       err_msg=f"pipe={pipe} member {k}")
+
+
+def test_pallas_step_pipeline_auto_respects_profitability():
+    """Under steps_per_launch='auto' the tuner's covering verdict binds:
+    a block too small for the interior to cover the exchange runs the
+    serial schedule (serial launch counts), while explicit S is an
+    ablation choice and pipelines whenever structurally possible."""
+    g = graph("stencil_1d", width=64, steps=9)
+    auto = get_runtime("pallas_step", steps_per_launch="auto")
+    S = auto._graph_steps_per_launch(g)
+    assert 64 > 2 * S  # structurally pipelineable ...
+    L = 1 + -(-(g.steps - 1) // S)
+    assert auto.dispatches_per_run(g) == L  # ... but the tuner found no cover
+    explicit = get_runtime("pallas_step", steps_per_launch=S)
+    assert explicit.dispatches_per_run(g) == 1 + 2 * (L - 1)  # pipelines anyway
 
 
 def test_pallas_step_rejects_non_halo_patterns():
@@ -422,10 +523,14 @@ def test_ensemble_heterogeneous_steps_dispatch_accounting():
     assert (get_runtime("serialized").ensemble_dispatches_per_run(ens)
             == (3 + 7) * 8)
     # stacked ensemble: ALL members share each launch -> lockstep launches
-    # (1 body launch + ceil((Tmax-1)/S) combine launches), not 1
+    # (1 body launch + ceil((Tmax-1)/S) combine launches), not 1; the
+    # pipelined default splits each combine launch into boundary + interior
     assert get_runtime("pallas_step").ensemble_dispatches_per_run(ens) == 7
     assert get_runtime(
-        "pallas_step", steps_per_launch=3).ensemble_dispatches_per_run(ens) == 3
+        "pallas_step", steps_per_launch=3,
+        pipeline=False).ensemble_dispatches_per_run(ens) == 3
+    assert get_runtime(
+        "pallas_step", steps_per_launch=3).ensemble_dispatches_per_run(ens) == 5
     # mixed-spec (tuple) fallback launches each member every scan iteration
     mixed = GraphEnsemble([
         TaskGraph(steps=3, width=8),
@@ -433,8 +538,11 @@ def test_ensemble_heterogeneous_steps_dispatch_accounting():
     ])
     assert get_runtime("pallas_step").ensemble_dispatches_per_run(mixed) == 14
     assert get_runtime(
-        "pallas_step", steps_per_launch=3
+        "pallas_step", steps_per_launch=3, pipeline=False
     ).ensemble_dispatches_per_run(mixed) == 6
+    assert get_runtime(
+        "pallas_step", steps_per_launch=3
+    ).ensemble_dispatches_per_run(mixed) == 10
 
 
 def test_ensemble_padded_dependency_arrays():
