@@ -26,10 +26,17 @@ graphs; round-robin backends sit at ~1 by construction. Outputs:
   artifacts/bench/fig4.csv    one row per (backend, K, grain)
   artifacts/bench/fig4.json   summary incl. concurrency ratios per (K, grain)
 
+Butterfly rows (``...@fft``): the same sweep repeated on the paper's
+NON-LOCAL fft pattern — bsp / bsp_scan / pallas_step (the stride plan's
+per-step XOR exchanges through the pair megakernel); overlap sits out
+(halo patterns only) — so the latency-hiding artifact covers a scenario
+whose messages cross the machine, not just ring neighbors.
+
 ``--smoke`` shrinks the sweep to a seconds-long CI guard (2 devices, tiny
 steps/K) that exercises every backend row — including the pipelined
-pallas_step ensemble path — and the artifact schema; it writes to
-``fig4_smoke.{csv,json}`` so the committed full-run artifacts survive.
+pallas_step ensemble path and the butterfly rows — and the artifact
+schema; it writes to ``fig4_smoke.{csv,json}`` so the committed full-run
+artifacts survive.
 """
 from __future__ import annotations
 
@@ -59,9 +66,22 @@ PALLAS_VARIANTS = {
     "nopipe": {"steps_per_launch": "auto", "pipeline": False},
 }
 
+#: butterfly rows: the latency-hiding sweep repeated on the paper's
+#: NON-LOCAL fft pattern (XOR stride exchanges instead of ring halos).
+#: overlap sits out — it models halo patterns only — so the comparison is
+#: bsp's round-robin vs bsp_scan's fused loop vs pallas_step's stride
+#: plan (per-step pair megakernel). No blocked variant rides along: a
+#: non-halo member pins an ENSEMBLE's cadence to per-step
+#: (pallas_step._ensemble_steps_per_launch), so a steps_per_launch row
+#: would silently measure the identical schedule at every K >= 2 — the
+#: blocked all-gather schedule is measured where it actually executes
+#: (single-graph: tests + the pallas_floor butterfly rows).
+BUTTERFLY_PATTERN = "fft"
 
-def _backend_label(runtime: str, variant: str) -> str:
-    return f"{runtime}[{variant}]" if variant else runtime
+
+def _backend_label(runtime: str, variant: str, pattern: str = "") -> str:
+    label = f"{runtime}[{variant}]" if variant else runtime
+    return f"{label}@{pattern}" if pattern else label
 
 
 def run(devices: int = 4, steps: int = 100, reps: int = 5,
@@ -69,29 +89,41 @@ def run(devices: int = 4, steps: int = 100, reps: int = 5,
         overdecomposition: int = 8, payload: int = 64,
         backends=("overlap", "bsp", "bsp_scan", "pallas_step"),
         pallas_overdecomposition: int = PALLAS_OVERDECOMPOSITION,
+        butterfly: bool = True,
         options=None, verbose: bool = True, smoke: bool = False):
     classic = tuple(b for b in backends if b != "pallas_step")
     with_pallas = "pallas_step" in backends
+    # butterfly rows: overlap models halo patterns only, so it sits out
+    bclassic = tuple(b for b in classic if b != "overlap")
+    width = devices * overdecomposition
+    if butterfly and width & (width - 1):
+        # fft graphs require a power-of-two width; constructing one would
+        # crash the whole worker before the skip path can answer — drop
+        # the rows rather than the benchmark
+        print(f"fig4: butterfly rows skipped (width {width} = {devices} "
+              f"devices x od {overdecomposition} is not a power of two)")
+        butterfly = False
     rows_out = []
     ratios = {}  # (backend, grain) -> {K: concurrent/serial}
     walls = {}  # (backend, K, grain) -> ensemble wall
     for k in ensemble_sizes:
         # all backends measured back-to-back in ONE worker process so their
-        # wall ratio is not polluted by scheduling differences across workers
+        # wall ratio is not polluted by scheduling differences across
+        # workers; each (spec, pattern-tag) pair labels its rows
         specs = []
         if classic:
-            specs.append(SweepSpec(
+            specs.append((SweepSpec(
                 runtime=classic[0], compare_runtimes=classic,
                 pattern="stencil_1d", devices=devices,
                 overdecomposition=overdecomposition, steps=steps,
                 grains=tuple(grains), reps=reps, payload=payload, ensemble=k,
                 serial_baseline=k > 1, options=dict(options or {}),
-            ))
+            ), ""))
         if with_pallas:
             # pallas_step rides its own worker (larger od, pipeline pair
             # via option_variants) — the concurrency ratio it reports is
             # still within-worker
-            specs.append(SweepSpec(
+            specs.append((SweepSpec(
                 runtime="pallas_step", pattern="stencil_1d",
                 devices=devices,
                 overdecomposition=pallas_overdecomposition, steps=steps,
@@ -99,10 +131,28 @@ def run(devices: int = 4, steps: int = 100, reps: int = 5,
                 ensemble=k, serial_baseline=k > 1,
                 options=dict(options or {}),
                 option_variants=dict(PALLAS_VARIANTS),
-            ))
-        rows = [r for spec in specs for r in run_worker(spec)]
-        for r in rows:
-            backend = _backend_label(r["runtime"], r.get("variant", ""))
+            ), ""))
+        if butterfly and bclassic:
+            specs.append((SweepSpec(
+                runtime=bclassic[0], compare_runtimes=bclassic,
+                pattern=BUTTERFLY_PATTERN, devices=devices,
+                overdecomposition=overdecomposition, steps=steps,
+                grains=tuple(grains), reps=reps, payload=payload, ensemble=k,
+                serial_baseline=k > 1, options=dict(options or {}),
+            ), BUTTERFLY_PATTERN))
+        if butterfly and with_pallas:
+            # stride plan (per-step pair megakernel); width =
+            # devices * od stays a power of two
+            specs.append((SweepSpec(
+                runtime="pallas_step", pattern=BUTTERFLY_PATTERN,
+                devices=devices, overdecomposition=overdecomposition,
+                steps=steps, grains=tuple(grains), reps=reps,
+                payload=payload, ensemble=k, serial_baseline=k > 1,
+                options=dict(options or {}),
+            ), BUTTERFLY_PATTERN))
+        rows = [(r, tag) for spec, tag in specs for r in run_worker(spec)]
+        for r, tag in rows:
+            backend = _backend_label(r["runtime"], r.get("variant", ""), tag)
             if "skip" in r:
                 if verbose:
                     print(f"fig4 {backend:9s} K={k} grain={r['grain']}: "
@@ -122,12 +172,19 @@ def run(devices: int = 4, steps: int = 100, reps: int = 5,
             shown_backends = list(classic) + (
                 [_backend_label("pallas_step", v) for v in PALLAS_VARIANTS]
                 if with_pallas else [])
+            if butterfly:
+                shown_backends += [
+                    _backend_label(b, "", BUTTERFLY_PATTERN)
+                    for b in bclassic]
+                if with_pallas:
+                    shown_backends.append(
+                        _backend_label("pallas_step", "", BUTTERFLY_PATTERN))
             for backend in shown_backends:
                 shown = ", ".join(
                     f"g{r['grain']}={r['wall'] * 1e3:.1f}ms"
-                    for r in rows
-                    if _backend_label(r["runtime"], r.get("variant", ""))
-                    == backend and "skip" not in r)
+                    for r, tag in rows
+                    if _backend_label(r["runtime"], r.get("variant", ""),
+                                      tag) == backend and "skip" not in r)
                 if shown:
                     print(f"fig4 {backend:20s} K={k}: {shown}", flush=True)
 
@@ -177,6 +234,7 @@ def run(devices: int = 4, steps: int = 100, reps: int = 5,
             "overdecomposition": overdecomposition,
             "pallas_overdecomposition":
                 pallas_overdecomposition if with_pallas else None,
+            "butterfly_pattern": BUTTERFLY_PATTERN if butterfly else None,
             "concurrent_over_serial": summary,
             "overlap_over_bsp": overlap_over_bsp,
             "pallas_pipe_over_nopipe": pipe_over_nopipe,
@@ -218,13 +276,20 @@ def main(argv=None):
                   ensemble_sizes=(1, 2), overdecomposition=8,
                   payload=cfg.payload, backends=cfg.runtimes, options=opts,
                   smoke=True)
-        # schema guard: every backend (incl. both pallas_step schedules)
-        # must have produced concurrency ratios at K=2
+        # schema guard: every backend (incl. both pallas_step schedules
+        # and the butterfly rows' stride/all-gather plans) must have
+        # produced concurrency ratios at K=2
         summary = res["concurrent_over_serial"]
         want = [b for b in cfg.runtimes if b != "pallas_step"]
         if "pallas_step" in cfg.runtimes:
             want += ["pallas_step", "pallas_step[nopipe]"]
+        want += [_backend_label(b, "", BUTTERFLY_PATTERN)
+                 for b in cfg.runtimes if b != "overlap"]
         ok = all(b in summary and summary[b] for b in want)
+        if not ok:
+            missing = [b for b in want
+                       if b not in summary or not summary[b]]
+            print(f"fig4 smoke: missing backend rows: {missing}")
         return 0 if ok else 1
     run(devices=a.devices, steps=a.steps or cfg.steps,
         reps=a.reps or cfg.reps, grains=cfg.grains,

@@ -27,6 +27,55 @@ import json
 import sys
 
 
+def check_butterfly(current: dict, baseline: dict, factor: float) -> list:
+    """Butterfly-floor guard: same two-signal rule, with the in-run health
+    signal being the run's own pallas/fused ratio — the stride plan
+    degrading (e.g. falling back to per-op dispatch) pushes pallas_step
+    ABOVE fused in the same process, which runner slowness cannot."""
+    failures = []
+    cur = current.get("butterfly_floor_wall_per_step", {})
+    base = baseline.get("butterfly_floor_wall_per_step", {})
+    ratios = current.get("butterfly_over_fused_per_step", {})
+    if not base:
+        # baselines that predate the butterfly rows carry no keys: nothing
+        # to guard (regenerating the baseline arms this check)
+        return failures
+    judged = 0
+    for key, b in sorted(base.items()):
+        c = cur.get(key)
+        if c is None:
+            print(f"floor_guard: butterfly {key} missing from current run "
+                  f"(not judged)")
+            continue
+        judged += 1
+        pattern, width = key.split("@")
+        in_run = ratios.get(pattern, {}).get(width)
+        ratio = c / b
+        regressed = ratio > factor
+        unhealthy = in_run is not None and in_run > 1.0
+        if regressed and unhealthy:
+            verdict = "REGRESSED"
+            failures.append(
+                f"butterfly {key}: {c*1e6:.2f} us/step is {ratio:.2f}x the "
+                f"baseline {b*1e6:.2f} us/step (limit {factor}x) AND "
+                f"pallas_step fell above fused in-run ({in_run:.2f}x) — "
+                f"the stride plan degraded, not the runner")
+        elif regressed:
+            verdict = "SLOW-RUNNER? (absolute regression, in-run signal healthy)"
+        else:
+            verdict = "OK"
+        in_run_txt = (f", pallas/fused {in_run:.2f}x"
+                      if in_run is not None else "")
+        print(f"floor_guard: butterfly {key}: baseline {b*1e6:.2f} us/step, "
+              f"current {c*1e6:.2f} us/step ({ratio:.2f}x{in_run_txt}) "
+              f"{verdict}")
+    if judged == 0:
+        failures.append(
+            "baseline has butterfly floors but the current run judged "
+            "none of them (butterfly rows missing or key schema drifted)")
+    return failures
+
+
 def check(current: dict, baseline: dict, factor: float,
           min_amortization: float) -> list:
     """Returns a list of human-readable failures (empty = pass)."""
@@ -67,6 +116,7 @@ def check(current: dict, baseline: dict, factor: float,
               f"{verdict}")
     if judged == 0:
         failures.append("no width was present in both files")
+    failures.extend(check_butterfly(current, baseline, factor))
     return failures
 
 

@@ -149,3 +149,25 @@ def halo_radius(g: "TaskGraph") -> int:
         "nearest": g.radius,
         "random_nearest": g.radius,
     }.get(g.pattern, -1)  # -1 => not halo-expressible
+
+
+def butterfly_stride(g: "TaskGraph", slot: int) -> int:
+    """XOR pairing distance 2^k for period slot ``slot`` of a butterfly
+    pattern: timestep t uses slot (t-1) % period. fft's exponent rises
+    0..L-1 and wraps; tree rises 0..L-1 then falls back (reduce /
+    broadcast ladder). Graph validation guarantees a power-of-two width,
+    so partner = p XOR stride is always in [0, W) and every point has
+    exactly two dependencies {p, partner}.
+    """
+    if g.pattern not in BUTTERFLY_PATTERNS:
+        raise ValueError(f"{g.pattern} is not a butterfly pattern")
+    L = max(1, _log2(g.width))
+    if g.pattern == "fft":
+        return 1 << (slot % L)
+    k = slot % (2 * L)
+    return 1 << (k if k < L else (2 * L - 1 - k))
+
+
+def butterfly_slot_strides(g: "TaskGraph") -> Tuple[int, ...]:
+    """Pairing distance per period slot (length ``period(g)``)."""
+    return tuple(butterfly_stride(g, s) for s in range(period(g)))

@@ -251,6 +251,160 @@ def exchange_halos_join(handle: HaloHandle) -> Tuple[jax.Array, jax.Array]:
     return handle.join()
 
 
+# --------------------------------------------------------------- strides
+#
+# Butterfly patterns (fft/tree) pair point p with p XOR 2^k — at block
+# strides, device d's partner rows live wholesale on device d XOR bs
+# (bs = stride // block). Unlike the ring halo there is no left/right:
+# the XOR permutation is an involution, so ONE permute both sends and
+# receives a full partner block per requested stride.
+
+
+@dataclasses.dataclass(frozen=True)
+class StrideHandle:
+    """In-flight XOR block exchange: one landing buffer per stride.
+
+    ``partners[j]`` is the full local-shaped block of device
+    ``d XOR block_strides[j]``. The same start/join discipline as
+    ``HaloHandle`` applies: nothing may consume a buffer before the join,
+    which is what lets XLA's latency-hiding scheduler sink the
+    collective(s) under independent compute. A Mosaic transport would
+    carry (buffer, semaphore) pairs per stride behind the same interface.
+    """
+
+    partners: Tuple[jax.Array, ...]
+
+    def join(self) -> Tuple[jax.Array, ...]:
+        return self.partners
+
+
+def _gather_stride_start(local: jax.Array, block_strides, num_devices: int,
+                         axis: str = "shard", *,
+                         row_axis: int = 0) -> StrideHandle:
+    """Fused default: ONE all-gather serves every requested stride.
+
+    Each device slices the blocks it needs — d XOR bs for each bs — out
+    of the gathered ring locally. One collective rendezvous regardless of
+    how many strides the caller wants (the same trade the fused halo
+    transport makes: on forced-host devices rendezvous cost dominates
+    moved bytes).
+    """
+    n = local.shape[row_axis]
+    ring = jax.lax.all_gather(local, axis, axis=row_axis, tiled=True)
+    d = jax.lax.axis_index(axis)
+    return StrideHandle(partners=tuple(
+        jax.lax.dynamic_slice_in_dim(
+            ring, jnp.bitwise_xor(d, jnp.int32(bs)) * n, n, axis=row_axis)
+        for bs in block_strides
+    ))
+
+
+def _ppermute_stride_start(local: jax.Array, block_strides, num_devices: int,
+                           axis: str = "shard", *,
+                           row_axis: int = 0) -> StrideHandle:
+    """ppermute variant: one XOR collective per stride (moves only the
+    partner blocks; kept for parity testing and as the minimal-traffic
+    transport where an all-gather does not lower)."""
+    del row_axis  # whole blocks move; no slicing needed
+    partners = []
+    for bs in block_strides:
+        perm = [(d, d ^ int(bs)) for d in range(num_devices)]
+        partners.append(jax.lax.ppermute(local, axis, perm))
+    return StrideHandle(partners=tuple(partners))
+
+
+#: name -> stride-transfer starter, mirroring HALO_ASYNC_IMPLS: "xla" is
+#: the fused single-collective default, "ppermute" the per-stride variant;
+#: a TPU build registers "mosaic" (make_async_remote_copy with one
+#: send/recv semaphore pair per stride) under the same signature.
+STRIDE_ASYNC_IMPLS = {
+    "xla": _gather_stride_start,
+    "ppermute": _ppermute_stride_start,
+}
+
+
+def exchange_stride_start(local: jax.Array, block_strides, num_devices: int,
+                          axis: str = "shard", *, row_axis: int = 0,
+                          impl: str = "xla") -> StrideHandle:
+    """Start an XOR block exchange for each stride in ``block_strides``.
+
+    ``num_devices`` must be a power of two (d XOR bs is only a
+    permutation of the ring when it is; on other counts some partners
+    fall off the mesh and the transports would diverge — ppermute crashes
+    while the gather transport's clamped slice silently delivers wrong
+    rows, so the contract is enforced loudly here). Every stride must be
+    in [1, num_devices) (in-block pairing distances never reach this
+    function — the caller shuffles locally). Join with
+    ``exchange_stride_join``.
+    """
+    if num_devices & (num_devices - 1):
+        raise ValueError(
+            f"XOR stride exchange needs a power-of-two device count, "
+            f"got {num_devices} (partner d XOR bs would leave the mesh)")
+    for bs in block_strides:
+        if not 0 < int(bs) < num_devices:
+            raise ValueError(
+                f"block stride {bs} outside [1, {num_devices}) — in-block "
+                f"strides are local shuffles, not exchanges")
+    try:
+        start = STRIDE_ASYNC_IMPLS[impl]
+    except KeyError:
+        raise ValueError(
+            f"unknown stride async impl {impl!r}; "
+            f"known {sorted(STRIDE_ASYNC_IMPLS)}"
+        ) from None
+    return start(local, tuple(int(b) for b in block_strides), num_devices,
+                 axis, row_axis=row_axis)
+
+
+def exchange_stride_join(handle: StrideHandle) -> Tuple[jax.Array, ...]:
+    """Complete a stride exchange: the partner blocks, safe to consume."""
+    return handle.join()
+
+
+def exchange_stride(local: jax.Array, block_strides, num_devices: int,
+                    axis: str = "shard", *, row_axis: int = 0,
+                    impl: str = "xla") -> Tuple[jax.Array, ...]:
+    """Synchronous spelling: start and join back-to-back."""
+    return exchange_stride_join(
+        exchange_stride_start(local, block_strides, num_devices, axis,
+                              row_axis=row_axis, impl=impl))
+
+
+def gather_global(local: jax.Array, num_devices: int, axis: str = "shard",
+                  *, row_axis: int = 0, impl: str = "xla") -> jax.Array:
+    """The full global-order state on every device (the all-gather plan).
+
+    "xla" is one tiled all-gather. "ppermute" assembles the ring from
+    D-1 whole-block backward shifts and rotates into global order — the
+    minimal-collective-primitive spelling, kept for transport parity
+    tests (both move exact row copies, so outputs are bit-identical).
+    """
+    if num_devices == 1:
+        return local
+    if impl == "xla":
+        return jax.lax.all_gather(local, axis, axis=row_axis, tiled=True)
+    if impl != "ppermute":
+        raise ValueError(
+            f"unknown gather impl {impl!r}; known ['ppermute', 'xla']")
+    _, bwd = ring_perms(num_devices, axis)
+    blocks = [local]  # device-local order: [d, d+1, ..., d+D-1]
+    cur = local
+    for _ in range(num_devices - 1):
+        cur = jax.lax.ppermute(cur, axis, bwd)
+        blocks.append(cur)
+    stacked = jnp.concatenate(blocks, axis=row_axis)
+    n = local.shape[row_axis]
+    d = jax.lax.axis_index(axis)
+    # rotate [d..d+D-1] into [0..D-1]: global row 0 sits n*d rows from the
+    # END of the device-local order exactly when d > 0; a doubled buffer
+    # sliced at (D - d) * n mod (D * n) does it without traced-shift roll
+    doubled = jnp.concatenate([stacked, stacked], axis=row_axis)
+    start = jnp.mod((num_devices - d) * n, num_devices * n)
+    return jax.lax.dynamic_slice_in_dim(
+        doubled, start, num_devices * n, axis=row_axis)
+
+
 def exchange_halos(local: jax.Array, r: int, num_devices: int,
                    axis: str = "shard", *, row_axis: int = 0):
     """Ring-exchange r edge rows each way (multi-hop when r exceeds a block).

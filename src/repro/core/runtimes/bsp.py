@@ -17,8 +17,6 @@ Collective selection per pattern class (see patterns.py):
 """
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import Callable, List
 
 import jax
@@ -91,15 +89,7 @@ class _BspBase(Runtime):
         """One step body per period slot k (pairing distance 2^k_eff)."""
         W, D = graph.width, len(self.devices)
         B = W // D
-        L = max(1, int(math.log2(W)))
         spec = graph.kernel
-
-        def strides_for_slot(s: int) -> int:
-            if graph.pattern == "fft":
-                return 1 << (s % L)
-            k = s % (2 * L)
-            k = k if k < L else (2 * L - 1 - k)
-            return 1 << k
 
         def make(stride: int) -> Callable:
             def step(local):
@@ -115,7 +105,7 @@ class _BspBase(Runtime):
 
             return step
 
-        return [make(strides_for_slot(s)) for s in range(graph.period)]
+        return [make(s) for s in _patterns.butterfly_slot_strides(graph)]
 
     def _make_global_step(self, graph: TaskGraph, use_pallas: bool) -> Callable:
         W, D = graph.width, len(self.devices)

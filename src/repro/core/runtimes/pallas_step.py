@@ -60,12 +60,44 @@ splitting buys nothing and costs a second launch) fall back to it
 automatically. The scan's final iteration issues one dead exchange (uniform
 bodies); its cost is 1/L of the exchanges and it keeps the loop rolled.
 
-Options: combine="window"|"gather"|"onehot" (see taskbench_step.py),
-steps_per_launch=int|"auto", pipeline=True|False, block_rows, unroll.
+Beyond halos — the pattern→plan dispatch (DESIGN.md §7): non-local
+dependence patterns have no bounded per-step reach, so ``supports`` routes
+every graph to one of three PLANS instead of refusing anything non-halo:
+
+  halo       halo-expressible period-1 patterns — everything above.
+  stride     butterfly patterns (fft/tree). Step t pairs p with
+             p XOR 2^(t-1 mod log2 W): in-block strides materialize the
+             partner rows with an XOR layout shuffle (reshape + pair
+             swap, no gather), block strides with one XOR collective
+             permute (`_halo.exchange_stride_start/join`) delivering the
+             partner block; the megakernel then combines the stacked
+             [x | partner] halves with the gather-free "pair" mode —
+             elementwise (a+b)*0.5, bit-identical to the fused oracle
+             (gather/onehot stay selectable as ablations). One launch +
+             at most one collective per step; per-step by construction
+             (temporal blocking a stride plan needs the XOR-subgroup
+             closure of the launch window, which is the full gather — so
+             EXPLICITLY blocked requests route to:)
+  allgather  global patterns (spread, all_to_all) and blocked butterfly,
+             for widths <= ``gather_width_cap``: one full-state gather
+             per launch (`_halo.gather_global`), every gathered row
+             advances exactly (no valid-span shrink), and TIME-VARYING
+             (S, W, D) idx/wgt tables — butterfly slots selected per
+             depth, spread's rotation computed in-scan — drive the
+             onehot combine at each depth. Blocking trades replicated
+             compute for 1/S the collectives; kernels/schedule.py's
+             ``gathered_pays_off`` gates "auto".
+
+Options: combine="window"|"gather"|"onehot" (see taskbench_step.py; the
+non-halo plans cannot window — the default resolves to "pair" on the
+stride plan and, on the allgather plan, to "gather" off-TPU / "onehot"
+on TPU, with explicit "gather"/"onehot" honored as ablations — see
+``_plan_combine``), steps_per_launch=int|"auto", pipeline=True|False,
+block_rows, unroll, gather_width_cap=int, halo_impl="xla"|"ppermute".
 """
 from __future__ import annotations
 
-from typing import Callable, List, NamedTuple, Sequence, Tuple
+from typing import Callable, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -84,9 +116,16 @@ from repro.kernels import ops as _kops
 from repro.kernels import schedule as _schedule
 from repro.kernels.taskbench_step import (
     WEIGHT_ACCUM_DTYPE,
+    WEIGHT_DTYPE,
     finalize_weights,
     prepare_step_operands,
 )
+
+#: Execution-plan kinds the pattern→plan dispatch resolves to.
+PLAN_HALO = "halo"
+PLAN_STRIDE = "stride"
+PLAN_ALLGATHER = "allgather"
+PLAN_KINDS = (PLAN_HALO, PLAN_STRIDE, PLAN_ALLGATHER)
 
 
 def _ext_dep_operands(
@@ -194,6 +233,90 @@ def _window_operands(
             else:
                 raise ValueError(f"dep {q} of point {p} outside halo {r}")
     return idx, finalize_weights(wgt)
+
+
+def _stride_slot_tables(
+    block: int, stride: int
+) -> Tuple[np.ndarray, np.ndarray, bool]:
+    """(B, 2) idx/wgt tables for one butterfly period slot (the
+    gather/onehot ablations of the stride plan; the default pair combine
+    needs no tables).
+
+    Power-of-two width (graph-validated) means every point has exactly the
+    two dependencies {p, p XOR stride} at weight 1/2 — a power of two, so
+    0.5*a + 0.5*b is bit-identical to the fused oracle's (a + b) / 2
+    under every combine. In-block strides (stride < block, which implies
+    the partner shares the block since blocks are power-of-two sized)
+    address the local rows; block strides address a [local | partner]
+    working buffer (partner block at rows [B, 2B)). Returns
+    (idx, wgt, off_block)."""
+    i = np.arange(block, dtype=np.int32)
+    off_block = stride >= block
+    partner = (block + i) if off_block else (i ^ stride)
+    idx = np.stack([i, partner], axis=1).astype(np.int32)
+    wgt = np.full((block, 2), 0.5, dtype=WEIGHT_ACCUM_DTYPE)
+    return idx, finalize_weights(wgt), off_block
+
+
+def _global_slot_operands(graph: TaskGraph) -> Tuple[np.ndarray, np.ndarray]:
+    """(period, W, D) idx + pre-normalized wgt tables in GLOBAL row ids.
+
+    The all-gather plan's working buffer is the full state in global
+    order, so the graph's own dependency arrays ARE the gather tables —
+    no rebasing, any pattern. Weights follow the shared precision policy
+    (mask / live-count accumulated wide, rounded once); zero-dep rows
+    self-gather at weight 1 (combine_dependencies' keep-own-state rule).
+    """
+    idx, mask = graph.dependency_arrays()
+    acc = np.asarray(mask, WEIGHT_ACCUM_DTYPE)
+    live = acc.sum(-1, keepdims=True)
+    wgt = acc / np.maximum(live, 1.0)
+    zero = live[..., 0] == 0  # (period, W)
+    if zero.any():
+        P, W, _ = idx.shape
+        idx = idx.copy()
+        selfs = np.broadcast_to(np.arange(W, dtype=np.int32), (P, W))
+        idx[..., 0] = np.where(zero, selfs, idx[..., 0])
+        wgt[..., 0] = np.where(zero, 1.0, wgt[..., 0])
+    return idx, finalize_weights(wgt)
+
+
+def _spread_base_operands(graph: TaskGraph) -> Tuple[np.ndarray, np.ndarray]:
+    """(W, D) t=1 tables for spread; timestep t rotates idx by +(t-1) mod W.
+
+    spread's dependence set {(p + i*stride + (t-1)) mod W} shifts RIGIDLY
+    with t, so one base table plus an in-scan additive rotation replaces
+    the period-W stack ``_global_slot_operands`` would materialize. The
+    live count |{i*stride mod W}| is point- and time-invariant, so the
+    weight table never rotates."""
+    W = graph.width
+    lists = [graph.dependencies(1, p) for p in range(W)]
+    D = max(1, max(len(l) for l in lists))
+    idx = np.zeros((W, D), dtype=np.int32)
+    acc = np.zeros((W, D), dtype=WEIGHT_ACCUM_DTYPE)
+    for p, deps in enumerate(lists):
+        share = 1.0 / len(deps)
+        for j, q in enumerate(deps):
+            idx[p, j] = q
+            acc[p, j] = share
+    return idx, finalize_weights(acc)
+
+
+def _self_tables(block: int) -> Tuple[jax.Array, jax.Array]:
+    """(B, 1) per-device identity tables for the t=0 body-only launch
+    (device-invariant, so closures can carry them into shard_map)."""
+    return (jnp.arange(block, dtype=jnp.int32)[:, None],
+            jnp.ones((block, 1), WEIGHT_DTYPE))
+
+
+def _xor_swap(x: jax.Array, stride: int) -> jax.Array:
+    """Rows permuted by i -> i XOR stride (a power of two dividing the
+    row count): reshape to (pairs, 2, stride, ...) and swap the pair axis
+    — a pure layout shuffle, no gather. This is what makes the stride
+    plan's in-block butterfly combine gather-free."""
+    B = x.shape[0]
+    g = x.reshape(B // (2 * stride), 2, stride, *x.shape[1:])
+    return jnp.flip(g, axis=1).reshape(x.shape)
 
 
 def _extend_state(s: jax.Array, depth: int, num_devices: int,
@@ -340,28 +463,149 @@ def _act_schedule(
     return (t < msteps).astype(np.float32)
 
 
+class _ResolvedPlan(NamedTuple):
+    """What one graph will actually run: a plan kind + launch depth."""
+
+    kind: str
+    steps_per_launch: int
+
+
 @register
 class PallasStepRuntime(_BspBase):
     name = "pallas_step"
 
-    def supports(self, graph: TaskGraph):
+    # ------------------------------------------------------ plan dispatch
+
+    def _gather_width_cap(self) -> int:
+        return int(self.options.get(
+            "gather_width_cap", _schedule.DEFAULT_GATHER_WIDTH_CAP))
+
+    def plan_for(self, graph: TaskGraph) -> Tuple[Optional[str], str]:
+        """pattern -> execution plan kind, or (None, reason).
+
+        halo-expressible period-1 patterns take the halo plan (ring
+        exchanges, every schedule above); butterfly patterns the stride
+        plan (XOR block permutes); anything else — and butterfly when a
+        blocked schedule is requested — the all-gather plan, capped at
+        ``gather_width_cap`` rows.
+        """
         D = len(self.devices)
         if graph.width % D != 0:
-            return False, f"width {graph.width} not divisible by {D} devices"
+            return None, f"width {graph.width} not divisible by {D} devices"
         r = _patterns.halo_radius(graph)
-        if r < 0:
-            return False, (
-                f"pattern {graph.pattern} is not halo-expressible; "
-                f"pallas_step fuses halo-pattern steps only"
-            )
-        # no r <= block restriction: _halo.exchange_halos goes multi-hop
-        # when a (deep) halo exceeds the local block
-        return True, ""
+        if r >= 0 and graph.period == 1:
+            # no r <= block restriction: _halo.exchange_halos goes
+            # multi-hop when a (deep) halo exceeds the local block
+            return PLAN_HALO, ""
+        if graph.pattern in _patterns.BUTTERFLY_PATTERNS and graph.width > 1:
+            # W=1 degenerates to a pure self-dependency (partner = p XOR 1
+            # falls outside the width), which breaks the stride plan's
+            # exactly-two-deps tables; it falls through to the all-gather
+            # plan (W=1 is always under the cap), whose tables come from
+            # the graph's own dependency arrays and handle it exactly.
+            return PLAN_STRIDE, ""
+        cap = self._gather_width_cap()
+        if graph.width <= cap:
+            return PLAN_ALLGATHER, ""
+        return None, (
+            f"pattern {graph.pattern} at width {graph.width} fits no "
+            f"pallas_step plan (halo: halo-expressible period-1 patterns "
+            f"at any width; stride: butterfly fft/tree; allgather: any "
+            f"pattern up to gather_width_cap={cap} rows) — fall back to "
+            f"the `fused` backend, which runs every pattern at any width"
+        )
+
+    def supports(self, graph: TaskGraph):
+        plan, why = self.plan_for(graph)
+        return (True, "") if plan is not None else (False, why)
+
+    def _schedule_for_graph(self, graph: TaskGraph) -> _ResolvedPlan:
+        """The (plan, steps_per_launch) this runtime will execute.
+
+        The stride plan is per-step by construction (see module
+        docstring); an EXPLICIT blocked request on a butterfly graph
+        re-routes to the all-gather plan when the width fits under the
+        cap and the resolver actually grants a depth > 1 —
+        `dispatches_per_run` reports whatever this returns, so launch
+        accounting can never drift from the executed schedule."""
+        plan, why = self.plan_for(graph)
+        if plan is None:
+            raise ValueError(
+                f"runtime {self.name} cannot run {graph.describe()}: {why}")
+        if plan == PLAN_HALO:
+            return _ResolvedPlan(plan, self._graph_steps_per_launch(graph))
+        opt = self.options.get("steps_per_launch")
+        if plan == PLAN_STRIDE:
+            # Only an EXPLICIT depth re-routes a butterfly to the blocked
+            # all-gather plan (the user's ablation choice). "auto" keeps
+            # the stride plan: gathered_pays_off ranks blocked gathers
+            # against per-step GATHERS, not against the stride plan it
+            # would displace here — whose in-block slots need no
+            # collective and whose pair combine is gather-free, measured
+            # well under the blocked schedule at every width.
+            if opt in (None, 1) or _schedule.is_auto(opt):
+                return _ResolvedPlan(plan, 1)
+            if graph.width <= self._gather_width_cap():
+                s = self._gathered_steps_per_launch(graph)
+                if s > 1:
+                    return _ResolvedPlan(PLAN_ALLGATHER, s)
+            return _ResolvedPlan(plan, 1)
+        return _ResolvedPlan(plan, self._gathered_steps_per_launch(graph))
+
+    def _gathered_steps_per_launch(self, graph: TaskGraph) -> int:
+        return _schedule.resolve_steps_per_launch_gathered(
+            self.options.get("steps_per_launch"),
+            width=graph.width, block=self._block(graph),
+            max_deps=graph.max_deps, payload=graph.payload,
+            total_steps=graph.steps,
+            combine=self._plan_combine(PLAN_ALLGATHER),
+            # mirror what the launch actually holds: period-1 patterns
+            # keep one static table pair, not S per-depth tables
+            time_varying=graph.pattern == "spread" or graph.period > 1,
+        )
 
     # ------------------------------------------------------------ operands
 
     def _combine_mode(self) -> str:
-        return str(self.options.get("combine", "window"))
+        mode = str(self.options.get("combine", "window"))
+        if mode not in ("window", "gather", "onehot"):
+            # "pair" is in the kernel's COMBINE_MODES but is an INTERNAL
+            # lowering the stride plan selects itself — as a runtime
+            # option it would crash the halo plan's operand layout, so
+            # every unknown/internal mode is rejected up front
+            raise ValueError(
+                f"unknown combine option {mode!r}: choose window, gather, "
+                f"or onehot ('pair' is the stride plan's internal "
+                f"lowering, selected automatically)")
+        return mode
+
+    def _plan_combine(self, plan: str) -> str:
+        """Combine mode under a plan. halo honors the option as-is; the
+        stride/allgather working buffers are gathered-row addressed, so
+        the window (shifted-slice) combine cannot express them and the
+        default ("window"/unset) resolves per plan:
+
+          stride     "pair" — the partner row is materialized by an XOR
+                     layout shuffle (in-block) or a block permute
+                     (off-block), so the kernel's combine is an
+                     elementwise (a + b) * 0.5: gather-free, exact, and
+                     Mosaic-friendly (slices and adds only). This is the
+                     butterfly analogue of the halo plan's window mode.
+          allgather  "onehot" on TPU — the portable MXU lowering, since a
+                     Mosaic row gather may not lower (DESIGN.md §7) —
+                     and "gather" elsewhere, where fancy indexing lowers
+                     fine and the onehot's (W, W) matrix build per step
+                     is pure overhead.
+
+        An explicit "gather"/"onehot" option is honored on both plans
+        (the ablations); all selections are bit-identical per plan (same
+        tables, same weights, exact 0.5 halving)."""
+        mode = self._combine_mode()
+        if plan == PLAN_HALO or mode in ("gather", "onehot"):
+            return mode
+        if plan == PLAN_STRIDE:
+            return "pair"
+        return "onehot" if jax.default_backend() == "tpu" else "gather"
 
     def _operands(self, graph: TaskGraph, halo: int):
         """Host-built (idx, wgt, idx0, wgt0) for one member graph (S=1).
@@ -393,10 +637,10 @@ class PallasStepRuntime(_BspBase):
         idx0, wgt0 = _self_operands(graph.width, B)
         return idx, wgt, idx0, wgt0
 
-    def _kernel_kw(self, spec: KernelSpec) -> dict:
+    def _kernel_kw(self, spec: KernelSpec, combine: Optional[str] = None) -> dict:
         kw = dict(
             kind=spec.kind, iterations=spec.iterations, scratch=spec.scratch,
-            combine=self._combine_mode(),
+            combine=combine or self._combine_mode(),
         )
         if self.options.get("block_rows"):
             kw["block_rows"] = int(self.options["block_rows"])
@@ -453,8 +697,12 @@ class PallasStepRuntime(_BspBase):
     def _ensemble_steps_per_launch(self, ensemble: GraphEnsemble) -> int:
         """Common launch depth for an ensemble: one cadence for all members
         (launch boundaries are shared), so take the most conservative
-        member's resolved depth."""
+        member's resolved depth. A member on a stride or all-gather plan
+        pins the shared cadence to per-step (its exchanges are per-step /
+        per-gather, and the deep-halo machinery does not apply to it)."""
         members = ensemble.members
+        if any(self.plan_for(g)[0] != PLAN_HALO for g in members):
+            return 1
         if self._is_stacked(ensemble):
             H = max(_patterns.halo_radius(g) for g in members)
             return self._steps_per_launch(
@@ -468,9 +716,16 @@ class PallasStepRuntime(_BspBase):
             for g in members
         )
 
-    @staticmethod
-    def _is_stacked(ensemble: GraphEnsemble) -> bool:
-        return ensemble.stackable and len({g.kernel for g in ensemble.members}) == 1
+    def _is_stacked(self, ensemble: GraphEnsemble) -> bool:
+        """Stacked launches share one (K, B, ...) operand set built by the
+        halo-plan machinery, so they additionally require every member on
+        the halo plan; mixed-plan ensembles use the tuple fallback."""
+        return (
+            ensemble.stackable
+            and len({g.kernel for g in ensemble.members}) == 1
+            and all(self.plan_for(g)[0] == PLAN_HALO
+                    for g in ensemble.members)
+        )
 
     @staticmethod
     def _launches(total_steps: int, s: int) -> int:
@@ -484,8 +739,16 @@ class PallasStepRuntime(_BspBase):
 
     def build(self, graph: TaskGraph) -> Callable[[jax.Array], jax.Array]:
         self._require_support(graph)
+        plan = self._schedule_for_graph(graph)
+        if plan.kind == PLAN_STRIDE:
+            return self._build_plan_stepper(graph, plan.kind)
+        if plan.kind == PLAN_ALLGATHER:
+            if plan.steps_per_launch > 1:
+                return self._build_allgather_blocked(
+                    graph, plan.steps_per_launch)
+            return self._build_plan_stepper(graph, plan.kind)
         H = _patterns.halo_radius(graph)
-        S = self._graph_steps_per_launch(graph)
+        S = plan.steps_per_launch
         if S > 1:
             return self._build_blocked(graph, S)
         unroll = int(self.options.get("unroll", 1))
@@ -590,6 +853,262 @@ class PallasStepRuntime(_BspBase):
             jax.device_put(jnp.asarray(a), sh) for a in (idx, wgt, idx0, wgt0)
         ) + (jax.device_put(jnp.asarray(acts), rep),)
         return lambda init: fn(jax.device_put(init, sh), *consts)
+
+    # ------------------------------------------- stride / all-gather plans
+
+    def _stride_step_fns(self, graph: TaskGraph) -> Tuple[Callable, Callable]:
+        """(t0, step) closures for one stride-plan (butterfly) member.
+
+        ``step(s, o, t)`` runs timestep t: the period slot's pairing
+        distance selects a branch — in-block strides gather locally,
+        block strides first XOR-permute the partner block in
+        (`_halo.exchange_stride`) — and one megakernel launch combines
+        {p, partner} and runs the body. Tables are device-invariant
+        (XOR structure is translation-invariant across blocks), so they
+        ride as closures; ``o`` is an unused operand slot kept for
+        signature parity with the halo members in tuple ensembles."""
+        D = len(self.devices)
+        B = self._block(graph)
+        mode = self._plan_combine(PLAN_STRIDE)
+        kw = self._kernel_kw(graph.kernel, combine=mode)
+        impl = self._halo_impl()
+        period = graph.period
+        strides = _patterns.butterfly_slot_strides(graph)
+        distinct = sorted(set(strides))
+        bmap = jnp.asarray([distinct.index(s) for s in strides], jnp.int32)
+        # pair mode's idx/wgt are kernel-side dummies (wgt's row count
+        # declares the output width); table modes carry real slot tables
+        dummy_i = jnp.zeros((1, 1), jnp.int32)
+        dummy_w = jnp.zeros((B, 1), WEIGHT_DTYPE)
+
+        def make_branch(s: int) -> Callable:
+            if mode == "pair":
+                if s < B:
+                    def partner_of(local):
+                        return _xor_swap(local, s)
+                else:
+                    bs = s // B
+
+                    def partner_of(local):
+                        p, = _halo.exchange_stride(
+                            local, (bs,), D, AXIS, impl=impl)
+                        return p
+
+                def branch(local):
+                    src = jnp.concatenate(
+                        [local, partner_of(local)], axis=0)
+                    return _kops.taskbench_step(
+                        src[None], dummy_i[None], dummy_w[None], **kw)[0]
+
+                return branch
+            idx_np, wgt_np, off_block = _stride_slot_tables(B, s)
+            idx, wgt = jnp.asarray(idx_np), jnp.asarray(wgt_np)
+            if not off_block:
+                def branch(local):
+                    return _kops.taskbench_step(
+                        local[None], idx[None], wgt[None], **kw)[0]
+            else:
+                bs = s // B
+
+                def branch(local):
+                    partner, = _halo.exchange_stride(
+                        local, (bs,), D, AXIS, impl=impl)
+                    src = jnp.concatenate([local, partner], axis=0)
+                    return _kops.taskbench_step(
+                        src[None], idx[None], wgt[None], **kw)[0]
+            return branch
+
+        branches = [make_branch(s) for s in distinct]
+        i0, w0 = _self_tables(B)
+
+        if mode == "pair":
+            # t=0 (body only) through pair itself: [x | x] halves give
+            # (a + a) * 0.5 == a bit-exactly, so the stride plan never
+            # leaves its gather-free lowering (a gather here would be the
+            # one Mosaic-unfriendly op on an otherwise portable path)
+            def t0(s, o):
+                src = jnp.concatenate([s, s], axis=0)
+                return _kops.taskbench_step(
+                    src[None], dummy_i[None], dummy_w[None], **kw)[0]
+        else:
+            def t0(s, o):
+                return _kops.taskbench_step(
+                    s[None], i0[None], w0[None], **kw)[0]
+
+        if len(branches) == 1:
+            def step(s, o, t):
+                return branches[0](s)
+        else:
+            def step(s, o, t):
+                slot = jax.lax.rem(t - 1, period)
+                return jax.lax.switch(bmap[slot], branches, s)
+
+        return t0, step
+
+    def _global_table_fn(self, graph: TaskGraph) -> Tuple[Callable, bool]:
+        """(tables_for, time_varying) — THE global-table policy, shared by
+        the per-step and blocked all-gather builders so the two schedules
+        cannot diverge.
+
+        time_varying=True: ``tables_for(ts)`` maps a traced (n,) vector
+        of timesteps to stacked (n, W, D) idx/wgt tables — spread rotates
+        its base table by +(t-1) (the dependence set shifts rigidly;
+        weights never rotate), other patterns gather their period stack
+        at slots (ts-1) mod period. time_varying=False (period-1
+        patterns, e.g. all_to_all): ``tables_for(None)`` returns the one
+        static (W, D) pair."""
+        W = graph.width
+        if graph.pattern == "spread":
+            bi, bw = _spread_base_operands(graph)
+            base_i, base_w = jnp.asarray(bi), jnp.asarray(bw)
+
+            def tables_for(ts):
+                i_t = jnp.mod(base_i[None] + (ts - 1)[:, None, None], W)
+                w_t = jnp.broadcast_to(
+                    base_w[None], (ts.shape[0],) + base_w.shape)
+                return i_t, w_t
+
+            return tables_for, True
+        gi, gw = _global_slot_operands(graph)
+        tab_i, tab_w = jnp.asarray(gi), jnp.asarray(gw)
+        period = gi.shape[0]
+        if period == 1:
+            def tables_for(ts):
+                return tab_i[0], tab_w[0]
+
+            return tables_for, False
+
+        def tables_for(ts):
+            slots = jnp.mod(ts - 1, period)
+            return (jnp.take(tab_i, slots, axis=0),
+                    jnp.take(tab_w, slots, axis=0))
+
+        return tables_for, True
+
+    def _allgather_step_fns(self, graph: TaskGraph) -> Tuple[Callable, Callable]:
+        """(t0, step) closures for one all-gather-plan (global) member.
+
+        ``step(s, o, t)``: gather the full global-order state, pick
+        timestep t's (idx, wgt) tables (``_global_table_fn``), slice this
+        device's output rows out of the global tables, one megakernel
+        launch. Tables ride as closures (global tables are
+        device-invariant; the per-device slice happens in-scan)."""
+        D = len(self.devices)
+        B = self._block(graph)
+        kw = self._kernel_kw(graph.kernel,
+                             combine=self._plan_combine(PLAN_ALLGATHER))
+        impl = self._halo_impl()
+        tables_for, time_varying = self._global_table_fn(graph)
+        i0, w0 = _self_tables(B)
+
+        def t0(s, o):
+            return _kops.taskbench_step(s[None], i0[None], w0[None], **kw)[0]
+
+        def step(s, o, t):
+            full = _halo.gather_global(s, D, AXIS, impl=impl)
+            if time_varying:
+                i_ts, w_ts = tables_for(jnp.reshape(t, (1,)))
+                i_t, w_t = i_ts[0], w_ts[0]
+            else:
+                i_t, w_t = tables_for(None)
+            r0 = jax.lax.axis_index(AXIS) * B
+            i_loc = jax.lax.dynamic_slice_in_dim(i_t, r0, B, axis=0)
+            w_loc = jax.lax.dynamic_slice_in_dim(w_t, r0, B, axis=0)
+            return _kops.taskbench_step(
+                full[None], i_loc[None], w_loc[None], **kw)[0]
+
+        return t0, step
+
+    def _plan_step_fns(self, graph: TaskGraph,
+                       plan: str) -> Tuple[Callable, Callable]:
+        if plan == PLAN_STRIDE:
+            return self._stride_step_fns(graph)
+        return self._allgather_step_fns(graph)
+
+    def _build_plan_stepper(self, graph: TaskGraph, plan: str) -> Callable:
+        """Single-graph per-step scan for the stride / all-gather plans:
+        one megakernel launch (plus at most one collective) per timestep,
+        whole loop in one jit — the same dispatch shape as the halo S=1
+        path, with the plan's own exchange."""
+        unroll = int(self.options.get("unroll", 1))
+        mesh = self._mesh()
+        T = graph.steps
+        t0, step = self._plan_step_fns(graph, plan)
+
+        def local_run(local):
+            state = t0(local, ())
+            if T == 1:
+                return state
+
+            def body(s, t):
+                return step(s, (), t), None
+
+            state, _ = jax.lax.scan(
+                body, state, jnp.arange(1, T), unroll=unroll)
+            return state
+
+        fn = jax.jit(
+            shard_map(local_run, mesh=mesh, check_vma=False,
+                      in_specs=P(AXIS), out_specs=P(AXIS)))
+        sh = NamedSharding(mesh, P(AXIS))
+        return lambda init: fn(jax.device_put(init, sh))
+
+    def _build_allgather_blocked(self, graph: TaskGraph, S: int) -> Callable:
+        """Blocked all-gather plan: ONE full-state gather + one S-depth
+        launch per ``ceil((T-1)/S)`` launches, with time-varying (S, W, D)
+        idx/wgt tables driving the per-depth combine (butterfly slots /
+        spread's rotation; period-1 patterns keep static tables). Every
+        row of the gathered buffer advances exactly — the buffer is closed
+        under any dependence set — so there is no valid-span shrink and
+        the device slices its own rows from the final buffer. The act
+        machinery (masked tail) is the halo path's, unchanged."""
+        unroll = int(self.options.get("unroll", 1))
+        mesh = self._mesh()
+        D = len(self.devices)
+        B = self._block(graph)
+        T = graph.steps
+        kw0 = self._kernel_kw(graph.kernel,
+                              combine=self._plan_combine(PLAN_ALLGATHER))
+        kwb = dict(kw0, steps_per_launch=S)
+        kwb.pop("block_rows", None)
+        impl = self._halo_impl()
+        tables_for, time_varying = self._global_table_fn(graph)
+        acts = _act_schedule((T,), T, S)[:, 0]  # (L, S)
+        # first timestep of each launch (selects the depth tables in-scan)
+        t0s = 1 + np.arange(acts.shape[0], dtype=np.int32) * S
+        i0, w0 = _self_tables(B)
+
+        def local_run(local, act_seq, t0_seq):
+            state = _kops.taskbench_step(
+                local[None], i0[None], w0[None], **kw0)[0]
+            if T == 1:
+                return state
+
+            def body(s, inp):
+                a, tt0 = inp
+                full = _halo.gather_global(s, D, AXIS, impl=impl)
+                if time_varying:
+                    # this launch's S timesteps -> (S, W, D) depth tables
+                    i_t, w_t = tables_for(tt0 + jnp.arange(S))
+                else:
+                    i_t, w_t = tables_for(None)
+                nf = _kops.taskbench_step(
+                    full[None], i_t[None], w_t[None], a[None], **kwb)[0]
+                r0 = jax.lax.axis_index(AXIS) * B
+                return jax.lax.dynamic_slice_in_dim(nf, r0, B, axis=0), None
+
+            state, _ = jax.lax.scan(
+                body, state, (act_seq, t0_seq), unroll=unroll)
+            return state
+
+        fn = jax.jit(
+            shard_map(local_run, mesh=mesh, check_vma=False,
+                      in_specs=(P(AXIS), P(), P()), out_specs=P(AXIS)))
+        sh = NamedSharding(mesh, P(AXIS))
+        rep = NamedSharding(mesh, P())
+        acts_dev = jax.device_put(jnp.asarray(acts), rep)
+        t0_dev = jax.device_put(jnp.asarray(t0s), rep)
+        return lambda init: fn(jax.device_put(init, sh), acts_dev, t0_dev)
 
     # ---------------------------------------------------------- ensembles
 
@@ -732,32 +1251,45 @@ class PallasStepRuntime(_BspBase):
         return run
 
     def _build_ensemble_tuple(self, ensemble: GraphEnsemble) -> Callable:
-        """Mixed specs/shapes: one launch per member, still one jitted scan."""
+        """Mixed specs/shapes/plans: one launch per member, one jitted scan.
+
+        Every member contributes a ``(t0, step)`` pair for its own plan:
+        halo members keep the sharded-operand tables flowing through
+        in_specs; stride and all-gather members carry device-invariant
+        closure tables and an empty operand slot, and their step fns take
+        the traced timestep (slot selection / rotation)."""
         members = ensemble.members
         unroll = int(self.options.get("unroll", 1))
         mesh = self._mesh()
         D = len(self.devices)
         steps = ensemble.steps
-        halos = [_patterns.halo_radius(g) for g in members]
-        kws = [self._kernel_kw(g.kernel) for g in members]
-        ops4 = [self._operands(g, h) for g, h in zip(members, halos)]
+        plans = [self.plan_for(g)[0] for g in members]
+        ops4: List[tuple] = []
+        t0_fns: List[Callable] = []
+        step_fns: List[Callable] = []
+        for g, plan in zip(members, plans):
+            if plan == PLAN_HALO:
+                H = _patterns.halo_radius(g)
+                kw = self._kernel_kw(g.kernel)
+                ops4.append(self._operands(g, H))
 
-        def member_step(k):
-            H = halos[k]
-            kw = kws[k]
+                def t0(s, o, kw=kw):
+                    return _kops.taskbench_step(
+                        s[None], o[2][None], o[3][None], **kw)[0]
 
-            def step(s, i, w):
-                ext = _extend_state(s, H, D)
-                return _kops.taskbench_step(ext[None], i[None], w[None], **kw)[0]
-
-            return step
-
-        step_fns = [member_step(k) for k in range(len(members))]
+                def step(s, o, t, H=H, kw=kw):
+                    ext = _extend_state(s, H, D)
+                    return _kops.taskbench_step(
+                        ext[None], o[0][None], o[1][None], **kw)[0]
+            else:
+                ops4.append(())
+                t0, step = self._plan_step_fns(g, plan)
+            t0_fns.append(t0)
+            step_fns.append(step)
 
         def local_run(states, operands):
             states = tuple(
-                _kops.taskbench_step(s[None], o[2][None], o[3][None], **kw)[0]
-                for s, o, kw in zip(states, operands, kws)
+                f(s, o) for f, s, o in zip(t0_fns, states, operands)
             )
             if steps == 1:
                 return states
@@ -765,7 +1297,7 @@ class PallasStepRuntime(_BspBase):
             def body(ss, t):
                 nxt = []
                 for k, (s, o) in enumerate(zip(ss, operands)):
-                    n = step_fns[k](s, o[0], o[1])
+                    n = step_fns[k](s, o, t)
                     if members[k].steps < steps:
                         n = jnp.where(t < members[k].steps, n, s)
                     nxt.append(n)
@@ -891,14 +1423,19 @@ class PallasStepRuntime(_BspBase):
     def dispatches_per_run(self, graph: TaskGraph) -> int:
         """Actual kernel launches: the t=0 body-only launch plus
         ceil((T-1)/S) blocked combine launches (S=1 degenerates to T).
-        The pipelined schedule splits every blocked launch into a boundary
-        launch + an interior launch — TWO kernel launches per deep
-        exchange; the accounting stays honest about it (hiding the
-        exchange is bought with an extra, smaller, launch)."""
-        S = self._graph_steps_per_launch(graph)
-        L = self._launches(graph.steps, S)
-        if self._pipeline_active(
-                self._block(graph), S, _patterns.halo_radius(graph)):
+        The (halo-plan) pipelined schedule splits every blocked launch
+        into a boundary launch + an interior launch — TWO kernel launches
+        per deep exchange; the accounting stays honest about it (hiding
+        the exchange is bought with an extra, smaller, launch). Stride
+        plans are per-step BY CONSTRUCTION — a butterfly graph with a
+        blocked request only drops below T launches when the all-gather
+        plan actually grants a depth (width under the cap, resolver says
+        yes), exactly mirroring ``_schedule_for_graph``."""
+        plan = self._schedule_for_graph(graph)
+        L = self._launches(graph.steps, plan.steps_per_launch)
+        if plan.kind == PLAN_HALO and self._pipeline_active(
+                self._block(graph), plan.steps_per_launch,
+                _patterns.halo_radius(graph)):
             return 1 + 2 * (L - 1)
         return L
 

@@ -30,6 +30,7 @@ schedule wherever the interior is empty).
 """
 from __future__ import annotations
 
+import os
 from typing import Optional, Sequence, Union
 
 
@@ -56,9 +57,33 @@ _LANE = 128  # payload pads to the TPU lane multiple inside the kernel
 #: where the exchange is rendezvous-dominated (~80-200us vs ~0.1-0.2us per
 #: row-step at payload 64): S=8 at block 256 measurably pays, S=16 does
 #: not, which brackets the constant. A real-interconnect build would
-#: re-measure. Used only to rank "auto" candidates — never to forbid an
-#: explicit S.
+#: re-measure — either by editing this constant or, without touching the
+#: source, via the REPRO_PIPELINE_EXCHANGE_ROW_STEPS environment variable
+#: (read per call by ``exchange_row_steps`` so a benchmark harness can
+#: re-calibrate per platform). Used only to rank "auto" candidates — never
+#: to forbid an explicit S.
 PIPELINE_EXCHANGE_ROW_STEPS = 512
+
+_EXCHANGE_ROW_STEPS_ENV = "REPRO_PIPELINE_EXCHANGE_ROW_STEPS"
+
+
+def exchange_row_steps() -> int:
+    """The calibrated exchange cost in row-steps, env-var overridable.
+
+    Consulted at every covering/pays-off evaluation (not cached at import)
+    so per-platform re-calibration needs no reimport: set
+    ``REPRO_PIPELINE_EXCHANGE_ROW_STEPS`` and the next "auto" resolution
+    uses it. Invalid values fail loudly — a silently ignored calibration
+    is worse than a crash."""
+    raw = os.environ.get(_EXCHANGE_ROW_STEPS_ENV)
+    if raw is None or raw == "":
+        return PIPELINE_EXCHANGE_ROW_STEPS
+    value = int(raw)
+    if value <= 0:
+        raise ValueError(
+            f"{_EXCHANGE_ROW_STEPS_ENV} must be a positive integer, "
+            f"got {raw!r}")
+    return value
 
 
 def _launch_set_bytes(m: int, window: int, padded_payload: int,
@@ -132,7 +157,8 @@ def pipeline_interior_covers_exchange(
     """Whether the pipelined split pays for itself at this (block, S).
 
     Two conditions, both in row-steps against the calibrated exchange cost
-    X = PIPELINE_EXCHANGE_ROW_STEPS:
+    X = exchange_row_steps() (PIPELINE_EXCHANGE_ROW_STEPS or its env-var
+    override):
 
       covers:   ``S * (block - 2*S*r) >= X + 2*S*r`` — the interior phase
                 must be long enough to hide one deep exchange (latency
@@ -148,10 +174,9 @@ def pipeline_interior_covers_exchange(
     interior_rows = block - 2 * depth
     if interior_rows <= 0:
         return False
-    covers = (steps_per_launch * interior_rows
-              >= PIPELINE_EXCHANGE_ROW_STEPS + 2 * depth)
-    pays_off = (6 * steps_per_launch * depth
-                <= PIPELINE_EXCHANGE_ROW_STEPS)
+    X = exchange_row_steps()
+    covers = steps_per_launch * interior_rows >= X + 2 * depth
+    pays_off = 6 * steps_per_launch * depth <= X
     return covers and pays_off
 
 
@@ -198,6 +223,24 @@ def choose_steps_per_launch(
     return best_fit if best_fit is not None else 1
 
 
+def _resolve_depth(value, chooser, total_steps: Optional[int]) -> int:
+    """THE ``steps_per_launch`` option shell, shared by every plan's
+    resolver: None/1 -> per-step, "auto" -> the plan's chooser, explicit
+    ints validated and clamped to the combine-step count (deeper than the
+    run is all masked tail). One parser, so the plans' option handling
+    can never diverge."""
+    if value in (None, 1):
+        return 1
+    if is_auto(value):
+        return chooser()
+    s = int(value)
+    if s < 1:
+        raise ValueError(f"steps_per_launch must be >= 1 or 'auto', got {value!r}")
+    if total_steps and total_steps > 1:
+        s = min(s, total_steps - 1)
+    return s
+
+
 def resolve_steps_per_launch(
     value: Union[int, str, None],
     *,
@@ -210,17 +253,155 @@ def resolve_steps_per_launch(
     pipeline: bool = False,
 ) -> int:
     """Turn the ``steps_per_launch`` runtime option into a concrete S."""
-    if value in (None, 1):
-        return 1
-    if is_auto(value):
-        return choose_steps_per_launch(
+    return _resolve_depth(
+        value,
+        lambda: choose_steps_per_launch(
             block=block, radius=radius, payload=payload,
             total_steps=total_steps, vmem_budget=vmem_budget,
             combine=combine, pipeline=pipeline,
-        )
-    s = int(value)
-    if s < 1:
-        raise ValueError(f"steps_per_launch must be >= 1 or 'auto', got {value!r}")
-    if total_steps and total_steps > 1:
-        s = min(s, total_steps - 1)  # deeper than the run is all masked tail
-    return s
+        ),
+        total_steps,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stride / all-gather plans (pallas_step beyond halo patterns)
+#
+# Butterfly (fft/tree) and global (spread, all_to_all) patterns have no
+# bounded per-step reach, so the deep-halo trade does not apply. Two plans
+# replace it (repro.core.runtimes.pallas_step dispatches):
+#
+#   stride     per-step XOR block exchanges (butterfly). Temporal blocking
+#              a stride plan would need the working buffer closed under
+#              every stride in the launch window — the XOR-subgroup
+#              closure, which for any window containing all of a period's
+#              off-block strides IS the full gather — so the stride plan
+#              is per-step BY CONSTRUCTION: steps_per_launch resolves to 1
+#              and blocked requests route to the all-gather plan instead.
+#   allgather  one full-state gather per launch; every row of the gathered
+#              buffer advances exactly (no valid-span shrink), time-varying
+#              (S, W, D) tables drive the per-depth combine. Blocking here
+#              trades replicated compute (each device advances all W rows,
+#              not its B) for 1/S as many collectives — profitable exactly
+#              when the replication stays under the exchanges saved
+#              (``gathered_pays_off``).
+
+
+#: Widths at or below this run the all-gather plan by default (the
+#: ``gather_width_cap`` runtime option overrides per run). Beyond it the
+#: gathered working set — and for all_to_all the (W, D, W) one-hot
+#: expansion — outgrows the VMEM story this tuner is honest about.
+DEFAULT_GATHER_WIDTH_CAP = 512
+
+
+def gathered_working_set_bytes(
+    width: int,
+    max_deps: int,
+    steps_per_launch: int,
+    payload: int,
+    *,
+    dtype_bytes: int = 4,
+    combine: str = "onehot",
+    time_varying: bool = True,
+) -> int:
+    """VMEM bytes one member's gathered (all-gather plan) launch holds.
+
+    The working buffer is the FULL width (every row advances), so ``m = W``
+    in the shared per-launch model; time-varying launches additionally
+    hold all S per-depth idx/wgt tables — (S, W, D) int32 + float32, the
+    operands the halo budget never had to carry — plus the per-depth
+    one-hot expansion for the onehot combine.
+    """
+    padded_payload = -(-payload // _LANE) * _LANE
+    buffers = 4 * width * padded_payload * dtype_bytes
+    table_depths = steps_per_launch if time_varying else 1
+    tables = table_depths * width * max_deps * (4 + dtype_bytes)
+    tables += steps_per_launch * 4  # act mask
+    if combine == "gather":
+        buffers += width * max_deps * padded_payload * dtype_bytes
+    else:  # onehot: (W, W) combine matrix + its (W, D, W) expansion
+        buffers += width * width * dtype_bytes
+        buffers += width * max_deps * width * dtype_bytes
+    return buffers + tables
+
+
+def gathered_pays_off(width: int, block: int, steps_per_launch: int) -> bool:
+    """Whether a blocked gathered launch beats per-step gathers at this S.
+
+    Per launch the plan saves S - 1 collectives (one gather instead of S),
+    worth ``(S-1) * X`` row-steps against the calibrated exchange cost
+    X = exchange_row_steps(); it pays ``S * (W - B)`` replicated row-steps
+    (each device advances the full W-row buffer for S depths instead of
+    its own B rows once per step). Deeper is better only while the
+    replication stays under the saving. On one device W == B: replication
+    is free and any depth pays (blocking is then pure launch
+    amortization).
+    """
+    if steps_per_launch <= 1:
+        return False
+    return (steps_per_launch * (width - block)
+            <= (steps_per_launch - 1) * exchange_row_steps())
+
+
+def choose_steps_per_launch_gathered(
+    *,
+    width: int,
+    block: int,
+    max_deps: int,
+    payload: int,
+    total_steps: Optional[int] = None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    candidates: Sequence[int] = CANDIDATES,
+    combine: str = "onehot",
+    time_varying: bool = True,
+) -> int:
+    """Deepest candidate S that pays off AND fits for the gathered plan.
+
+    Same shape as ``choose_steps_per_launch``: capped at the graph's
+    combine-step count, deepest-first over CANDIDATES; a depth must clear
+    both the replication pays-off rule and the gathered VMEM budget.
+    ``time_varying`` must mirror what the launch will actually hold
+    (period-1 patterns carry ONE static table pair, not S) so the budget
+    never charges tables that don't exist. No candidate clearing both ->
+    1 (the per-step schedule; for butterfly that is the stride plan)."""
+    cap = max(1, total_steps - 1) if total_steps and total_steps > 1 else None
+    for s in sorted(set(int(c) for c in candidates), reverse=True):
+        if s <= 1:
+            continue
+        if cap is not None and s > cap:
+            continue
+        if not gathered_pays_off(width, block, s):
+            continue
+        if gathered_working_set_bytes(
+                width, max_deps, s, payload, combine=combine,
+                time_varying=time_varying) <= vmem_budget:
+            return s
+    return 1
+
+
+def resolve_steps_per_launch_gathered(
+    value: Union[int, str, None],
+    *,
+    width: int,
+    block: int,
+    max_deps: int,
+    payload: int,
+    total_steps: Optional[int] = None,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    combine: str = "onehot",
+    time_varying: bool = True,
+) -> int:
+    """``steps_per_launch`` -> concrete S for the all-gather plan.
+
+    Explicit depths are the user's ablation choice (clamped to the
+    combine-step count via the shared ``_resolve_depth`` shell); "auto"
+    delegates to ``choose_steps_per_launch_gathered``."""
+    return _resolve_depth(
+        value,
+        lambda: choose_steps_per_launch_gathered(
+            width=width, block=block, max_deps=max_deps, payload=payload,
+            total_steps=total_steps, vmem_budget=vmem_budget,
+            combine=combine, time_varying=time_varying,
+        ),
+        total_steps,
+    )

@@ -44,6 +44,11 @@ the single-step path:
     per-row edge clipping stays exact at every depth), and the output is
     the full (K, M, payload) buffer (caller slices the owned rows).
   * gather/onehot idx entries address the M-row working buffer itself.
+  * gather/onehot tables may carry a leading depth axis — (K, S, M, D),
+    one table per inner step — for patterns whose dependence sets change
+    with t (butterfly strides, spread's rotation); depth d then combines
+    with table d. Such launches run on an exactly-closed working buffer
+    (the runtime's all-gather plan), so no valid-span shrink applies.
   * a per-depth activity mask ``act`` (K, S) freezes member k at inner step
     d when act[k, d] == 0 (heterogeneous-steps ensembles freeze at launch
     granularity; the final partial launch of any run is a masked tail).
@@ -73,6 +78,14 @@ Three combine strategies, selected statically:
   onehot  the combine is lifted to a (W, S) one-hot weight matrix applied
           with ``jnp.dot`` — the MXU-friendly fallback for TPUs where a
           row gather does not lower.
+  pair    for butterfly patterns (fft/tree): src carries [x | partner]
+          halves stacked row-wise (S = 2*W; the runtime's stride plan
+          builds the partner half with an XOR layout shuffle or a block
+          permute), and the combine is elementwise (x + partner) * 0.5 —
+          no gather, no index arithmetic, exact halving (every butterfly
+          task has the two deps {p, p XOR 2^k}, so the masked mean IS
+          (a + b) / 2 and * 0.5 reproduces it bit-for-bit). idx/wgt are
+          ignored (wgt's row count still declares the output width W).
 
 Validated bit-for-bit against ``ref.taskbench_step_ref`` (same value-level
 body functions from ``bodies.py``) in interpret mode; see tests/test_kernels.
@@ -89,7 +102,7 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.bodies import LANE, SUBLANE, apply_body
 
-COMBINE_MODES = ("window", "gather", "onehot")
+COMBINE_MODES = ("window", "gather", "onehot", "pair")
 
 #: Combine weights are accumulated host-side in this dtype and rounded ONCE
 #: to WEIGHT_DTYPE via finalize_weights — the single precision policy for
@@ -116,12 +129,24 @@ def _step_kernel(
     payload: int,
     combine: str,
     block_rows: int,
+    pair_rows: int = 0,
 ):
     src = src_ref[0]  # (S, Pp)
     idx = idx_ref[0]  # (Wb, D)
     wgt = wgt_ref[0]  # (Wb, D)
 
-    if combine == "window":
+    if combine == "pair":
+        # src = [x | partner] halves (second half starts at the TRUE
+        # unpadded width pair_rows): the combine is elementwise
+        # (a + b) * 0.5 — gather-free, and exact halving keeps it
+        # bit-identical to the 2-dep masked mean.
+        row0 = pl.program_id(1) * block_rows
+        srcf = src.astype(jnp.float32)
+        n = wgt.shape[0]
+        a = jax.lax.dynamic_slice_in_dim(srcf, row0, n, 0)
+        b = jax.lax.dynamic_slice_in_dim(srcf, pair_rows + row0, n, 0)
+        x = (a + b) * jnp.float32(0.5)
+    elif combine == "window":
         # wgt column j weighs the dependency at window offset j - halo:
         # out row w combines src rows [row0 + w .. row0 + w + 2*halo], a
         # static unrolled slice-FMA chain (no gather, no index arithmetic).
@@ -170,6 +195,7 @@ def _blocked_step_kernel(
     payload: int,
     combine: str,
     steps_per_launch: int,
+    time_varying: bool = False,
 ):
     """S fused timesteps on one member's deep-halo-extended working buffer.
 
@@ -178,25 +204,42 @@ def _blocked_step_kernel(
     compute garbage from clamped windows / zero weights — harmless, because
     a row consumed at depth d+1 sits at least one halo inside the rows valid
     at depth d, and the caller only slices rows valid after all S depths.
+
+    ``time_varying`` (gather/onehot only): idx/wgt carry a leading (S,)
+    depth axis — one table per inner step — so patterns whose dependence
+    sets change with t (butterfly strides, spread's rotation) can run
+    blocked: depth d applies table d. The act-mask freezing is unchanged.
     """
     buf0 = src_ref[0]  # (Mp, Pp) working state, full size at every depth
-    wgt = wgt_ref[0]  # (Mp, D) per-row weights, fixed across depths (each
-    #                   row's global id never changes, so neither do its
-    #                   edge-clipped combine weights)
     act = act_ref[0]  # (S,) 1.0 = this inner step executes
     M = buf0.shape[0]
-    halo = (wgt.shape[1] - 1) // 2 if combine == "window" else 0
-    if combine == "onehot":
-        # idx/wgt are depth-invariant, so the (M, M) one-hot combine matrix
-        # is built ONCE per launch, not once per inner step
-        idx = idx_ref[0]
-        col = jax.lax.broadcasted_iota(jnp.int32, (1, 1, M), 2)
-        onehot_C = ((idx[..., None] == col).astype(jnp.float32)
-                    * wgt[..., None]).sum(axis=1)
+    if not time_varying:
+        wgt = wgt_ref[0]  # (Mp, D) per-row weights, fixed across depths
+        #                   (each row's global id never changes, so neither
+        #                   do its edge-clipped combine weights)
+        halo = (wgt.shape[1] - 1) // 2 if combine == "window" else 0
+        if combine == "onehot":
+            # idx/wgt are depth-invariant, so the (M, M) one-hot combine
+            # matrix is built ONCE per launch, not once per inner step
+            idx = idx_ref[0]
+            col = jax.lax.broadcasted_iota(jnp.int32, (1, 1, M), 2)
+            onehot_C = ((idx[..., None] == col).astype(jnp.float32)
+                        * wgt[..., None]).sum(axis=1)
 
     def depth_step(d, buf):
         srcf = buf.astype(jnp.float32)
-        if combine == "window":
+        if time_varying:
+            # (S, Mp, D) tables: depth d combines with table d
+            ti = jax.lax.dynamic_index_in_dim(idx_ref[0], d, 0, keepdims=False)
+            tw = jax.lax.dynamic_index_in_dim(wgt_ref[0], d, 0, keepdims=False)
+            if combine == "gather":
+                x = (srcf[ti] * tw[..., None]).sum(axis=1)
+            else:  # onehot, built per depth (the matrix changes with d)
+                col = jax.lax.broadcasted_iota(jnp.int32, (1, 1, M), 2)
+                C = ((ti[..., None] == col).astype(jnp.float32)
+                     * tw[..., None]).sum(axis=1)
+                x = jnp.dot(C, srcf, preferred_element_type=jnp.float32)
+        elif combine == "window":
             # out row i combines work rows [i .. i + 2*halo] of the +-halo
             # zero-padded buffer: same static slice-FMA chain as the
             # single-step kernel, full-buffer width
@@ -232,19 +275,39 @@ def _blocked_step_kernel(
 def _blocked_call(src, idx, wgt, act, *, kind, iterations, scratch,
                   combine, interpret):
     """pallas_call for the temporal-blocked path: square (K, M, *) operands,
-    one program per member (inner steps couple all rows, so no row grid)."""
+    one program per member (inner steps couple all rows, so no row grid).
+    ``wgt.ndim == 4`` selects the time-varying contract: (K, S, M, D)
+    idx/wgt tables, one per inner depth (gather/onehot only)."""
     K, M, payload = src.shape
-    _, _, D = wgt.shape
     S = act.shape[1]
-    if wgt.shape[:2] != (K, M):
+    if combine == "pair":
         raise ValueError(
-            f"blocked path needs square operands: src {src.shape} vs "
-            f"wgt {wgt.shape} (every working row carries its own weights)"
-        )
-    if combine == "window":
-        idx = jnp.zeros((K, 1, 1), jnp.int32)  # semantically unused
-    elif idx.shape != wgt.shape:
-        raise ValueError(f"operand shape mismatch: {idx.shape}/{wgt.shape}")
+            "pair combine is per-step only (blocked butterfly launches "
+            "use gather/onehot with time-varying tables)")
+    time_varying = wgt.ndim == 4
+    if time_varying:
+        if combine == "window":
+            raise ValueError(
+                "window combine has no time-varying form (halo patterns "
+                "have period 1); use gather or onehot")
+        if wgt.shape[:3] != (K, S, M):
+            raise ValueError(
+                f"time-varying tables must be (K, S, M, D) = ({K}, {S}, "
+                f"{M}, ...), got {wgt.shape}")
+        if idx.shape != wgt.shape:
+            raise ValueError(
+                f"operand shape mismatch: {idx.shape}/{wgt.shape}")
+    else:
+        if wgt.shape[:2] != (K, M):
+            raise ValueError(
+                f"blocked path needs square operands: src {src.shape} vs "
+                f"wgt {wgt.shape} (every working row carries its own weights)"
+            )
+        if combine == "window":
+            idx = jnp.zeros((K, 1, 1), jnp.int32)  # semantically unused
+        elif idx.shape != wgt.shape:
+            raise ValueError(f"operand shape mismatch: {idx.shape}/{wgt.shape}")
+    D = wgt.shape[-1]
     if act.shape[0] != K:
         raise ValueError(f"act must be (K, S), got {act.shape} for K={K}")
 
@@ -252,13 +315,21 @@ def _blocked_call(src, idx, wgt, act, *, kind, iterations, scratch,
     pad_p = (-payload) % lane
     pad_m = (-M) % sublane
     srcp = jnp.pad(src, ((0, 0), (0, pad_m), (0, pad_p)))
-    idxp = idx if combine == "window" else jnp.pad(
-        idx, ((0, 0), (0, pad_m), (0, 0)))
-    wgtp = jnp.pad(wgt, ((0, 0), (0, pad_m), (0, 0)))
+    row_axis = 2 if time_varying else 1
+    tab_pad = [(0, 0)] * wgt.ndim
+    tab_pad[row_axis] = (0, pad_m)
+    idxp = idx if combine == "window" else jnp.pad(idx, tab_pad)
+    wgtp = jnp.pad(wgt, tab_pad)
     Mp, Pp = srcp.shape[1], srcp.shape[2]
-    idx_block = (
-        pl.BlockSpec((1, 1, 1), lambda k: (k, 0, 0))
-        if combine == "window"
+    if combine == "window":
+        idx_block = pl.BlockSpec((1, 1, 1), lambda k: (k, 0, 0))
+    elif time_varying:
+        idx_block = pl.BlockSpec((1, S, Mp, D), lambda k: (k, 0, 0, 0))
+    else:
+        idx_block = pl.BlockSpec((1, Mp, D), lambda k: (k, 0, 0))
+    wgt_block = (
+        pl.BlockSpec((1, S, Mp, D), lambda k: (k, 0, 0, 0))
+        if time_varying
         else pl.BlockSpec((1, Mp, D), lambda k: (k, 0, 0))
     )
 
@@ -271,12 +342,13 @@ def _blocked_call(src, idx, wgt, act, *, kind, iterations, scratch,
             payload=payload,
             combine=combine,
             steps_per_launch=S,
+            time_varying=time_varying,
         ),
         grid=(K,),
         in_specs=[
             pl.BlockSpec((1, Mp, Pp), lambda k: (k, 0, 0)),
             idx_block,
-            pl.BlockSpec((1, Mp, D), lambda k: (k, 0, 0)),
+            wgt_block,
             pl.BlockSpec((1, S), lambda k: (k, 0)),
         ],
         out_specs=pl.BlockSpec((1, Mp, Pp), lambda k: (k, 0, 0)),
@@ -322,11 +394,14 @@ def taskbench_step_pallas(
     """
     if combine not in COMBINE_MODES:
         raise ValueError(f"unknown combine mode {combine!r}; known {COMBINE_MODES}")
-    if src.ndim != 3 or wgt.ndim != 3:
+    if src.ndim != 3 or wgt.ndim not in (3, 4):
         raise ValueError(
             f"expected (K, S, payload)/(K, W, D) operands, got "
             f"{src.shape}/{wgt.shape}"
         )
+    if wgt.ndim == 4 and steps_per_launch <= 1:
+        raise ValueError(
+            "time-varying (K, S, M, D) tables require steps_per_launch > 1")
     if steps_per_launch < 1:
         raise ValueError(f"steps_per_launch must be >= 1, got {steps_per_launch}")
     if steps_per_launch > 1:
@@ -344,9 +419,14 @@ def taskbench_step_pallas(
     _, W, D = wgt.shape
     if wgt.shape[0] != K:
         raise ValueError(f"operand K mismatch: {src.shape}/{wgt.shape}")
-    if combine == "window":
-        # idx is semantically unused (src row = own row + slot offset); feed
-        # a 1-element dummy so no dead (K, W, D) block is DMA'd per program
+    if combine == "pair" and S != 2 * W:
+        raise ValueError(
+            f"pair combine needs src rows == 2 * W (the [x | partner] "
+            f"halves), got {S} vs W = {W}")
+    if combine in ("window", "pair"):
+        # idx is semantically unused (window: src row = own row + slot
+        # offset; pair: src row = own row and own row + W); feed a
+        # 1-element dummy so no dead (K, W, D) block is DMA'd per program
         idx = jnp.zeros((K, 1, 1), jnp.int32)
     elif idx.shape != wgt.shape:
         raise ValueError(f"operand shape mismatch: {idx.shape}/{wgt.shape}")
@@ -372,16 +452,20 @@ def taskbench_step_pallas(
                 f"got {S} (window D = {D} includes the halo)"
             )
         pad_s = max(pad_w, (-S) % sublane)
+    elif combine == "pair":
+        # padded out rows slice src rows up to W + Wp: keep pad_s >= pad_w
+        pad_s = max(pad_w, (-S) % sublane)
     else:
         pad_s = (-S) % sublane
     srcp = jnp.pad(src, ((0, 0), (0, pad_s), (0, pad_p)))
-    idxp = idx if combine == "window" else jnp.pad(idx, ((0, 0), (0, pad_w), (0, 0)))
+    idxp = (idx if combine in ("window", "pair")
+            else jnp.pad(idx, ((0, 0), (0, pad_w), (0, 0))))
     wgtp = jnp.pad(wgt, ((0, 0), (0, pad_w), (0, 0)))
     Sp, Pp = srcp.shape[1], srcp.shape[2]
     Wp = W + pad_w
     idx_block = (
         pl.BlockSpec((1, 1, 1), lambda k, i: (k, 0, 0))
-        if combine == "window"
+        if combine in ("window", "pair")
         else pl.BlockSpec((1, block_rows, D), lambda k, i: (k, i, 0))
     )
 
@@ -394,6 +478,7 @@ def taskbench_step_pallas(
             payload=payload,
             combine=combine,
             block_rows=block_rows,
+            pair_rows=W,
         ),
         grid=(K, Wp // block_rows),
         in_specs=[

@@ -131,6 +131,162 @@ def test_halo_async_exchange_parity_multi_device():
     """, devices=4)
 
 
+def test_stride_exchange_oracle_multi_device():
+    """exchange_stride_start/join == the sync spelling == a numpy oracle
+    (partner block of stride bs on device d = global rows of block d XOR
+    bs), for single strides, the far-side stride D-1, and a multi-stride
+    start served by ONE fused collective; both transports must move the
+    same bits. gather_global likewise against a roll-free global oracle."""
+    run_sub("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.core.runtimes import _halo
+
+        D, B, Pay = 4, 5, 3
+        W = D * B
+        mesh = Mesh(np.array(jax.devices()), ("shard",))
+        x = np.arange(W * Pay, dtype=np.float32).reshape(W, Pay)
+
+        def run(fn, n_out):
+            f = jax.jit(shard_map(fn, mesh=mesh, check_vma=False,
+                                  in_specs=P("shard"),
+                                  out_specs=(P("shard"),) * n_out))
+            outs = f(jax.device_put(x, NamedSharding(mesh, P("shard"))))
+            return [np.asarray(o) for o in outs]
+
+        def oracle(bs):  # stacked partner blocks in device order
+            return np.concatenate([x[(d ^ bs) * B:(d ^ bs) * B + B]
+                                   for d in range(D)])
+
+        for strides in [(1,), (2,), (3,), (1, 2, 3)]:
+            def sync(local, ss=strides, impl="xla"):
+                return _halo.exchange_stride(local, ss, D, "shard",
+                                             impl=impl)
+
+            def started(local, ss=strides):
+                return _halo.exchange_stride_join(
+                    _halo.exchange_stride_start(local, ss, D, "shard"))
+
+            got = run(lambda l, ss=strides: sync(l, ss), len(strides))
+            asy = run(lambda l, ss=strides: started(l, ss), len(strides))
+            ppm = run(lambda l, ss=strides: sync(l, ss, "ppermute"),
+                      len(strides))
+            for j, bs in enumerate(strides):
+                want = oracle(bs)
+                assert np.array_equal(got[j], want), (strides, bs, "xla")
+                assert np.array_equal(asy[j], want), (strides, bs, "async")
+                assert np.array_equal(ppm[j], want), (strides, bs, "ppermute")
+
+        # out-of-range strides fail loudly (0 = self, D = off the mesh)
+        for bad in (0, D):
+            try:
+                _halo.exchange_stride_start(jnp.ones((B, Pay)), (bad,), D,
+                                            "shard")
+                raise AssertionError(f"stride {bad} accepted")
+            except ValueError:
+                pass
+
+        # gather_global: the full global-order state on EVERY device;
+        # out_specs P("shard") stacks each device's (W, Pay) result, so
+        # the oracle is the global state tiled D times. Both transports
+        # must match it bit-for-bit.
+        for impl in ("xla", "ppermute"):
+            f = jax.jit(shard_map(
+                lambda l, impl=impl: (_halo.gather_global(
+                    l, D, "shard", impl=impl),),
+                mesh=mesh, check_vma=False, in_specs=P("shard"),
+                out_specs=(P("shard"),)))
+            out = np.asarray(f(jax.device_put(
+                x, NamedSharding(mesh, P("shard"))))[0])
+            assert np.array_equal(out, np.concatenate([x] * D)), impl
+        print("ALL OK")
+    """, devices=4)
+
+
+def test_stride_exchange_single_device():
+    """One device: every butterfly stride is in-block (no exchange), the
+    primitive rejects any requested stride (there is no valid bs in
+    [1, 1)), and gather_global is the identity — the degenerate cases the
+    stride plan relies on."""
+    run_sub("""
+        import numpy as np, jax.numpy as jnp
+        from repro.core.runtimes import _halo
+        x = jnp.arange(12.0).reshape(6, 2)
+        assert np.array_equal(np.asarray(_halo.gather_global(x, 1)), x)
+        try:
+            _halo.exchange_stride_start(x, (1,), 1, "shard")
+            raise AssertionError("stride 1 accepted on 1 device")
+        except ValueError:
+            pass
+        # non-power-of-two device counts are rejected loudly (d XOR bs
+        # would leave the mesh; the transports would otherwise diverge)
+        try:
+            _halo.exchange_stride_start(x, (4,), 6, "shard")
+            raise AssertionError("non-pow2 device count accepted")
+        except ValueError as e:
+            assert "power-of-two" in str(e)
+        from repro.core import TaskGraph, KernelSpec, get_runtime
+        g = TaskGraph(steps=6, width=16, payload=8, pattern="fft",
+                      kernel=KernelSpec("compute_bound", 8))
+        ref = get_runtime("fused").execute(g)
+        out = get_runtime("pallas_step").execute(g)
+        assert np.array_equal(np.asarray(out), np.asarray(ref))
+        print("ALL OK")
+    """, devices=1)
+
+
+def test_pallas_step_butterfly_global_multi_device():
+    """Acceptance on 4 devices: fft/tree BIT-identical to fused at S in
+    {1, 8} (stride plan per-step, all-gather plan blocked with per-depth
+    tables); spread/all_to_all allclose at S in {1, 4}; launch accounting
+    matches the executed plan; both transports bit-identical."""
+    run_sub("""
+        import numpy as np
+        from repro.core import TaskGraph, KernelSpec, get_runtime
+        for pattern in ("fft", "tree"):
+            g = TaskGraph(steps=10, width=16, payload=8, pattern=pattern,
+                          kernel=KernelSpec("compute_bound", 8), seed=7)
+            ref = get_runtime("fused").execute(g)
+            for S in (1, 8):
+                rt = get_runtime("pallas_step", steps_per_launch=S)
+                out = rt.execute(g)
+                assert np.array_equal(out, ref), (pattern, S, "bits differ")
+                want = 10 if S == 1 else 1 + -(-9 // 8)
+                assert rt.dispatches_per_run(g) == want, (pattern, S)
+        for pattern, kw in (("spread", dict(fanout=3)), ("all_to_all", {})):
+            g = TaskGraph(steps=10, width=16, payload=8, pattern=pattern,
+                          kernel=KernelSpec("compute_bound", 8), seed=7,
+                          **kw)
+            ref = get_runtime("fused").execute(g)
+            for S in (1, 4):
+                out = get_runtime("pallas_step",
+                                  steps_per_launch=S).execute(g)
+                err = float(np.abs(out - ref).max())
+                assert err < 1e-5, (pattern, S, err)
+        g = TaskGraph(steps=10, width=16, payload=8, pattern="fft",
+                      kernel=KernelSpec("compute_bound", 8), seed=7)
+        a = get_runtime("pallas_step").execute(g)
+        b = get_runtime("pallas_step", halo_impl="ppermute").execute(g)
+        assert np.array_equal(a, b)
+        # mixed-plan tuple ensemble across devices
+        from repro.core import GraphEnsemble
+        members = [
+            TaskGraph(steps=t, width=16, payload=8, pattern=p, fanout=3,
+                      kernel=KernelSpec("compute_bound", 8), seed=k)
+            for k, (p, t) in enumerate(
+                (("stencil_1d", 6), ("fft", 4), ("spread", 10)))
+        ]
+        ens = GraphEnsemble(members)
+        outs = get_runtime("pallas_step").execute_ensemble(ens)
+        for k, (g, out) in enumerate(zip(members, outs)):
+            ref = get_runtime("fused").execute(g)
+            err = float(np.abs(out - ref).max())
+            assert err < 1e-5, (k, err)
+        print("ALL OK")
+    """, devices=4)
+
+
 def test_pallas_step_pipelined_multi_device():
     """The software-pipelined schedule on 4 devices: W=128 keeps a real
     interior (B=32 > 2*S*r for S=3 r=1/2 and S=8 r=1), so the pipelined

@@ -268,6 +268,117 @@ def test_taskbench_step_blocked_requires_act_and_square_operands():
                               steps_per_launch=3, interpret=True)
 
 
+def test_taskbench_step_pair_combine_matches_gather():
+    """pair mode ([x | partner] halves, elementwise (a+b)*0.5) must be
+    bit-identical to gathering {i, W+i} at weight 0.5 from the same
+    stacked buffer — the stride plan's gather-free butterfly lowering."""
+    K, W, P = 2, 8, 6
+    x = jax.random.uniform(jax.random.PRNGKey(40), (K, W, P),
+                           jnp.float32, 0.1, 1.0)
+    partner = x[:, ::-1]  # any permutation works; the kernel just pairs
+    src = jnp.concatenate([x, partner], axis=1)  # (K, 2W, P)
+    dummy_i = jnp.zeros((K, 1, 1), jnp.int32)
+    dummy_w = jnp.zeros((K, W, 1), jnp.float32)
+    got = taskbench_step_pallas(src, dummy_i, dummy_w, kind="compute_bound",
+                                iterations=3, combine="pair", interpret=True)
+    rows = jnp.arange(W)
+    idx = jnp.broadcast_to(jnp.stack([rows, W + rows], 1), (K, W, 2))
+    wgt = jnp.full((K, W, 2), 0.5, jnp.float32)
+    want = taskbench_step_pallas(src, idx.astype(jnp.int32), wgt,
+                                 kind="compute_bound", iterations=3,
+                                 combine="gather", interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # contract violations fail loudly
+    with pytest.raises(ValueError, match="pair"):
+        taskbench_step_pallas(x, dummy_i, dummy_w, combine="pair",
+                              interpret=True)  # src not [x | partner]
+    act = jnp.ones((K, 2), jnp.float32)
+    with pytest.raises(ValueError, match="per-step"):
+        taskbench_step_pallas(src, dummy_i, dummy_w, act, combine="pair",
+                              steps_per_launch=2, interpret=True)
+
+
+# -------------------------------------- time-varying per-depth tables
+
+
+@pytest.mark.parametrize("combine", ["gather", "onehot"])
+def test_taskbench_step_blocked_time_varying_tables(combine):
+    """(K, S, M, D) tables — one per inner depth — must equal iterating
+    the single-step kernel with each depth's own table (the butterfly /
+    rotation contract: XOR stride 2^d at depth d here). The working
+    buffer is exactly closed under every table (global rows), so there is
+    no valid-span shrink and the whole buffer is exact; weights of 0.5
+    keep the check bitwise."""
+    K, W, P, S = 2, 8, 6, 3
+    state = jax.random.uniform(jax.random.PRNGKey(32), (K, W, P),
+                               jnp.float32, 0.1, 1.0)
+    rows = np.arange(W, dtype=np.int32)
+    tabs = np.stack([np.stack([rows, rows ^ (1 << d)], 1)
+                     for d in range(S)])  # (S, W, 2)
+    idx = np.broadcast_to(tabs, (K, S, W, 2)).copy()
+    wgt = np.full((K, S, W, 2), 0.5, np.float32)
+    act = jnp.ones((K, S), jnp.float32)
+    out = taskbench_step_pallas(
+        state, jnp.asarray(idx), jnp.asarray(wgt), act,
+        kind="compute_bound", iterations=3, combine=combine,
+        steps_per_launch=S, interpret=True)
+    ref = state
+    for d in range(S):
+        ref = taskbench_step_pallas(
+            ref, jnp.asarray(idx[:, d]), jnp.asarray(wgt[:, d]),
+            kind="compute_bound", iterations=3, combine=combine,
+            interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_taskbench_step_time_varying_act_mask_freezes_depths():
+    """The act machinery is UNCHANGED under time-varying tables: member k
+    executing only m depths equals iterating the per-depth tables m
+    times."""
+    K, W, P, S = 3, 8, 4, 3
+    state = jax.random.uniform(jax.random.PRNGKey(33), (K, W, P),
+                               jnp.float32, 0.1, 1.0)
+    rows = np.arange(W, dtype=np.int32)
+    tabs = np.stack([np.stack([rows, rows ^ (1 << d)], 1)
+                     for d in range(S)])
+    idx = jnp.asarray(np.broadcast_to(tabs, (K, S, W, 2)).copy())
+    wgt = jnp.full((K, S, W, 2), 0.5, jnp.float32)
+    act = jnp.asarray((np.arange(S)[None, :]
+                       < np.arange(1, K + 1)[:, None]).astype(np.float32))
+    out = taskbench_step_pallas(
+        state, idx, wgt, act, kind="compute_bound", iterations=2,
+        combine="onehot", steps_per_launch=S, interpret=True)
+    for k in range(K):
+        ref = state[k:k + 1]
+        for d in range(k + 1):
+            ref = taskbench_step_pallas(
+                ref, idx[k:k + 1, d], wgt[k:k + 1, d],
+                kind="compute_bound", iterations=2, combine="onehot",
+                interpret=True)
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ref[0]),
+                                      err_msg=f"member {k}")
+
+
+def test_taskbench_step_time_varying_validation():
+    src = jnp.ones((1, 8, 4))
+    idx4 = jnp.zeros((1, 3, 8, 2), jnp.int32)
+    wgt4 = jnp.full((1, 3, 8, 2), 0.5)
+    act = jnp.ones((1, 3), jnp.float32)
+    # window mode has no time-varying form
+    with pytest.raises(ValueError, match="window"):
+        taskbench_step_pallas(src, idx4, wgt4, act, combine="window",
+                              steps_per_launch=3, interpret=True)
+    # depth axis must match steps_per_launch
+    with pytest.raises(ValueError, match="time-varying"):
+        taskbench_step_pallas(src, idx4, wgt4, jnp.ones((1, 2)),
+                              combine="onehot", steps_per_launch=2,
+                              interpret=True)
+    # 4-D tables make no sense on the single-step path
+    with pytest.raises(ValueError, match="steps_per_launch"):
+        taskbench_step_pallas(src, idx4, wgt4, combine="onehot",
+                              interpret=True)
+
+
 # ------------------------------------------ pipelined phase entry points
 
 
@@ -439,6 +550,74 @@ def test_schedule_auto_budgets_the_schedule_it_executes():
                         pipeline=cov)
                     assert ws <= schedule.DEFAULT_VMEM_BUDGET, \
                         (combine, radius, block, payload, s)
+
+
+def test_schedule_gathered_working_set_accounting():
+    """The all-gather plan's budget charges the full-width buffer AND the
+    time-varying per-depth tables (S stacked (W, D) idx+wgt pairs — the
+    operands the halo budget never carried)."""
+    base = schedule.gathered_working_set_bytes(256, 2, 4, 64)
+    deeper = schedule.gathered_working_set_bytes(256, 2, 8, 64)
+    # exactly 4 more (W, D) int32+f32 tables plus 4 act floats
+    assert deeper - base == 4 * 256 * 2 * 8 + 4 * 4
+    static = schedule.gathered_working_set_bytes(256, 2, 8, 64,
+                                                 time_varying=False)
+    assert static < deeper  # static tables: one depth's tables, any S
+    # combine intermediates: onehot holds the (W, W) matrix + its
+    # (W, D, W) expansion; gather the (W, D, Pp) gathered rows
+    one = schedule.gathered_working_set_bytes(256, 2, 4, 64)
+    gat = schedule.gathered_working_set_bytes(256, 2, 4, 64,
+                                              combine="gather")
+    assert one - gat == (256 * 256 * 4 + 256 * 2 * 256 * 4
+                         - 256 * 2 * 128 * 4)
+
+
+def test_schedule_gathered_pays_off_rule():
+    """Replication S*(W - B) must stay under the saved exchanges
+    (S-1)*X: one device (W == B) always pays, wide replication never."""
+    assert schedule.gathered_pays_off(512, 512, 16)  # 1 device: free
+    assert schedule.gathered_pays_off(512, 128, 8)   # 3072 <= 3584
+    assert not schedule.gathered_pays_off(1024, 256, 8)  # 6144 > 3584
+    assert not schedule.gathered_pays_off(512, 128, 1)  # S=1 saves nothing
+
+
+def test_schedule_gathered_choose_and_resolve():
+    kw = dict(width=64, block=16, max_deps=2, payload=8)
+    s = schedule.choose_steps_per_launch_gathered(total_steps=50, **kw)
+    assert s > 1
+    assert schedule.resolve_steps_per_launch_gathered(
+        "auto", total_steps=50, **kw) == s
+    assert schedule.resolve_steps_per_launch_gathered(None, **kw) == 1
+    assert schedule.resolve_steps_per_launch_gathered(1, **kw) == 1
+    # explicit depths clamp to the combine-step count
+    assert schedule.resolve_steps_per_launch_gathered(
+        8, total_steps=5, **kw) == 4
+    with pytest.raises(ValueError):
+        schedule.resolve_steps_per_launch_gathered(-1, **kw)
+    # a pattern that can never pay (replication too wide at every S)
+    assert schedule.choose_steps_per_launch_gathered(
+        width=4096, block=32, max_deps=2, payload=8, total_steps=50) == 1
+
+
+def test_schedule_exchange_row_steps_env_override(monkeypatch):
+    """ROADMAP's per-platform re-calibration knob: the exchange-cost
+    constant is env-overridable and consulted LIVE by every covering /
+    pays-off rule — no reimport, invalid values fail loudly."""
+    monkeypatch.delenv("REPRO_PIPELINE_EXCHANGE_ROW_STEPS", raising=False)
+    assert schedule.exchange_row_steps() == \
+        schedule.PIPELINE_EXCHANGE_ROW_STEPS
+    assert schedule.gathered_pays_off(512, 128, 8)
+    assert schedule.pipeline_interior_covers_exchange(256, 1, 8)
+    monkeypatch.setenv("REPRO_PIPELINE_EXCHANGE_ROW_STEPS", "64")
+    assert schedule.exchange_row_steps() == 64
+    assert not schedule.gathered_pays_off(512, 128, 8)  # 3072 > 7*64
+    assert not schedule.pipeline_interior_covers_exchange(256, 1, 8)
+    monkeypatch.setenv("REPRO_PIPELINE_EXCHANGE_ROW_STEPS", "100000")
+    assert schedule.gathered_pays_off(1024, 256, 8)
+    for bad in ("0", "-5", "many"):
+        monkeypatch.setenv("REPRO_PIPELINE_EXCHANGE_ROW_STEPS", bad)
+        with pytest.raises(ValueError):
+            schedule.exchange_row_steps()
 
 
 def test_finalize_weights_single_rounding():

@@ -360,11 +360,145 @@ def test_pallas_step_pipeline_auto_respects_profitability():
     assert explicit.dispatches_per_run(g) == 1 + 2 * (L - 1)  # pipelines anyway
 
 
-def test_pallas_step_rejects_non_halo_patterns():
+# ------------------------- pallas_step beyond halos: pattern -> plan
+
+
+def test_pallas_step_plan_dispatch_and_rejection_message():
+    """supports() is a pattern->plan dispatch: every paper pattern gets a
+    plan at moderate widths, and the rejection (global pattern past the
+    gather cap) names the plan kinds and the fused fallback."""
     rt = get_runtime("pallas_step")
-    for pattern in ("fft", "tree", "all_to_all", "spread"):
-        ok, why = rt.supports(graph(pattern))
-        assert not ok and "halo" in why
+    assert rt.plan_for(graph("stencil_1d"))[0] == "halo"
+    assert rt.plan_for(graph("random_nearest"))[0] == "halo"
+    assert rt.plan_for(graph("fft"))[0] == "stride"
+    assert rt.plan_for(graph("tree"))[0] == "stride"
+    assert rt.plan_for(graph("spread"))[0] == "allgather"
+    assert rt.plan_for(graph("all_to_all"))[0] == "allgather"
+    capped = get_runtime("pallas_step", gather_width_cap=64)
+    ok, why = capped.supports(graph("spread", width=128))
+    assert not ok
+    for needle in ("halo", "stride", "allgather", "fused",
+                   "gather_width_cap=64"):
+        assert needle in why, why
+    # butterfly keeps the (per-step) stride plan at ANY width
+    ok, _ = capped.supports(graph("fft", width=128))
+    assert ok
+    # width-1 butterfly degenerates to a self-dependency: no stride plan
+    # (its two-dep tables would be wrong) — the all-gather plan runs it
+    g1 = graph("fft", width=1)
+    assert rt.plan_for(g1)[0] == "allgather"
+    out = rt.execute(g1)
+    np.testing.assert_array_equal(out, get_runtime("fused").execute(g1))
+    # "pair" is the stride plan's INTERNAL lowering, not a runtime option
+    # — rejected up front (it would crash the halo operand layout deep in
+    # the kernel otherwise), like any unknown mode
+    for bad in ("pair", "smoke_signals"):
+        with pytest.raises(ValueError, match="combine option"):
+            get_runtime("pallas_step", combine=bad).execute(
+                graph("stencil_1d"))
+
+
+BUTTERFLY = list(_patterns.BUTTERFLY_PATTERNS)
+
+
+@pytest.mark.parametrize("pattern", BUTTERFLY)
+@pytest.mark.parametrize("S", [1, 3, 8])
+def test_pallas_step_butterfly_bit_identical_to_fused(pattern, S):
+    """Acceptance: fft/tree run BIT-identical to the fused oracle at every
+    S (stride plan per-step; blocked requests route through the gathered
+    plan's time-varying per-depth tables). Power-of-two widths make every
+    butterfly combine weight exactly 0.5, so 0.5*a + 0.5*b must equal the
+    oracle's (a + b) / 2 to the last bit. T=7 with S=3 exercises the
+    masked tail; S=8 clamps to one fully-masked-tail launch."""
+    g = graph(pattern, steps=7)
+    ref = get_runtime("fused").execute(g)
+    out = get_runtime("pallas_step", steps_per_launch=S).execute(g)
+    assert np.array_equal(out, ref), f"{pattern} S={S}: bits differ"
+
+
+@pytest.mark.parametrize("pattern", ["spread", "all_to_all"])
+@pytest.mark.parametrize("S", [1, 4])
+def test_pallas_step_global_patterns_match_fused(pattern, S):
+    """The all-gather plan (spread's in-scan rotation, all_to_all's static
+    global tables) matches fused at S in {1, 4}."""
+    g = graph(pattern, steps=7)
+    ref = get_runtime("fused").execute(g)
+    out = get_runtime("pallas_step", steps_per_launch=S).execute(g)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6,
+                               err_msg=f"{pattern} S={S}")
+
+
+@pytest.mark.parametrize("combine", ["window", "gather", "onehot"])
+@pytest.mark.parametrize("pattern", ["fft", "spread"])
+def test_pallas_step_nonhalo_combine_modes(pattern, combine):
+    """Non-halo plans accept every combine option ("window" maps to the
+    onehot lowering) in both the per-step and blocked schedules."""
+    g = graph(pattern, steps=6)
+    ref = get_runtime("fused").execute(g)
+    for S in (1, 3):
+        out = get_runtime("pallas_step", combine=combine,
+                          steps_per_launch=S).execute(g)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"{pattern} {combine} S={S}")
+
+
+def test_pallas_step_butterfly_dispatch_accounting():
+    """Launch accounting mirrors the executed plan exactly: the stride
+    plan is per-step BY CONSTRUCTION, so a butterfly run only drops below
+    T launches when the blocked request actually re-routes through the
+    all-gather plan (width under the cap)."""
+    g = graph("fft", steps=7)  # W=16
+    assert get_runtime("pallas_step").dispatches_per_run(g) == 7
+    # blocked request -> gathered plan: 1 + ceil(6/3) launches
+    assert get_runtime(
+        "pallas_step", steps_per_launch=3).dispatches_per_run(g) == 3
+    # width over the cap: per-step stride plan regardless of the request
+    assert get_runtime("pallas_step", steps_per_launch=3,
+                       gather_width_cap=8).dispatches_per_run(g) == 7
+    # "auto" KEEPS the stride plan (the gathered pays-off model ranks
+    # blocked gathers against per-step gathers, not against the cheaper
+    # stride plan it would displace) — only an explicit depth re-routes
+    auto = get_runtime("pallas_step", steps_per_launch="auto")
+    assert auto.dispatches_per_run(g) == g.steps
+    ref = get_runtime("fused").execute(g)
+    assert np.array_equal(auto.execute(g), ref)
+
+
+def test_pallas_step_gather_transports_bit_identical():
+    """Both stride/gather transports (fused all-gather vs per-collective
+    ppermute) move exact row copies; outputs must not differ by a bit."""
+    for pattern in ("fft", "spread"):
+        g = graph(pattern, steps=6)
+        a = get_runtime("pallas_step").execute(g)
+        b = get_runtime("pallas_step", halo_impl="ppermute").execute(g)
+        assert np.array_equal(a, b), pattern
+
+
+def test_pallas_step_mixed_plan_ensemble():
+    """A tuple ensemble mixing all three plans (halo stencil, stride fft,
+    allgather spread) with heterogeneous steps: one jitted scan, shared
+    per-step cadence, every member matches running alone under fused."""
+    base = dict(width=16, payload=8)
+    members = [
+        TaskGraph(steps=6, pattern="stencil_1d",
+                  kernel=KernelSpec("compute_bound", 8), seed=0, **base),
+        TaskGraph(steps=4, pattern="fft",
+                  kernel=KernelSpec("compute_bound", 4), seed=1, **base),
+        TaskGraph(steps=7, pattern="spread", fanout=3,
+                  kernel=KernelSpec("compute_bound", 16), seed=2, **base),
+        TaskGraph(steps=2, pattern="all_to_all",
+                  kernel=KernelSpec("compute_bound", 8), seed=3, **base),
+    ]
+    ens = GraphEnsemble(members)
+    for S in (1, 4):  # non-halo members pin the shared cadence to per-step
+        rt = get_runtime("pallas_step", steps_per_launch=S)
+        outs = rt.execute_ensemble(ens)
+        for k, (g, out) in enumerate(zip(members, outs)):
+            ref = get_runtime("fused").execute(g)
+            np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6,
+                                       err_msg=f"S={S} member {k}")
+        # per-step cadence -> every member launches every lockstep step
+        assert rt.ensemble_dispatches_per_run(ens) == len(members) * ens.steps
 
 
 def test_measure_returns_sane_sample():
