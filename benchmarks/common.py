@@ -154,6 +154,37 @@ def run_worker(spec: SweepSpec, timeout: int = 3000) -> List[Dict]:
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
+def calibrate_worker(devices: int, payload: int = 64, *, smoke: bool = False,
+                     out: Optional[str] = None,
+                     timeout: int = 600) -> Dict:
+    """Run the cost-model probes in a subprocess and return the model dict.
+
+    A subprocess for the same reason as ``run_worker``: the probes need
+    their own forced host-device count, and the main process never touches
+    XLA_FLAGS. The calibration is merged into ``out`` (default: the cache
+    file every later "auto" resolution reads), and the returned snapshot
+    is what the benchmarks embed in their artifact JSON — every saved
+    verdict names the constants it was judged under."""
+    out = out or bench_path("cost_model.json")
+    cmd = [sys.executable, "-m", "repro.kernels.probes",
+           "--devices", str(devices), "--payload", str(payload),
+           "--out", out, "--json"]
+    if smoke:
+        cmd.append("--smoke")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + ROOT
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("XLA_FLAGS", None)  # the probes CLI sets its own forcing flag
+    res = subprocess.run(cmd, capture_output=True, text=True,
+                         timeout=timeout, env=env, cwd=ROOT)
+    if res.returncode != 0:
+        raise RuntimeError(f"calibration failed:\n{res.stderr[-4000:]}")
+    lines = res.stdout.strip().splitlines()
+    # stdout: "cost model [...] -> path", describe() line, then the JSON
+    start = next(i for i, ln in enumerate(lines) if ln.startswith("{"))
+    return json.loads("\n".join(lines[start:]))
+
+
 def metg_from_rows(rows: Sequence[Dict], threshold: float = 0.5,
                    peak: Optional[float] = None):
     from repro.core import GrainSample, compute_metg

@@ -47,6 +47,7 @@ from benchmarks.common import (
     SweepSpec,
     backend_options_args,
     bench_path,
+    calibrate_worker,
     parse_backend_options,
     run_worker,
     write_csv,
@@ -90,7 +91,23 @@ def run(devices: int = 4, steps: int = 100, reps: int = 5,
         backends=("overlap", "bsp", "bsp_scan", "pallas_step"),
         pallas_overdecomposition: int = PALLAS_OVERDECOMPOSITION,
         butterfly: bool = True,
-        options=None, verbose: bool = True, smoke: bool = False):
+        options=None, verbose: bool = True, smoke: bool = False,
+        calibrate: bool = False):
+    # cost-model snapshot recorded in the artifact: every saved verdict
+    # names the constants it was judged under. --calibrate probes fresh
+    # (merged into the cache read by the workers' "auto" resolutions);
+    # otherwise snapshot the current default (env / cached / analytic).
+    if calibrate:
+        cost_model = calibrate_worker(devices, payload, smoke=smoke)
+        if verbose:
+            print(f"calibrated cost model: exchange="
+                  f"{cost_model['exchange_row_steps']:.0f} row-steps, "
+                  f"launch={cost_model['launch_us']:.1f}us", flush=True)
+    else:
+        from repro.kernels import probes as _probes
+
+        cost_model = _probes.default_cost_model(
+            devices=devices, payload=payload).to_dict()
     classic = tuple(b for b in backends if b != "pallas_step")
     with_pallas = "pallas_step" in backends
     # butterfly rows: overlap models halo patterns only, so it sits out
@@ -238,6 +255,8 @@ def run(devices: int = 4, steps: int = 100, reps: int = 5,
             "concurrent_over_serial": summary,
             "overlap_over_bsp": overlap_over_bsp,
             "pallas_pipe_over_nopipe": pipe_over_nopipe,
+            "calibrated": calibrate,
+            "cost_model": cost_model,
         }, f, indent=2)
     if verbose:
         for backend, by_grain in summary.items():
@@ -267,6 +286,10 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-long CI guard: 2 devices, tiny steps/K, "
                          "every backend row incl. pipelined pallas_step")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="run the cost-model probes first (merged into "
+                         "artifacts/bench/cost_model.json); the snapshot "
+                         "is recorded in the artifact JSON")
     backend_options_args(ap)
     a = ap.parse_args(argv)
     cfg = PRESETS[a.preset]
@@ -275,7 +298,7 @@ def main(argv=None):
         res = run(devices=2, steps=12, reps=1, grains=(1,),
                   ensemble_sizes=(1, 2), overdecomposition=8,
                   payload=cfg.payload, backends=cfg.runtimes, options=opts,
-                  smoke=True)
+                  smoke=True, calibrate=a.calibrate)
         # schema guard: every backend (incl. both pallas_step schedules
         # and the butterfly rows' stride/all-gather plans) must have
         # produced concurrency ratios at K=2
@@ -295,7 +318,7 @@ def main(argv=None):
         reps=a.reps or cfg.reps, grains=cfg.grains,
         ensemble_sizes=cfg.ensemble_sizes,
         overdecomposition=cfg.overdecomposition[0], payload=cfg.payload,
-        backends=cfg.runtimes, options=opts)
+        backends=cfg.runtimes, options=opts, calibrate=a.calibrate)
     return 0
 
 

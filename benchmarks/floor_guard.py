@@ -1,123 +1,281 @@
-"""CI floor-regression guard for the pallas_step smoke benchmark.
+"""CI regression suite for the pallas_step smoke benchmark (reframe-style).
 
-Compares a freshly produced ``pallas_floor_smoke.json`` (written by
-``python -m benchmarks.pallas_floor --smoke``) against the committed
-baseline ``pallas_floor_smoke_baseline.json`` and fails when the smoke
-run's headline floor — best pallas_step wall/step per width, the
-``floor_wall_per_step`` field — regresses by more than ``--factor``
-(default 2x).
+Earlier revisions hard-coded ONE rule (wall-per-step ratio vs a committed
+baseline). This is now a parameterized suite in the style of a ReFrame
+test battery: every check is a :class:`PerfCheck` with
 
-Cross-machine wall-clock comparisons are inherently shaky (the baseline
-was produced on the dev container; shared CI runners drift), so an
-absolute regression alone does not fail the guard: it must coincide with
-the smoke run's own IN-RUN amortization signal collapsing —
-``s1_over_s8_speedup`` dropping below ``--min-amortization`` (default
-1.05x — a degraded fast path measures ~1.0x, a healthy noisy run 1.3-9x). The failure mode this guard exists for (the blocked/pipelined fast
-path silently degrading to per-step dispatch — the tuner collapsing to
-S=1, the pipeline gating itself off into a slow path, an accidental
-per-step dispatch) produces exactly that signature: wall/step jumps 5-30x
-AND deep launches stop beating S=1, both far outside runner variance. A
-uniformly slow runner keeps the in-run ratio healthy and only warns.
-Widths present in only one file are reported but not judged.
+  sanity    preconditions on the artifact (field present, value finite and
+            positive) — a malformed run FAILS rather than silently passing;
+  perf      the measured value judged against a per-system REFERENCE value
+            within an allowed factor;
+  health    an optional IN-RUN signal that distinguishes "the fast path
+            degraded" from "the runner is slow".
+
+Cross-machine wall-clock comparisons are inherently shaky (the committed
+baseline was produced on the dev container; shared CI runners drift), so
+an absolute regression alone never fails a check: it must coincide with
+the run's own health signal collapsing. The failure mode this guard
+exists for — the blocked/pipelined fast path silently degrading to
+per-step dispatch (tuner collapsing to S=1, pipeline gating itself off,
+an accidental per-step dispatch) — produces exactly that signature:
+wall/step jumps 5-30x AND deep launches stop beating S=1 (or, for the
+butterfly rows, pallas_step falls above fused in the same process), both
+far outside runner variance. A uniformly slow runner keeps the in-run
+signals healthy and only WARNs.
+
+Per-system reference values: by default each check's reference is the
+committed baseline's measured value, but the baseline JSON may carry a
+``"references"`` object overriding reference and/or factor per check
+name::
+
+    "references": {"floor@64": {"reference": 5.0e-05, "factor": 3.0}}
+
+so a platform with known-different floors tunes individual checks without
+touching the guard. The optional ``--cost-model`` file (written by the CI
+calibration step, ``python -m repro.kernels.probes --smoke``) adds sanity
+checks over the measured CostModel — schema loads, probed costs positive
+and finite — so a broken calibration fails CI before it silently steers
+every "auto" schedule; a missing file SKIPs (local runs stay green).
+
+Exit status: 1 iff any check FAILs. Checks found in only one artifact are
+reported and SKIPped, never judged.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
+import math
 import sys
+from typing import Callable, Dict, List, Optional
+
+OK, WARN, FAIL, SKIP = "OK", "WARN", "FAIL", "SKIP"
 
 
-def check_butterfly(current: dict, baseline: dict, factor: float) -> list:
-    """Butterfly-floor guard: same two-signal rule, with the in-run health
-    signal being the run's own pallas/fused ratio — the stride plan
-    degrading (e.g. falling back to per-op dispatch) pushes pallas_step
+def _us(v: float) -> str:
+    return f"{v * 1e6:.2f} us/step"
+
+
+@dataclasses.dataclass
+class PerfCheck:
+    """One parameterized check: sanity + perf-vs-reference + health.
+
+    ``health_bad`` returns True when the in-run signal says the fast path
+    itself degraded (not the runner); with no health signal available an
+    absolute regression stays a WARN — same conservatism as always.
+    """
+
+    name: str
+    value: Optional[float]
+    reference: Optional[float]
+    factor: float
+    fmt: Callable[[float], str] = _us
+    health_desc: str = ""
+    health_value: Optional[float] = None
+    health_bad: Optional[Callable[[float], bool]] = None
+    sanity_errors: List[str] = dataclasses.field(default_factory=list)
+
+    def evaluate(self) -> "CheckResult":
+        if self.sanity_errors:
+            return CheckResult(self.name, FAIL,
+                               "sanity: " + "; ".join(self.sanity_errors))
+        if self.value is None and self.reference is None:
+            return CheckResult(self.name, OK, "sanity checks passed")
+        if self.value is None:
+            return CheckResult(self.name, SKIP,
+                               "missing from current run (not judged)")
+        if self.reference is None:
+            return CheckResult(self.name, SKIP,
+                               "no reference value (not judged)")
+        ratio = self.value / self.reference
+        detail = (f"reference {self.fmt(self.reference)}, current "
+                  f"{self.fmt(self.value)} ({ratio:.2f}x, limit "
+                  f"{self.factor:g}x)")
+        if self.health_value is not None:
+            detail += f", {self.health_desc}={self.health_value:.2f}"
+        if ratio <= self.factor:
+            return CheckResult(self.name, OK, detail)
+        unhealthy = (self.health_bad is not None
+                     and self.health_value is not None
+                     and self.health_bad(self.health_value))
+        if unhealthy:
+            return CheckResult(
+                self.name, FAIL,
+                detail + " AND the in-run health signal collapsed — the "
+                "fast path degraded, not the runner")
+        return CheckResult(
+            self.name, WARN,
+            detail + " — SLOW-RUNNER? (absolute regression, in-run "
+            "signal healthy)")
+
+
+@dataclasses.dataclass
+class CheckResult:
+    name: str
+    status: str
+    message: str
+
+    def line(self) -> str:
+        return f"floor_guard: {self.name}: {self.message} [{self.status}]"
+
+
+def _reference_for(baseline: dict, name: str, measured: Optional[float],
+                   default_factor: float):
+    """(reference, factor) for one check: the committed baseline's measured
+    value unless its "references" object pins a per-system override."""
+    override = baseline.get("references", {}).get(name, {})
+    ref = override.get("reference", measured)
+    factor = float(override.get("factor", default_factor))
+    return ref, factor
+
+
+def _sane_positive(name: str, value) -> List[str]:
+    if value is None:
+        return []  # absence is SKIP territory, not a sanity failure
+    try:
+        v = float(value)
+    except (TypeError, ValueError):
+        return [f"{name} is not a number: {value!r}"]
+    if not math.isfinite(v) or v <= 0:
+        return [f"{name} must be finite and positive, got {v!r}"]
+    return []
+
+
+def floor_checks(current: dict, baseline: dict, factor: float,
+                 min_amortization: float) -> List[PerfCheck]:
+    """Per-width headline-floor checks; health = the run's own S1/S8
+    amortization (a degraded fast path measures ~1.0x, a healthy noisy
+    run 1.3-9x)."""
+    checks: List[PerfCheck] = []
+    cur = current.get("floor_wall_per_step", {})
+    base = baseline.get("floor_wall_per_step", {})
+    speedups = current.get("s1_over_s8_speedup", {})
+    for width, b in sorted(base.items(), key=lambda kv: int(kv[0])):
+        name = f"floor@{width}"
+        value = cur.get(width)
+        ref, fac = _reference_for(baseline, name, b, factor)
+        amort = speedups.get(width)
+        checks.append(PerfCheck(
+            name=name, value=value, reference=ref, factor=fac,
+            health_desc="S1/S8", health_value=amort,
+            health_bad=lambda a, lo=min_amortization: a < lo,
+            sanity_errors=_sane_positive(name, value),
+        ))
+    return checks
+
+
+def butterfly_checks(current: dict, baseline: dict,
+                     factor: float) -> List[PerfCheck]:
+    """Butterfly (stride-plan) floor checks; health = the run's own
+    pallas/fused ratio — the stride plan degrading pushes pallas_step
     ABOVE fused in the same process, which runner slowness cannot."""
-    failures = []
+    checks: List[PerfCheck] = []
     cur = current.get("butterfly_floor_wall_per_step", {})
     base = baseline.get("butterfly_floor_wall_per_step", {})
     ratios = current.get("butterfly_over_fused_per_step", {})
-    if not base:
-        # baselines that predate the butterfly rows carry no keys: nothing
-        # to guard (regenerating the baseline arms this check)
-        return failures
-    judged = 0
     for key, b in sorted(base.items()):
-        c = cur.get(key)
-        if c is None:
-            print(f"floor_guard: butterfly {key} missing from current run "
-                  f"(not judged)")
-            continue
-        judged += 1
+        name = f"butterfly@{key}"
         pattern, width = key.split("@")
+        value = cur.get(key)
+        ref, fac = _reference_for(baseline, name, b, factor)
         in_run = ratios.get(pattern, {}).get(width)
-        ratio = c / b
-        regressed = ratio > factor
-        unhealthy = in_run is not None and in_run > 1.0
-        if regressed and unhealthy:
-            verdict = "REGRESSED"
+        checks.append(PerfCheck(
+            name=name, value=value, reference=ref, factor=fac,
+            health_desc="pallas/fused", health_value=in_run,
+            health_bad=lambda r: r > 1.0,
+            sanity_errors=_sane_positive(name, value),
+        ))
+    return checks
+
+
+def cost_model_checks(model_file: dict) -> List[PerfCheck]:
+    """Sanity-only checks over the CI calibration artifact: every probed
+    cost must be finite and positive (perf bounds don't apply — the model
+    is measured fresh per runner; what must never happen is a garbage
+    calibration silently steering every "auto" schedule)."""
+    checks: List[PerfCheck] = []
+    entries = model_file.get("entries", {})
+    if not isinstance(entries, dict) or not entries:
+        return [PerfCheck(name="cost_model", value=None, reference=None,
+                          factor=1.0,
+                          sanity_errors=["calibration file has no entries"])]
+    for key, m in sorted(entries.items()):
+        errors: List[str] = []
+        for field in ("exchange_row_steps", "launch_us", "row_step_us"):
+            errors += _sane_positive(field, m.get(field, None))
+            if m.get(field) is None:
+                errors.append(f"{field} missing")
+        for group in ("halo_exchange_us", "stride_exchange_us", "gather_us"):
+            for k, v in (m.get(group) or {}).items():
+                errors += _sane_positive(f"{group}[{k}]", v)
+        if m.get("source") != "measured":
+            errors.append(f"source is {m.get('source')!r}, not 'measured'")
+        checks.append(PerfCheck(
+            name=f"cost_model[{key}]", value=None, reference=None,
+            factor=1.0, sanity_errors=errors))
+        if not errors:
+            # a sane model SKIPs the perf leg by construction (no
+            # reference); surface the calibration in the CI log instead
+            print(f"floor_guard: cost_model[{key}]: exchange="
+                  f"{float(m['exchange_row_steps']):.0f} row-steps, "
+                  f"launch={m['launch_us']:.1f}us, "
+                  f"row-step={m['row_step_us']:.4f}us")
+    return checks
+
+
+def build_suite(current: dict, baseline: dict, factor: float,
+                min_amortization: float,
+                cost_model: Optional[dict] = None) -> List[PerfCheck]:
+    checks = floor_checks(current, baseline, factor, min_amortization)
+    checks += butterfly_checks(current, baseline, factor)
+    if cost_model is not None:
+        checks += cost_model_checks(cost_model)
+    return checks
+
+
+def run_suite(checks: List[PerfCheck],
+              families: Dict[str, int]) -> List[str]:
+    """Evaluate every check, print the table, return FAIL messages.
+
+    ``families`` maps a check-name prefix to the minimum number of JUDGED
+    (non-SKIP) checks the suite must contain for it — a baseline full of
+    floors that the current run judged none of is itself a failure
+    (schema drift / rows silently missing), the "sanity" half of the
+    reframe contract applied to the suite as a whole."""
+    failures: List[str] = []
+    judged: Dict[str, int] = {k: 0 for k in families}
+    for c in checks:
+        res = c.evaluate()
+        print(res.line())
+        if res.status == FAIL:
+            failures.append(f"{res.name}: {res.message}")
+        if res.status not in (SKIP,):
+            for prefix in families:
+                if res.name.startswith(prefix):
+                    judged[prefix] += 1
+    for prefix, minimum in families.items():
+        if judged[prefix] < minimum:
             failures.append(
-                f"butterfly {key}: {c*1e6:.2f} us/step is {ratio:.2f}x the "
-                f"baseline {b*1e6:.2f} us/step (limit {factor}x) AND "
-                f"pallas_step fell above fused in-run ({in_run:.2f}x) — "
-                f"the stride plan degraded, not the runner")
-        elif regressed:
-            verdict = "SLOW-RUNNER? (absolute regression, in-run signal healthy)"
-        else:
-            verdict = "OK"
-        in_run_txt = (f", pallas/fused {in_run:.2f}x"
-                      if in_run is not None else "")
-        print(f"floor_guard: butterfly {key}: baseline {b*1e6:.2f} us/step, "
-              f"current {c*1e6:.2f} us/step ({ratio:.2f}x{in_run_txt}) "
-              f"{verdict}")
-    if judged == 0:
-        failures.append(
-            "baseline has butterfly floors but the current run judged "
-            "none of them (butterfly rows missing or key schema drifted)")
+                f"suite judged {judged[prefix]} {prefix}* checks, needs "
+                f">= {minimum} (rows missing or key schema drifted)")
     return failures
 
 
 def check(current: dict, baseline: dict, factor: float,
-          min_amortization: float) -> list:
+          min_amortization: float,
+          cost_model: Optional[dict] = None) -> list:
     """Returns a list of human-readable failures (empty = pass)."""
-    failures = []
-    cur = current.get("floor_wall_per_step", {})
     base = baseline.get("floor_wall_per_step", {})
-    speedups = current.get("s1_over_s8_speedup", {})
     if not base:
-        failures.append("baseline has no floor_wall_per_step field")
-        return failures
-    judged = 0
-    for width, b in sorted(base.items(), key=lambda kv: int(kv[0])):
-        c = cur.get(width)
-        if c is None:
-            print(f"floor_guard: width {width} missing from current run "
-                  f"(not judged)")
-            continue
-        judged += 1
-        ratio = c / b
-        amort = speedups.get(width)
-        regressed = ratio > factor
-        collapsed = amort is not None and amort < min_amortization
-        if regressed and collapsed:
-            verdict = "REGRESSED"
-            failures.append(
-                f"width {width}: {c*1e6:.2f} us/step is {ratio:.2f}x the "
-                f"baseline {b*1e6:.2f} us/step (limit {factor}x) AND the "
-                f"in-run S1/S8 amortization collapsed to {amort:.2f}x "
-                f"(floor {min_amortization}x) — the blocked fast path "
-                f"degraded, not the runner")
-        elif regressed:
-            verdict = "SLOW-RUNNER? (absolute regression, in-run signal healthy)"
-        else:
-            verdict = "OK"
-        amort_txt = f", S1/S8 {amort:.2f}x" if amort is not None else ""
-        print(f"floor_guard: W={width}: baseline {b*1e6:.2f} us/step, "
-              f"current {c*1e6:.2f} us/step ({ratio:.2f}x{amort_txt}) "
-              f"{verdict}")
-    if judged == 0:
-        failures.append("no width was present in both files")
-    failures.extend(check_butterfly(current, baseline, factor))
-    return failures
+        return ["baseline has no floor_wall_per_step field"]
+    families = {"floor@": 1}
+    if baseline.get("butterfly_floor_wall_per_step"):
+        # baselines that predate the butterfly rows carry no keys: nothing
+        # to guard (regenerating the baseline arms this family)
+        families["butterfly@"] = 1
+    suite = build_suite(current, baseline, factor, min_amortization,
+                        cost_model)
+    return run_suite(suite, families)
 
 
 def main(argv=None):
@@ -127,16 +285,29 @@ def main(argv=None):
     ap.add_argument("--baseline",
                     default="artifacts/bench/pallas_floor_smoke_baseline.json")
     ap.add_argument("--factor", type=float, default=2.0,
-                    help="max allowed current/baseline wall-per-step ratio")
+                    help="default max current/reference ratio (per-check "
+                         "overrides live in the baseline's 'references')")
     ap.add_argument("--min-amortization", type=float, default=1.05,
                     help="in-run S1/S8 speedup below which an absolute "
                          "regression counts as a fast-path failure")
+    ap.add_argument("--cost-model", default=None,
+                    help="CI calibration artifact to sanity-check "
+                         "(missing file = skip, stays green locally)")
     a = ap.parse_args(argv)
     with open(a.current) as f:
         current = json.load(f)
     with open(a.baseline) as f:
         baseline = json.load(f)
-    failures = check(current, baseline, a.factor, a.min_amortization)
+    cost_model = None
+    if a.cost_model:
+        try:
+            with open(a.cost_model) as f:
+                cost_model = json.load(f)
+        except FileNotFoundError:
+            print(f"floor_guard: cost model {a.cost_model} absent "
+                  f"(calibration checks skipped)")
+    failures = check(current, baseline, a.factor, a.min_amortization,
+                     cost_model)
     for msg in failures:
         print(f"floor_guard: FAIL: {msg}", file=sys.stderr)
     return 1 if failures else 0

@@ -63,6 +63,7 @@ from benchmarks.common import (
     SweepSpec,
     backend_options_args,
     bench_path,
+    calibrate_worker,
     parse_backend_options,
     run_worker,
     write_csv,
@@ -106,12 +107,29 @@ def run(devices: int = 1, steps: int = 0, reps: int = 0,
         butterfly_widths=BUTTERFLY_WIDTHS,
         butterfly_patterns=BUTTERFLY_PATTERNS,
         payload: int = 64, options=None, verbose: bool = True,
-        smoke: bool = False):
+        smoke: bool = False, calibrate: bool = False):
     cfg = PRESETS["floor"]
     steps = steps or cfg.steps
     reps = reps or cfg.reps
     rows_out = []
     ratios = {}
+
+    # the cost-model snapshot the artifact records: every saved verdict
+    # names the constants it was judged under. --calibrate measures fresh
+    # probes first (merged into the cache, so the sweeps below resolve
+    # "auto" through them); otherwise snapshot whatever the default
+    # resolution currently is (env / cached / analytic).
+    if calibrate:
+        cost_model = calibrate_worker(sweep_devices, payload, smoke=smoke)
+        if verbose:
+            print(f"calibrated cost model: exchange="
+                  f"{cost_model['exchange_row_steps']:.0f} row-steps, "
+                  f"launch={cost_model['launch_us']:.1f}us", flush=True)
+    else:
+        from repro.kernels import probes as _probes
+
+        cost_model = _probes.default_cost_model(
+            devices=sweep_devices, payload=payload).to_dict()
 
     # ---- 1. fused vs pallas_step (per-step launches, S=1) -----------------
     for width in widths:
@@ -303,6 +321,8 @@ def run(devices: int = 1, steps: int = 0, reps: int = 0,
             "steps": steps, "payload": payload,
             "grain_iterations": list(cfg.grains),
             "smoke": smoke,
+            "calibrated": calibrate,
+            "cost_model": cost_model,
             "pallas_over_fused_per_step": ratios,
             "pallas_step_strictly_lower": strictly_lower_v,
             "butterfly_patterns": list(butterfly_patterns),
@@ -376,6 +396,11 @@ def main(argv=None):
                     help="seconds-long CI guard: tiny sweep, no assertions, "
                          "writes pallas_floor_smoke.* (committed artifacts "
                          "untouched)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="run the cost-model probes first (merged into "
+                         "artifacts/bench/cost_model.json) so the sweeps' "
+                         "'auto' picks resolve through measured costs; the "
+                         "snapshot is recorded in the artifact JSON")
     backend_options_args(ap)
     a = ap.parse_args(argv)
     opts = parse_backend_options(a)
@@ -387,7 +412,7 @@ def main(argv=None):
                   sweep_widths=(64,), sweep_s=(1, 2, 4, 8),
                   sweep_devices=2, pipe_widths=(256,),
                   butterfly_widths=(64,), options=opts,
-                  smoke=True)
+                  smoke=True, calibrate=a.calibrate)
         # the smoke run guards the CODE PATHS (blocked kernel, deep
         # exchange, pipelined phase split, butterfly stride plan, artifact
         # schema), not the timing verdicts — but every swept width must
@@ -410,7 +435,7 @@ def main(argv=None):
         pipe_widths=tuple(int(w) for w in a.pipe_widths.split(",")),
         butterfly_widths=tuple(
             int(w) for w in a.butterfly_widths.split(",")),
-        options=opts)
+        options=opts, calibrate=a.calibrate)
     return 0
 
 

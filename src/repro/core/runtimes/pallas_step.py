@@ -113,6 +113,7 @@ from repro.core.runtimes.base import register
 from repro.core.runtimes.bsp import AXIS, _BspBase
 from repro.core.task_kernels import KernelSpec
 from repro.kernels import ops as _kops
+from repro.kernels import probes as _probes
 from repro.kernels import schedule as _schedule
 from repro.kernels.taskbench_step import (
     WEIGHT_ACCUM_DTYPE,
@@ -464,10 +465,15 @@ def _act_schedule(
 
 
 class _ResolvedPlan(NamedTuple):
-    """What one graph will actually run: a plan kind + launch depth."""
+    """What one graph will actually run: a plan kind + launch depth.
+
+    ``reason`` names the verdict source when the resolution involved a
+    cost-model judgment (plan re-routing, tuner declines) — empty for
+    purely structural picks."""
 
     kind: str
     steps_per_launch: int
+    reason: str = ""
 
 
 @register
@@ -479,6 +485,18 @@ class PallasStepRuntime(_BspBase):
     def _gather_width_cap(self) -> int:
         return int(self.options.get(
             "gather_width_cap", _schedule.DEFAULT_GATHER_WIDTH_CAP))
+
+    def _cost_model(self, payload: Optional[int] = None):
+        """The CostModel pricing this runtime's scheduling verdicts.
+
+        The ``cost_model`` option (a CostModel, a to_dict()-shaped dict,
+        or a cache-file path) is the EXPLICIT tier of the precedence;
+        unset falls through to probes.default_cost_model (env > cached
+        probes > analytic). Only ranks/sizes schedules — numerics are
+        model-independent."""
+        return _probes.coerce_cost_model(
+            self.options.get("cost_model"),
+            devices=len(self.devices), payload=payload)
 
     def plan_for(self, graph: TaskGraph) -> Tuple[Optional[str], str]:
         """pattern -> execution plan kind, or (None, reason).
@@ -512,7 +530,9 @@ class PallasStepRuntime(_BspBase):
             f"pallas_step plan (halo: halo-expressible period-1 patterns "
             f"at any width; stride: butterfly fft/tree; allgather: any "
             f"pattern up to gather_width_cap={cap} rows) — fall back to "
-            f"the `fused` backend, which runs every pattern at any width"
+            f"the `fused` backend, which runs every pattern at any width "
+            f"[verdict source: "
+            f"{self._cost_model(graph.payload).describe(graph.width)}]"
         )
 
     def supports(self, graph: TaskGraph):
@@ -536,19 +556,42 @@ class PallasStepRuntime(_BspBase):
             return _ResolvedPlan(plan, self._graph_steps_per_launch(graph))
         opt = self.options.get("steps_per_launch")
         if plan == PLAN_STRIDE:
-            # Only an EXPLICIT depth re-routes a butterfly to the blocked
-            # all-gather plan (the user's ablation choice). "auto" keeps
-            # the stride plan: gathered_pays_off ranks blocked gathers
-            # against per-step GATHERS, not against the stride plan it
-            # would displace here — whose in-block slots need no
-            # collective and whose pair combine is gather-free, measured
-            # well under the blocked schedule at every width.
-            if opt in (None, 1) or _schedule.is_auto(opt):
+            # Two routes re-route a butterfly to the blocked all-gather
+            # plan. An EXPLICIT depth (the user's ablation choice) always
+            # did. "auto" newly can — but only under a MEASURED cost
+            # model: the analytic rules cannot rank the plans
+            # (gathered_pays_off compares blocked gathers against
+            # per-step GATHERS, not against the stride plan it would
+            # displace here, whose in-block slots need no collective and
+            # whose pair combine is gather-free), while measured
+            # launch/stride/gather/row-step walls can
+            # (schedule.gathered_beats_strides). With the analytic
+            # fallback "auto" keeps the stride plan — bit-identical to
+            # the pre-measurement behavior.
+            if opt in (None, 1):
                 return _ResolvedPlan(plan, 1)
+            if _schedule.is_auto(opt):
+                if graph.width > self._gather_width_cap():
+                    return _ResolvedPlan(plan, 1)
+                model = self._cost_model(graph.payload)
+                s = self._gathered_steps_per_launch(graph)
+                if s <= 1:
+                    return _ResolvedPlan(plan, 1)
+                strides = _patterns.butterfly_slot_strides(graph)
+                B = self._block(graph)
+                beats, why = _schedule.gathered_beats_strides(
+                    width=graph.width, block=B, steps_per_launch=s,
+                    off_block_strides=sum(1 for st in strides if st >= B),
+                    period=len(strides), model=model,
+                    impl=self._halo_impl())
+                if beats:
+                    return _ResolvedPlan(PLAN_ALLGATHER, s, why)
+                return _ResolvedPlan(plan, 1, why)
             if graph.width <= self._gather_width_cap():
                 s = self._gathered_steps_per_launch(graph)
                 if s > 1:
-                    return _ResolvedPlan(PLAN_ALLGATHER, s)
+                    return _ResolvedPlan(PLAN_ALLGATHER, s,
+                                         "explicit blocked request")
             return _ResolvedPlan(plan, 1)
         return _ResolvedPlan(plan, self._gathered_steps_per_launch(graph))
 
@@ -562,6 +605,7 @@ class PallasStepRuntime(_BspBase):
             # mirror what the launch actually holds: period-1 patterns
             # keep one static table pair, not S per-depth tables
             time_varying=graph.pattern == "spread" or graph.period > 1,
+            model=self._cost_model(graph.payload),
         )
 
     # ------------------------------------------------------------ operands
@@ -659,7 +703,8 @@ class PallasStepRuntime(_BspBase):
         the pure scheduling effect in ablations)."""
         return str(self.options.get("halo_impl", "xla"))
 
-    def _pipeline_active(self, block: int, s: int, halo: int) -> bool:
+    def _pipeline_active(self, block: int, s: int, halo: int,
+                         payload: Optional[int] = None) -> bool:
         """The pipelined schedule applies when blocking is on AND the owned
         block keeps a nonempty interior once 2*S*r edge rows belong to the
         boundary phase. Tiny blocks (block <= 2*S*r) have nothing to hide
@@ -668,13 +713,15 @@ class PallasStepRuntime(_BspBase):
         schedule. Note S*r < block here, so the pipelined exchange is
         always single-hop. Under ``steps_per_launch="auto"`` the tuner's
         profitability verdict also binds (a fallback depth chosen with no
-        covering candidate runs serial); an EXPLICIT S is the user's
-        ablation choice and pipelines whenever structurally possible."""
+        covering candidate runs serial), priced by this runtime's cost
+        model; an EXPLICIT S is the user's ablation choice and pipelines
+        whenever structurally possible."""
         if not (s > 1 and halo > 0 and self._pipeline_requested()
                 and block > 2 * s * halo):
             return False
         if _schedule.is_auto(self.options.get("steps_per_launch")):
-            return _schedule.pipeline_interior_covers_exchange(block, halo, s)
+            return _schedule.pipeline_interior_covers_exchange(
+                block, halo, s, self._cost_model(payload))
         return True
 
     # ------------------------------------------------------- launch depth
@@ -686,6 +733,7 @@ class PallasStepRuntime(_BspBase):
             block=block, radius=radius, payload=payload,
             total_steps=total_steps, combine=self._combine_mode(),
             pipeline=self._pipeline_requested(),
+            model=self._cost_model(payload),
         )
 
     def _graph_steps_per_launch(self, graph: TaskGraph) -> int:
@@ -804,7 +852,8 @@ class PallasStepRuntime(_BspBase):
         idx, wgt, idx0, wgt0 = self._blocked_operands(graph, H)
         acts = _act_schedule((graph.steps,), graph.steps, S)[:, 0]  # (L, S)
         T = graph.steps
-        pipelined = self._pipeline_active(self._block(graph), S, H)
+        pipelined = self._pipeline_active(self._block(graph), S, H,
+                                          graph.payload)
         impl = self._halo_impl()
 
         def local_run(local, i, w, i0, w0, act_seq):
@@ -1196,7 +1245,8 @@ class PallasStepRuntime(_BspBase):
         ops4 = [self._blocked_operands(g, H) for g in members]
         idx, wgt, idx0, wgt0 = _stack_operands(ops4)
         acts = _act_schedule(ensemble.member_steps, steps, S)  # (L, K, S)
-        pipelined = self._pipeline_active(self._block(members[0]), S, H)
+        pipelined = self._pipeline_active(self._block(members[0]), S, H,
+                                          members[0].payload)
         impl = self._halo_impl()
 
         def local_run(local, i, w, i0, w0, act_seq):  # local (K, B, P)
@@ -1346,7 +1396,7 @@ class PallasStepRuntime(_BspBase):
         # no interior at depth S*h_k keeps the serial exchange inside the
         # same scan body
         piped = [
-            self._pipeline_active(self._block(g), S, h)
+            self._pipeline_active(self._block(g), S, h, g.payload)
             for g, h in zip(members, halos)
         ]
         impl = self._halo_impl()
@@ -1435,7 +1485,7 @@ class PallasStepRuntime(_BspBase):
         L = self._launches(graph.steps, plan.steps_per_launch)
         if plan.kind == PLAN_HALO and self._pipeline_active(
                 self._block(graph), plan.steps_per_launch,
-                _patterns.halo_radius(graph)):
+                _patterns.halo_radius(graph), graph.payload):
             return 1 + 2 * (L - 1)
         return L
 
@@ -1451,13 +1501,14 @@ class PallasStepRuntime(_BspBase):
         members = ensemble.members
         if self._is_stacked(ensemble):
             H = max(_patterns.halo_radius(g) for g in members)
-            if self._pipeline_active(self._block(members[0]), S, H):
+            if self._pipeline_active(self._block(members[0]), S, H,
+                                     members[0].payload):
                 return 1 + 2 * (launches - 1)
             return launches
         total = 0
         for g in members:
             piped = self._pipeline_active(
-                self._block(g), S, _patterns.halo_radius(g))
+                self._block(g), S, _patterns.halo_radius(g), g.payload)
             total += 1 + (2 if piped else 1) * (launches - 1)
         return total
 

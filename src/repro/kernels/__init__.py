@@ -2,6 +2,9 @@
 
 Each kernel lives in <name>.py (pl.pallas_call + BlockSpec), has a pure-jnp
 oracle in ref.py, and a public jit'd wrapper in ops.py that auto-selects
-interpret mode off-TPU.
+interpret mode off-TPU. Scheduling policy (launch depth / plan choice)
+lives in schedule.py, priced by the measured-or-analytic cost model in
+probes.py (not imported here: probes doubles as the `-m` calibration CLI
+and must stay lazy).
 """
 from repro.kernels import ops, ref  # noqa: F401

@@ -27,11 +27,17 @@ schedule wherever the interior is empty).
   "auto" / 0      pick the deepest candidate whose working set fits VMEM
                   (and, when pipelining, whose interior covers the exchange)
   any int > 1     explicit depth, clamped to the graph's combine-step count
+
+Every covers/pays-off rule here is priced against a *cost model*
+(``repro.kernels.probes.CostModel``). Resolvers take ``model=``; passing
+None resolves the default (env constant > cached probe calibration >
+analytic fallback — precedence documented and tested in probes.py /
+tests/test_cost_model.py). The model only decides WHICH schedule runs,
+never WHAT it computes — numerics are bit-identical across models.
 """
 from __future__ import annotations
 
-import os
-from typing import Optional, Sequence, Union
+from typing import Optional, Sequence, Tuple, Union
 
 
 def is_auto(value: Union[int, str, None]) -> bool:
@@ -56,34 +62,38 @@ _LANE = 128  # payload pads to the TPU lane multiple inside the kernel
 #: one depth). Calibrated against this container's forced-host devices,
 #: where the exchange is rendezvous-dominated (~80-200us vs ~0.1-0.2us per
 #: row-step at payload 64): S=8 at block 256 measurably pays, S=16 does
-#: not, which brackets the constant. A real-interconnect build would
-#: re-measure — either by editing this constant or, without touching the
-#: source, via the REPRO_PIPELINE_EXCHANGE_ROW_STEPS environment variable
-#: (read per call by ``exchange_row_steps`` so a benchmark harness can
-#: re-calibrate per platform). Used only to rank "auto" candidates — never
-#: to forbid an explicit S.
+#: not, which brackets the constant. A real-interconnect build re-measures
+#: — with `python -m repro.kernels.probes` (the cached measured model
+#: replaces this constant wholesale), or, without touching source or
+#: cache, via the REPRO_PIPELINE_EXCHANGE_ROW_STEPS environment variable.
+#: Used only to rank "auto" candidates — never to forbid an explicit S.
 PIPELINE_EXCHANGE_ROW_STEPS = 512
 
 _EXCHANGE_ROW_STEPS_ENV = "REPRO_PIPELINE_EXCHANGE_ROW_STEPS"
 
 
-def exchange_row_steps() -> int:
-    """The calibrated exchange cost in row-steps, env-var overridable.
+def _resolve_model(model):
+    """``model=None`` -> the default CostModel (env > cached probes >
+    analytic; see probes.default_cost_model). The probes import is lazy
+    so this policy module stays importable without touching the cache
+    machinery, and so probes.py can import US at module top."""
+    if model is None:
+        from repro.kernels import probes
 
-    Consulted at every covering/pays-off evaluation (not cached at import)
-    so per-platform re-calibration needs no reimport: set
-    ``REPRO_PIPELINE_EXCHANGE_ROW_STEPS`` and the next "auto" resolution
-    uses it. Invalid values fail loudly — a silently ignored calibration
-    is worse than a crash."""
-    raw = os.environ.get(_EXCHANGE_ROW_STEPS_ENV)
-    if raw is None or raw == "":
-        return PIPELINE_EXCHANGE_ROW_STEPS
-    value = int(raw)
-    if value <= 0:
-        raise ValueError(
-            f"{_EXCHANGE_ROW_STEPS_ENV} must be a positive integer, "
-            f"got {raw!r}")
-    return value
+        return probes.default_cost_model()
+    return model
+
+
+def exchange_row_steps(model=None):
+    """The calibrated exchange cost in row-steps under ``model``.
+
+    With no model this re-resolves the default per call (not cached at
+    import) so per-platform re-calibration needs no reimport: set
+    ``REPRO_PIPELINE_EXCHANGE_ROW_STEPS``, or drop a probe calibration
+    into the cache file, and the next "auto" resolution uses it. Invalid
+    env values fail loudly — a silently ignored calibration is worse
+    than a crash."""
+    return _resolve_model(model).exchange_row_steps
 
 
 def _launch_set_bytes(m: int, window: int, padded_payload: int,
@@ -152,13 +162,13 @@ def blocked_working_set_bytes(
 
 
 def pipeline_interior_covers_exchange(
-    block: int, radius: int, steps_per_launch: int
+    block: int, radius: int, steps_per_launch: int, model=None
 ) -> bool:
     """Whether the pipelined split pays for itself at this (block, S).
 
-    Two conditions, both in row-steps against the calibrated exchange cost
-    X = exchange_row_steps() (PIPELINE_EXCHANGE_ROW_STEPS or its env-var
-    override):
+    Two conditions, both in row-steps against the model's exchange cost
+    X = exchange_row_steps(model) (the analytic constant, its env-var
+    override, or a probe-measured exchange/row-step ratio):
 
       covers:   ``S * (block - 2*S*r) >= X + 2*S*r`` — the interior phase
                 must be long enough to hide one deep exchange (latency
@@ -174,7 +184,7 @@ def pipeline_interior_covers_exchange(
     interior_rows = block - 2 * depth
     if interior_rows <= 0:
         return False
-    X = exchange_row_steps()
+    X = exchange_row_steps(model)
     covers = steps_per_launch * interior_rows >= X + 2 * depth
     pays_off = 6 * steps_per_launch * depth <= X
     return covers and pays_off
@@ -190,6 +200,7 @@ def choose_steps_per_launch(
     candidates: Sequence[int] = CANDIDATES,
     combine: str = "window",
     pipeline: bool = False,
+    model=None,
 ) -> int:
     """Deepest candidate S whose blocked working set fits the VMEM budget.
 
@@ -202,6 +213,7 @@ def choose_steps_per_launch(
     candidate that fits the serial sizing — each candidate is budgeted
     against the schedule it would actually execute.
     """
+    model = _resolve_model(model)  # once per choice, not per candidate
     cap = max(1, total_steps - 1) if total_steps and total_steps > 1 else None
     best_fit = None
     for s in sorted(set(int(c) for c in candidates), reverse=True):
@@ -209,7 +221,8 @@ def choose_steps_per_launch(
             continue
         if cap is not None and s > cap:
             continue
-        if pipeline and pipeline_interior_covers_exchange(block, radius, s):
+        if pipeline and pipeline_interior_covers_exchange(
+                block, radius, s, model):
             if blocked_working_set_bytes(
                     block, radius, s, payload, combine=combine,
                     pipeline=True) <= vmem_budget:
@@ -251,6 +264,7 @@ def resolve_steps_per_launch(
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     combine: str = "window",
     pipeline: bool = False,
+    model=None,
 ) -> int:
     """Turn the ``steps_per_launch`` runtime option into a concrete S."""
     return _resolve_depth(
@@ -258,7 +272,7 @@ def resolve_steps_per_launch(
         lambda: choose_steps_per_launch(
             block=block, radius=radius, payload=payload,
             total_steps=total_steps, vmem_budget=vmem_budget,
-            combine=combine, pipeline=pipeline,
+            combine=combine, pipeline=pipeline, model=model,
         ),
         total_steps,
     )
@@ -325,22 +339,23 @@ def gathered_working_set_bytes(
     return buffers + tables
 
 
-def gathered_pays_off(width: int, block: int, steps_per_launch: int) -> bool:
+def gathered_pays_off(width: int, block: int, steps_per_launch: int,
+                      model=None) -> bool:
     """Whether a blocked gathered launch beats per-step gathers at this S.
 
     Per launch the plan saves S - 1 collectives (one gather instead of S),
-    worth ``(S-1) * X`` row-steps against the calibrated exchange cost
-    X = exchange_row_steps(); it pays ``S * (W - B)`` replicated row-steps
-    (each device advances the full W-row buffer for S depths instead of
-    its own B rows once per step). Deeper is better only while the
-    replication stays under the saving. On one device W == B: replication
-    is free and any depth pays (blocking is then pure launch
+    worth ``(S-1) * X`` row-steps against the model's exchange cost
+    X = exchange_row_steps(model); it pays ``S * (W - B)`` replicated
+    row-steps (each device advances the full W-row buffer for S depths
+    instead of its own B rows once per step). Deeper is better only while
+    the replication stays under the saving. On one device W == B:
+    replication is free and any depth pays (blocking is then pure launch
     amortization).
     """
     if steps_per_launch <= 1:
         return False
     return (steps_per_launch * (width - block)
-            <= (steps_per_launch - 1) * exchange_row_steps())
+            <= (steps_per_launch - 1) * exchange_row_steps(model))
 
 
 def choose_steps_per_launch_gathered(
@@ -354,6 +369,7 @@ def choose_steps_per_launch_gathered(
     candidates: Sequence[int] = CANDIDATES,
     combine: str = "onehot",
     time_varying: bool = True,
+    model=None,
 ) -> int:
     """Deepest candidate S that pays off AND fits for the gathered plan.
 
@@ -364,13 +380,14 @@ def choose_steps_per_launch_gathered(
     (period-1 patterns carry ONE static table pair, not S) so the budget
     never charges tables that don't exist. No candidate clearing both ->
     1 (the per-step schedule; for butterfly that is the stride plan)."""
+    model = _resolve_model(model)
     cap = max(1, total_steps - 1) if total_steps and total_steps > 1 else None
     for s in sorted(set(int(c) for c in candidates), reverse=True):
         if s <= 1:
             continue
         if cap is not None and s > cap:
             continue
-        if not gathered_pays_off(width, block, s):
+        if not gathered_pays_off(width, block, s, model):
             continue
         if gathered_working_set_bytes(
                 width, max_deps, s, payload, combine=combine,
@@ -390,6 +407,7 @@ def resolve_steps_per_launch_gathered(
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     combine: str = "onehot",
     time_varying: bool = True,
+    model=None,
 ) -> int:
     """``steps_per_launch`` -> concrete S for the all-gather plan.
 
@@ -401,7 +419,68 @@ def resolve_steps_per_launch_gathered(
         lambda: choose_steps_per_launch_gathered(
             width=width, block=block, max_deps=max_deps, payload=payload,
             total_steps=total_steps, vmem_budget=vmem_budget,
-            combine=combine, time_varying=time_varying,
+            combine=combine, time_varying=time_varying, model=model,
         ),
         total_steps,
     )
+
+
+def gathered_beats_strides(
+    *,
+    width: int,
+    block: int,
+    steps_per_launch: int,
+    off_block_strides: int,
+    period: int,
+    model,
+    impl: str = "xla",
+) -> Tuple[bool, str]:
+    """Rank the butterfly plans: blocked ALLGATHER vs per-step STRIDE.
+
+    The depth rules above only needed a RATIO (exchange cost in
+    row-steps); ranking two different plans needs ABSOLUTE walls, which
+    only a measured model carries — the analytic fallback always answers
+    (False, why): the stride plan stays, exactly the pre-measurement
+    behavior. Per-timestep amortized walls, in microseconds:
+
+      stride:    ``launch + (off/period) * stride_us`` — one launch per
+                 step; an XOR block exchange only on the off-block slots
+                 of the period (in-block pairings are local shuffles).
+      allgather: ``(launch + gather_us(W)) / S + (W - B) * row_step_us``
+                 — one launch + one full gather amortized over S steps,
+                 paid for with replicated compute (every device advances
+                 all W rows instead of its B).
+
+    Both plans run the same task body over the owned rows; that term
+    cancels. The onehot/pair combine difference is folded into the noise
+    (documented model simplification). Returns (verdict, reason) with
+    the reason naming the measured numbers — the runtime surfaces it so
+    a wrong auto-pick is diagnosable from the message alone.
+    """
+    model = _resolve_model(model)
+    if not getattr(model, "can_rank_plans", False):
+        return False, (
+            f"plan ranking needs a measured model; verdict source: "
+            f"{model.describe()}")
+    stride_us = model.stride_us_for(impl)
+    if off_block_strides > 0 and stride_us is None:
+        return False, (
+            f"no measured stride-exchange cost for impl {impl!r}; "
+            f"verdict source: {model.describe(width)}")
+    S = max(1, int(steps_per_launch))
+    gather_us = model.gather_us_at(width)
+    stride_cost = model.launch_us + (
+        (off_block_strides / max(1, period)) * (stride_us or 0.0))
+    gather_cost = ((model.launch_us + gather_us) / S
+                   + (width - block) * model.row_step_us)
+    verdict = gather_cost < stride_cost
+    reason = (
+        f"measured: stride-plan step {stride_cost:.1f}us vs gathered "
+        f"step {gather_cost:.1f}us at S={S} "
+        f"(launch={model.launch_us:.1f}us, "
+        f"stride={0.0 if stride_us is None else stride_us:.1f}us x "
+        f"{off_block_strides}/{max(1, period)} slots, "
+        f"gather={gather_us:.1f}us@w{width}, "
+        f"replication={width - block} rows x "
+        f"{model.row_step_us:.3f}us)")
+    return verdict, reason

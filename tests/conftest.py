@@ -17,6 +17,12 @@ import pytest
 # determinism + quieter logs
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# Scheduling tests assert the ANALYTIC cost model's verdicts; a developer's
+# ambient calibration cache (artifacts/bench/cost_model.json) would silently
+# flip them. "off" pins the analytic fallback; cost-model tests that need a
+# cache point REPRO_COST_MODEL at a tmp_path file via monkeypatch.
+os.environ.setdefault("REPRO_COST_MODEL", "off")
+
 
 def _install_hypothesis_stub() -> None:
     mod = types.ModuleType("hypothesis")

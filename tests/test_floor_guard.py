@@ -1,0 +1,157 @@
+"""The reframe-style regression suite (benchmarks/floor_guard.py).
+
+The guard's contract, locked per rule:
+
+  two-signal   an absolute regression vs the committed baseline alone is
+               a WARN (shared runners drift); it only FAILs when the
+               run's OWN health signal collapsed too (S1/S8 amortization
+               gone, or pallas_step above fused in the same process).
+  sanity       malformed artifacts FAIL loudly instead of skipping into
+               green, and a suite that judged ZERO checks of an armed
+               family is itself a failure (schema drift detector).
+  references   the baseline's "references" object pins per-system
+               reference/factor overrides without touching the guard.
+  cost model   the CI calibration artifact gets sanity-only checks: a
+               garbage calibration fails before it silently steers every
+               "auto" schedule; a sane one never perf-fails.
+"""
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:  # `python -m pytest` adds cwd; be explicit
+    sys.path.insert(0, str(ROOT))
+
+from benchmarks import floor_guard as fg  # noqa: E402
+
+
+def baseline(**kw):
+    base = {
+        "floor_wall_per_step": {"64": 1.0e-4},
+        "butterfly_floor_wall_per_step": {"fft@64": 2.0e-4},
+    }
+    base.update(kw)
+    return base
+
+
+def current(*, floor=1.0e-4, amort=3.0, butterfly=2.0e-4, vs_fused=0.8,
+            **kw):
+    cur = {
+        "floor_wall_per_step": {"64": floor},
+        "s1_over_s8_speedup": {"64": amort},
+        "butterfly_floor_wall_per_step": {"fft@64": butterfly},
+        "butterfly_over_fused_per_step": {"fft": {"64": vs_fused}},
+    }
+    cur.update(kw)
+    return cur
+
+
+def run(cur, base, factor=2.0, min_amortization=1.05, cost_model=None):
+    return fg.check(cur, base, factor, min_amortization, cost_model)
+
+
+def test_identical_run_passes():
+    assert run(current(), baseline()) == []
+
+
+def test_regression_with_healthy_signal_only_warns(capsys):
+    # 10x the baseline, but the run's own S1/S8 amortization is healthy
+    # and pallas_step still beats fused: slow runner, not a broken path
+    assert run(current(floor=1.0e-3, butterfly=2.0e-3), baseline()) == []
+    out = capsys.readouterr().out
+    assert "SLOW-RUNNER?" in out and "[WARN]" in out
+    assert "[FAIL]" not in out
+
+
+def test_regression_with_collapsed_amortization_fails():
+    failures = run(current(floor=1.0e-3, amort=1.0), baseline())
+    assert len(failures) == 1
+    assert "floor@64" in failures[0]
+    assert "health signal collapsed" in failures[0]
+
+
+def test_butterfly_regression_above_fused_fails():
+    failures = run(current(butterfly=2.0e-3, vs_fused=1.4), baseline())
+    assert len(failures) == 1 and "butterfly@fft@64" in failures[0]
+
+
+def test_healthy_signal_missing_stays_warn():
+    # no amortization key at all: conservative, never promote to FAIL
+    cur = current(floor=1.0e-3)
+    del cur["s1_over_s8_speedup"]
+    assert run(cur, baseline()) == []
+
+
+def test_reference_override_tunes_one_check():
+    # a platform with a known-different floor pins its own reference; the
+    # same value that would have tripped the default baseline passes
+    cur = current(floor=1.5e-3, amort=1.0)  # collapsed health, 15x default
+    assert run(cur, baseline()) != []  # default reference: FAIL
+    assert run(cur, baseline(
+        references={"floor@64": {"reference": 1.0e-3, "factor": 2.0}})) == []
+
+
+def test_malformed_value_fails_sanity():
+    failures = run(current(floor=-1.0), baseline())
+    assert any("finite and positive" in f for f in failures)
+    failures = run(current(floor="soon"), baseline())
+    assert any("not a number" in f for f in failures)
+
+
+def test_zero_judged_family_is_a_failure():
+    # a current run whose rows all went missing must not pass by SKIPs
+    cur = {"floor_wall_per_step": {}, "s1_over_s8_speedup": {}}
+    failures = run(cur, baseline())
+    assert any("judged 0 floor@* checks" in f for f in failures)
+
+
+def test_baseline_without_floors_fails():
+    assert run(current(), {"something": 1}) != []
+
+
+def test_butterfly_family_armed_only_with_baseline_keys():
+    # pre-butterfly baselines carry no keys: nothing to guard, no failure
+    base = {"floor_wall_per_step": {"64": 1.0e-4}}
+    cur = {"floor_wall_per_step": {"64": 1.0e-4},
+           "s1_over_s8_speedup": {"64": 3.0}}
+    assert run(cur, base) == []
+
+
+def sane_model_file():
+    return {
+        "schema": 1,
+        "entries": {
+            "cpu|d2|p64": {
+                "source": "measured", "exchange_row_steps": 12000.0,
+                "launch_us": 33.0, "row_step_us": 0.012,
+                "halo_exchange_us": {"xla": 150.0},
+                "stride_exchange_us": {"xla": 120.0},
+                "gather_us": {"64": 160.0},
+                "platform": "cpu", "devices": 2, "payload": 64,
+            },
+        },
+    }
+
+
+def test_cost_model_sane_passes_and_is_summarized(capsys):
+    assert run(current(), baseline(), cost_model=sane_model_file()) == []
+    out = capsys.readouterr().out
+    assert "cost_model[cpu|d2|p64]" in out and "exchange=12000" in out
+
+
+def test_cost_model_garbage_fails():
+    bad = sane_model_file()
+    bad["entries"]["cpu|d2|p64"]["launch_us"] = -5.0
+    failures = run(current(), baseline(), cost_model=bad)
+    assert any("launch_us" in f for f in failures)
+    missing = sane_model_file()
+    del missing["entries"]["cpu|d2|p64"]["row_step_us"]
+    failures = run(current(), baseline(), cost_model=missing)
+    assert any("row_step_us" in f for f in failures)
+    unmeasured = sane_model_file()
+    unmeasured["entries"]["cpu|d2|p64"]["source"] = "analytic"
+    failures = run(current(), baseline(), cost_model=unmeasured)
+    assert any("not 'measured'" in f for f in failures)
+    assert any("no entries" in f
+               for f in run(current(), baseline(),
+                            cost_model={"schema": 1, "entries": {}}))
