@@ -60,6 +60,13 @@ class SweepSpec:
     #: worker process (rows carry a "variant" key): the option-sweep
     #: analogue of compare_runtimes, e.g. a steps_per_launch ladder.
     option_variants: Dict = dataclasses.field(default_factory=dict)
+    #: record a span trace (repro.obs) in a SEPARATE traced execution after
+    #: the timed reps — rows gain a "trace" key with the per-category wall
+    #: decomposition. The timed path is untouched (DESIGN.md §10).
+    trace: bool = False
+    #: when tracing, also write one Chrome trace_event JSON per traced row
+    #: into this directory (named <runtime>[_<variant>]_g<grain>.json)
+    trace_dir: str = ""
 
     def resolved_width(self) -> int:
         return self.width or self.devices * self.overdecomposition
@@ -91,8 +98,10 @@ def run_sweep_inproc(spec: SweepSpec) -> List[Dict]:
         ]
         variants = spec.option_variants or {"": {}}
         for name, vlabel in [(n, vl) for n in runtimes for vl in variants]:
-            rt = get_runtime(name, devices=devs,
-                             **{**spec.options, **variants[vlabel]})
+            opts = {**spec.options, **variants[vlabel]}
+            if spec.trace:
+                opts["trace"] = True
+            rt = get_runtime(name, devices=devs, **opts)
             serial_wall = None
             if spec.ensemble > 1:
                 ens = GraphEnsemble(members)
@@ -132,8 +141,32 @@ def run_sweep_inproc(spec: SweepSpec) -> List[Dict]:
             }
             if serial_wall is not None:
                 row["serial_wall"] = serial_wall
+            if spec.trace and spec.ensemble <= 1:
+                row["trace"] = _trace_row(rt, members[0], spec,
+                                          name, vlabel, grain)
             rows.append(row)
     return rows
+
+
+def _trace_row(rt, graph, spec: SweepSpec, name: str, vlabel: str,
+               grain: int) -> Dict:
+    """One traced execution -> the row's decomposition summary (and,
+    with ``trace_dir``, a Chrome trace file). Runs AFTER the timed reps so
+    the probe/warmup cost of tracing can never leak into the walls."""
+    import re
+
+    from repro.obs import summarize, write_chrome_trace
+
+    rt.trace_once(graph)
+    summary = summarize(rt.tracer.spans)
+    if spec.trace_dir:
+        os.makedirs(spec.trace_dir, exist_ok=True)
+        label = re.sub(r"[^A-Za-z0-9_.-]+", "-",
+                       name + (f"_{vlabel}" if vlabel else "") + f"_g{grain}")
+        write_chrome_trace(
+            os.path.join(spec.trace_dir, f"{label}.json"),
+            rt.tracer.spans, process_name=label)
+    return summary
 
 
 def run_worker(spec: SweepSpec, timeout: int = 3000) -> List[Dict]:

@@ -138,6 +138,11 @@ def run(devices: int = 1, steps: int = 0, reps: int = 0,
             pattern="stencil_1d", devices=devices, width=width,
             steps=steps, grains=cfg.grains, reps=reps, payload=payload,
             options=dict(options or {}),
+            # smoke rows also record a span trace (a separate traced
+            # execution after the timed reps — the walls are untouched),
+            # so every CI run ships a decomposed + Chrome-loadable view
+            # of the floor row alongside the scalar artifact
+            trace=smoke, trace_dir=bench_path("traces") if smoke else "",
         )
         rows = run_worker(spec)
         walls = {}

@@ -11,13 +11,17 @@ and the quantity of interest is how much of the wall clock the *runtime*
   * dispatch overhead (measured with an empty jitted step),
   * step-METG: the smallest per-step useful work that would keep the fleet
     >= 50% efficient given the measured overhead — the paper's METG applied
-    to the production loop.
+    to the production loop,
+  * token throughput (``tokens_per_step``; the serving loop's currency),
+  * per-category wall fractions when a span ``tracer`` is attached
+    (repro.obs) — the decomposed view of the same wall the records sum.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,8 +29,15 @@ import jax.numpy as jnp
 from repro.core.metg import DEFAULT_THRESHOLD
 
 
+@functools.lru_cache(maxsize=None)
 def measure_dispatch_overhead(reps: int = 50) -> float:
-    """Seconds of host->device dispatch latency for a trivial jitted op."""
+    """Seconds of host->device dispatch latency for a trivial jitted op.
+
+    Memoized at module level (per ``reps``): the probe costs ~50 dispatches
+    plus a compile, and every profiler in a process is asking the same
+    question about the same device queue — examples/overhead_audit.py alone
+    used to pay it three times per run. ``measure_dispatch_overhead.cache_clear()``
+    re-arms it (e.g. after switching JAX platforms in a test)."""
     f = jax.jit(lambda x: x + 1.0)
     x = jnp.zeros(())
     jax.block_until_ready(f(x))
@@ -56,6 +67,9 @@ class OverheadReport:
     granularity_us: float  # wall x devices / tasks_per_step
     step_metg_us: Optional[float]
     sustained_flops_per_s: float
+    tokens_per_s: float = 0.0
+    #: category -> fraction of traced wall (only when a tracer is attached)
+    category_fractions: Optional[Dict[str, float]] = None
 
     def lines(self) -> List[str]:
         out = [
@@ -67,8 +81,15 @@ class OverheadReport:
             f"effective granularity : {self.granularity_us:.1f} us",
             f"sustained FLOP/s      : {self.sustained_flops_per_s / 1e9:.3f} G",
         ]
+        if self.tokens_per_s > 0:
+            out.append(f"tokens/s              : {self.tokens_per_s:.1f}")
         if self.step_metg_us is not None:
             out.append(f"step-METG(50%)        : {self.step_metg_us:.1f} us")
+        if self.category_fractions:
+            cats = "  ".join(
+                f"{k}={v * 100:.1f}%"
+                for k, v in sorted(self.category_fractions.items()) if v > 0)
+            out.append(f"wall by category      : {cats}")
         return out
 
 
@@ -80,13 +101,19 @@ class OverheadProfiler:
         devices: int = 1,
         tasks_per_step: int = 1,
         flops_per_step: float = 0.0,
+        tokens_per_step: int = 0,
         threshold: float = DEFAULT_THRESHOLD,
+        tracer=None,
     ):
         self.devices = max(devices, 1)
         self.tasks_per_step = max(tasks_per_step, 1)
         self.flops_per_step = flops_per_step
+        self.tokens_per_step = max(tokens_per_step, 0)
         self.threshold = threshold
         self.records: List[StepRecord] = []
+        #: optional span recorder (repro.obs.Tracer); when attached, the
+        #: report carries the per-category decomposition of the same wall
+        self.tracer = tracer
         self._dispatch: Optional[float] = None
 
     def wrap(self, step_fn: Callable) -> Callable:
@@ -94,17 +121,18 @@ class OverheadProfiler:
             t0 = time.perf_counter()
             out = step_fn(*args, **kwargs)
             out = jax.block_until_ready(out)
-            wall = time.perf_counter() - t0
-            self.records.append(
-                StepRecord(len(self.records), wall, flops=self.flops_per_step)
-            )
+            self.record(time.perf_counter() - t0)
             return out
 
         return timed
 
-    def record(self, wall: float) -> None:
+    def record(self, wall: float, tokens: Optional[int] = None) -> None:
         self.records.append(
-            StepRecord(len(self.records), wall, flops=self.flops_per_step)
+            StepRecord(
+                len(self.records), wall,
+                tokens=self.tokens_per_step if tokens is None else tokens,
+                flops=self.flops_per_step,
+            )
         )
 
     @property
@@ -112,6 +140,13 @@ class OverheadProfiler:
         if self._dispatch is None:
             self._dispatch = measure_dispatch_overhead()
         return self._dispatch
+
+    def _category_fractions(self) -> Optional[Dict[str, float]]:
+        if self.tracer is None or not getattr(self.tracer, "spans", None):
+            return None
+        from repro.obs import summarize
+
+        return summarize(self.tracer.spans)["fractions"]
 
     def report(self, skip_warmup: int = 1) -> OverheadReport:
         recs = self.records[skip_warmup:] or self.records
@@ -132,6 +167,9 @@ class OverheadProfiler:
             if th < 1.0 else None
 
         flops = self.flops_per_step / mean if mean > 0 else 0.0
+        total_wall = sum(r.wall for r in recs)
+        total_tokens = sum(r.tokens for r in recs)
+        tps = total_tokens / total_wall if total_wall > 0 else 0.0
         return OverheadReport(
             steps=len(recs),
             mean_wall=mean,
@@ -142,4 +180,6 @@ class OverheadProfiler:
             granularity_us=gran_us,
             step_metg_us=metg_us,
             sustained_flops_per_s=flops,
+            tokens_per_s=tps,
+            category_fractions=self._category_fractions(),
         )

@@ -115,6 +115,21 @@ def ring_perms(num_devices: int, axis: str = "shard"):
     return fwd, bwd
 
 
+def transport_span(tracer, kind: str, *, impl: str, depth: int = 0, **attrs):
+    """The one span every traced transport dispatch goes through.
+
+    Centralizing the category choice and the ``impl``/``depth`` tagging here
+    keeps the attribution uniform across all three transport families (ring
+    halo, stride/XOR partner, global gather) no matter which runtime issues
+    them — decompose.py can then split "exchange" from "gather" wall without
+    knowing which backend produced the trace. ``kind`` is the span name
+    (e.g. "deep_exchange", "stride_exchange", "gather_global"); gather-family
+    kinds land in the ``gather`` category, everything else in ``exchange``.
+    """
+    category = "gather" if "gather" in kind else "exchange"
+    return tracer.span(kind, category, impl=impl, depth=depth, **attrs)
+
+
 @dataclasses.dataclass(frozen=True)
 class HaloHandle:
     """An in-flight ring exchange: the double-buffered halo slots.

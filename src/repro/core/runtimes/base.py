@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core.graph import GraphEnsemble, TaskGraph
 from repro.core.metg import GrainSample, combine_grain_samples
+from repro.obs import coerce_tracer
 
 
 def _fresh(x: jax.Array) -> jax.Array:
@@ -51,6 +52,10 @@ class Runtime(abc.ABC):
     def __init__(self, devices: Optional[Sequence[jax.Device]] = None, **options):
         self.devices = list(devices) if devices is not None else jax.devices()
         self.options = options
+        #: span recorder for `trace_once` (the ``trace=`` option; defaults
+        #: to the shared NULL_TRACER — the timed `measure`/`execute` paths
+        #: never touch it, so tracing-off cannot perturb measurements)
+        self.tracer = coerce_tracer(options.get("trace"))
 
     # -- capabilities ------------------------------------------------------
 
@@ -141,6 +146,56 @@ class Runtime(abc.ABC):
         outs = fn(tuple(_fresh(x) for x in inits))
         outs = jax.block_until_ready(outs)
         return tuple(np.asarray(o) for o in outs)
+
+    # -- tracing -----------------------------------------------------------
+
+    def _build_traced(self, graph: TaskGraph) -> Callable[[jax.Array], Any]:
+        """An executor that records spans into ``self.tracer`` as it runs.
+
+        Default (fused / bsp_scan / overlap — backends whose whole loop
+        lives in one jit, opaque to host-side tracing): two run-level
+        spans — ``dispatch`` is the host call issuing the program(s),
+        ``compute.interior`` the wait for the device to drain. Backends
+        with real host boundaries (bsp, serialized, pallas_step) override
+        this with per-step / per-launch / per-phase spans.
+        """
+        fn = self.build(graph)
+        tr = self.tracer
+        dispatches = self.dispatches_per_run(graph)
+
+        def run(arg):
+            with tr.span("run_dispatch", "dispatch", runtime=self.name,
+                         dispatches=dispatches):
+                out = fn(arg)
+            with tr.span("device_drain", "compute.interior",
+                         runtime=self.name):
+                out = jax.block_until_ready(out)
+            return out
+
+        return run
+
+    def trace_once(self, graph: TaskGraph,
+                   init: Optional[jax.Array] = None) -> np.ndarray:
+        """Run the graph once recording spans (a SEPARATE execution from
+        `measure` — the timed path stays untouched). The traced executor
+        is warmed up first and the warmup's spans dropped, so compile time
+        never pollutes the attribution; build-time decision records
+        survive. With the null tracer this is just `execute`."""
+        tr = self.tracer
+        if not tr.enabled:
+            return self.execute(graph, init)
+        from repro.core.task_kernels import initial_state
+
+        self._require_support(graph)
+        if init is None:
+            init = initial_state(graph.width, graph.payload, graph.seed)
+        init = jax.block_until_ready(jax.device_put(init))
+        fn = self._build_traced(graph)
+        mark = len(tr.spans)
+        jax.block_until_ready(fn(_fresh(init)))  # compile + probe warmup
+        del tr.spans[mark:]
+        out = fn(_fresh(init))
+        return np.asarray(jax.block_until_ready(out))
 
     # -- measurement -------------------------------------------------------
 

@@ -282,6 +282,34 @@ class BspRuntime(_BspBase):
     def dispatches_per_run(self, graph: TaskGraph) -> int:
         return graph.steps
 
+    def _build_traced(self, graph: TaskGraph) -> Callable:
+        """Per-superstep spans: ``dispatch`` is the host call issuing the
+        step program, ``compute.interior`` the wait for it to finish (the
+        traced run blocks per step to obtain real intervals; the timed
+        path keeps its async queue). The halo/stride collective runs
+        INSIDE each superstep's program — MPI's exchange+compute rung is
+        one dispatch by construction — so its wall lands in the compute
+        span; per-transport attribution belongs to pallas_step's traced
+        paths."""
+        kernel_only, pick, sharding = self._build_stepper(graph)
+        tr = self.tracer
+
+        def run(init):
+            with tr.span("t0_dispatch", "dispatch", step=0):
+                state = kernel_only(jax.device_put(init, sharding))
+            with tr.span("t0_compute", "compute.interior", step=0):
+                state = jax.block_until_ready(state)
+            for t in range(1, graph.steps):
+                f = pick(t)
+                with tr.span("superstep_dispatch", "dispatch", step=t):
+                    state = f(state)
+                with tr.span("superstep", "compute.interior", step=t,
+                             pattern=graph.pattern):
+                    state = jax.block_until_ready(state)
+            return state
+
+        return run
+
 
 @register
 class BspScanRuntime(_BspBase):

@@ -149,3 +149,29 @@ class SerializedRuntime(Runtime):
 
     def dispatches_per_run(self, graph: TaskGraph) -> int:
         return graph.num_tasks
+
+    def _build_traced(self, graph: TaskGraph) -> Callable:
+        """Per-timestep spans (per-TASK spans would record W*T entries of
+        pure recorder noise; the step span's ``tasks`` attr keeps the
+        per-task dispatch count). The ``dispatch`` span covers the host
+        loop issuing W task programs — the quantity this backend exists to
+        maximize — and the ``compute.interior`` span the trailing drain of
+        whatever the async queue still holds."""
+        use_pallas = bool(self.options.get("use_pallas", False))
+        disp = _TaskDispatcher(graph, use_pallas)
+        tr = self.tracer
+        W = graph.width
+
+        def run(init):
+            with tr.span("t0_dispatch", "dispatch", step=0, tasks=W):
+                state = disp.initial(init)
+            with tr.span("t0_compute", "compute.interior", step=0):
+                state = jax.block_until_ready(state)
+            for t in range(1, graph.steps):
+                with tr.span("task_dispatch", "dispatch", step=t, tasks=W):
+                    state = disp.advance(state, t)
+                with tr.span("task_drain", "compute.interior", step=t):
+                    state = jax.block_until_ready(state)
+            return jnp.stack(state)
+
+        return run

@@ -96,6 +96,36 @@ def exchange_row_steps(model=None):
     return _resolve_model(model).exchange_row_steps
 
 
+def record_resolution(tracer, *, plan: str, steps_per_launch: int,
+                      pipeline: bool, model=None, reason: str = "",
+                      **attrs) -> None:
+    """Emit one decision record for a completed schedule resolution.
+
+    The record is an instant span carrying everything a trace reader needs
+    to audit the tuner's verdict without re-deriving it: the plan kind, the
+    chosen S, whether the pipelined form is active, which cost model backed
+    the ranking (analytic / env / measured — and its exchange constant),
+    and the reason string the resolver produced. Lives here rather than in
+    the runtime so every resolver entry point shares one record shape; a
+    null or absent tracer makes this a no-op, keeping the resolvers
+    cost-free when tracing is off.
+    """
+    if tracer is None or not getattr(tracer, "enabled", False):
+        return
+    m = _resolve_model(model)
+    tracer.instant(
+        "schedule.resolve",
+        plan=plan,
+        steps_per_launch=int(steps_per_launch),
+        pipeline=bool(pipeline),
+        cost_model=m.describe(),
+        cost_model_source=m.source,
+        exchange_row_steps=float(m.exchange_row_steps),
+        reason=reason or "structural",
+        **attrs,
+    )
+
+
 def _launch_set_bytes(m: int, window: int, padded_payload: int,
                       dtype_bytes: int, combine: str,
                       steps_per_launch: int) -> int:

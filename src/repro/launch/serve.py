@@ -117,6 +117,7 @@ def serve(
     profiler = OverheadProfiler(
         devices=mesh.size if mesh is not None else 1,
         tasks_per_step=batch,  # one "task" = one sequence's token step
+        tokens_per_step=batch,  # each decode step emits one token per seq
     )
     lengths = jnp.full((batch,), prompt_len, jnp.int32)
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
@@ -135,6 +136,8 @@ def serve(
 
     report = profiler.report() if profiler.records else None
     if verbose:
+        # the report's tokens_per_s is steady-state (warmup step dropped);
+        # this one includes it, matching the returned decode_s
         tps = batch * (gen - 1) / decode_s if decode_s > 0 else 0.0
         print(f"prefill: {prefill_s*1e3:.1f} ms for {batch}x{prompt_len} "
               f"({batch*prompt_len/max(prefill_s,1e-9):.0f} tok/s)")

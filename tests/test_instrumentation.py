@@ -1,0 +1,169 @@
+"""OverheadProfiler / OverheadReport math (core/instrumentation.py).
+
+The profiler is the production-loop face of the paper's methodology; these
+tests pin the report arithmetic with synthetic records (no timing noise),
+the skip_warmup edge cases, the module-level dispatch-probe memoization,
+and the tracer-fed category fractions.
+"""
+import numpy as np
+import pytest
+
+from repro.core.instrumentation import (
+    OverheadProfiler,
+    OverheadReport,
+    StepRecord,
+    measure_dispatch_overhead,
+)
+
+
+def _profiler(**kw):
+    kw.setdefault("devices", 2)
+    kw.setdefault("tasks_per_step", 4)
+    p = OverheadProfiler(**kw)
+    p._dispatch = 1e-4  # pin the probe: report math must be deterministic
+    return p
+
+
+def test_report_math_known_answer():
+    p = _profiler(flops_per_step=1e6, tokens_per_step=8)
+    for wall in (0.5, 0.01, 0.02, 0.03):  # first record is warmup
+        p.record(wall)
+    r = p.report(skip_warmup=1)
+    assert r.steps == 3
+    assert r.mean_wall == pytest.approx(0.02)
+    assert r.p50_wall == pytest.approx(0.02)
+    assert r.best_wall == pytest.approx(0.01)
+    assert r.dispatch_overhead == 1e-4
+    assert r.overhead_fraction == pytest.approx(1e-4 / 0.02)
+    # granularity = wall * devices / tasks_per_step
+    assert r.granularity_us == pytest.approx(0.02 * 2 / 4 * 1e6)
+    assert r.sustained_flops_per_s == pytest.approx(1e6 / 0.02)
+    # tokens: 3 steps x 8 tokens over 0.06 s total
+    assert r.tokens_per_s == pytest.approx(24 / 0.06)
+    # step-METG at 50%: c = overhead, per task, in us
+    assert r.step_metg_us == pytest.approx(1e-4 / 4 * 1e6)
+
+
+def test_explicit_tokens_override_per_step_default():
+    p = _profiler(tokens_per_step=8)
+    p.record(0.01)            # 8 tokens (the default)
+    p.record(0.01, tokens=2)  # partial batch
+    assert [r.tokens for r in p.records] == [8, 2]
+    r = p.report(skip_warmup=0)
+    assert r.tokens_per_s == pytest.approx(10 / 0.02)
+
+
+def test_tokens_zero_keeps_report_quiet():
+    p = _profiler()
+    p.record(0.01)
+    r = p.report(skip_warmup=0)
+    assert r.tokens_per_s == 0.0
+    assert not any("tokens/s" in ln for ln in r.lines())
+    p2 = _profiler(tokens_per_step=4)
+    p2.record(0.01)
+    assert any("tokens/s" in ln for ln in p2.report(skip_warmup=0).lines())
+
+
+def test_skip_warmup_edges():
+    p = _profiler()
+    p.record(0.5)
+    # skipping everything falls back to ALL records rather than erroring
+    r = p.report(skip_warmup=1)
+    assert r.steps == 1 and r.mean_wall == pytest.approx(0.5)
+    r = p.report(skip_warmup=100)
+    assert r.steps == 1
+    # no warmup skip keeps every record
+    p.record(0.1)
+    assert p.report(skip_warmup=0).steps == 2
+
+
+def test_empty_records_raise():
+    p = _profiler()
+    with pytest.raises(ValueError, match="no steps recorded"):
+        p.report()
+
+
+def test_overhead_fraction_clamped():
+    p = _profiler()
+    p._dispatch = 1.0  # dispatch slower than the step itself
+    p.record(0.001)
+    p.record(0.001)
+    r = p.report()
+    assert r.overhead_fraction == 1.0
+
+
+def test_wrap_routes_through_record():
+    import jax.numpy as jnp
+
+    p = _profiler(tokens_per_step=3)
+    timed = p.wrap(lambda x: x + 1)
+    out = timed(jnp.zeros(()))
+    assert float(out) == 1.0
+    assert len(p.records) == 1
+    assert p.records[0].wall > 0 and p.records[0].tokens == 3
+
+
+def test_dispatch_probe_memoized_across_profilers():
+    measure_dispatch_overhead.cache_clear()
+    v1 = measure_dispatch_overhead()
+    v2 = measure_dispatch_overhead()
+    assert v1 == v2
+    info = measure_dispatch_overhead.cache_info()
+    assert info.hits >= 1 and info.misses == 1
+    # two profilers ask the same memo, not the device queue twice
+    a, b = OverheadProfiler(), OverheadProfiler()
+    assert a.dispatch_overhead == b.dispatch_overhead == v1
+    assert measure_dispatch_overhead.cache_info().misses == 1
+    # distinct reps is a distinct cache key
+    measure_dispatch_overhead(reps=5)
+    assert measure_dispatch_overhead.cache_info().misses == 2
+    measure_dispatch_overhead.cache_clear()
+
+
+def test_category_fractions_from_attached_tracer():
+    from repro.obs import Tracer
+
+    tr = Tracer()
+    tr.add("feed", "dispatch", 0.0, 25.0)
+    tr.add("step", "compute.interior", 25.0, 100.0)
+    p = _profiler(tracer=tr)
+    p.record(0.01)
+    r = p.report(skip_warmup=0)
+    assert r.category_fractions["dispatch"] == pytest.approx(0.25)
+    assert r.category_fractions["compute.interior"] == pytest.approx(0.75)
+    assert any("wall by category" in ln for ln in r.lines())
+
+
+def test_category_fractions_absent_without_tracer():
+    p = _profiler()
+    p.record(0.01)
+    r = p.report(skip_warmup=0)
+    assert r.category_fractions is None
+    assert not any("wall by category" in ln for ln in r.lines())
+    # attached but empty tracer: still absent (nothing to attribute)
+    from repro.obs import Tracer
+
+    p2 = _profiler(tracer=Tracer())
+    p2.record(0.01)
+    assert p2.report(skip_warmup=0).category_fractions is None
+
+
+def test_report_lines_render():
+    r = OverheadReport(
+        steps=3, mean_wall=0.02, p50_wall=0.02, best_wall=0.01,
+        dispatch_overhead=1e-4, overhead_fraction=0.005,
+        granularity_us=10000.0, step_metg_us=25.0,
+        sustained_flops_per_s=5e7, tokens_per_s=400.0,
+        category_fractions={"dispatch": 0.3, "compute.interior": 0.7,
+                            "idle": 0.0},
+    )
+    text = "\n".join(r.lines())
+    assert "step-METG(50%)        : 25.0 us" in text
+    assert "tokens/s              : 400.0" in text
+    assert "dispatch=30.0%" in text
+    assert "idle=" not in text  # zero-fraction categories are omitted
+
+
+def test_step_record_defaults():
+    r = StepRecord(step=0, wall=0.5)
+    assert r.tokens == 0 and r.flops == 0.0
