@@ -169,22 +169,65 @@ def _trace_row(rt, graph, spec: SweepSpec, name: str, vlabel: str,
     return summary
 
 
+#: one retry for transient worker deaths (OOM kill, scheduler eviction,
+#: wedged XLA compile hitting the timeout); backoff before it so a loaded
+#: host gets a moment to drain
+WORKER_RETRIES = 1
+WORKER_RETRY_BACKOFF_S = 5.0
+
+
+def _run_subprocess_retry(cmd, *, what: str, env: Dict, timeout: int,
+                          input_text: Optional[str] = None,
+                          retries: int = WORKER_RETRIES,
+                          backoff_s: float = WORKER_RETRY_BACKOFF_S):
+    """Run a benchmark subprocess with per-attempt timeout and retry.
+
+    A sweep is hours of accumulated walls; one transiently dead worker
+    must not discard all of it. Returns (CompletedProcess, attempts_used);
+    raises RuntimeError naming the failure only once the retry budget is
+    spent. The retry count is surfaced in the caller's JSON so an artifact
+    judged after a retry says so."""
+    import time as _time
+
+    last_err = ""
+    for attempt in range(retries + 1):
+        if attempt:
+            _time.sleep(backoff_s * attempt)
+        try:
+            out = subprocess.run(
+                cmd, input=input_text, capture_output=True, text=True,
+                timeout=timeout, env=env, cwd=ROOT)
+        except subprocess.TimeoutExpired:
+            last_err = f"timed out after {timeout}s"
+            continue
+        if out.returncode == 0:
+            return out, attempt
+        last_err = out.stderr[-4000:]
+    raise RuntimeError(
+        f"{what} failed after {retries + 1} attempts:\n{last_err}")
+
+
 def run_worker(spec: SweepSpec, timeout: int = 3000) -> List[Dict]:
-    """Run a sweep in a subprocess with its own forced device count."""
+    """Run a sweep in a subprocess with its own forced device count.
+
+    Each attempt gets the full ``timeout``; a transient worker death
+    (timeout / nonzero exit) is retried once with backoff, and rows from a
+    retried worker carry ``worker_retries`` so the artifact records it."""
     payload = json.dumps(dataclasses.asdict(spec))
     env = dict(os.environ)
     env["XLA_FLAGS"] = (
         f"--xla_force_host_platform_device_count={spec.devices}")
     env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + ROOT
     env["JAX_PLATFORMS"] = "cpu"
-    out = subprocess.run(
+    out, attempts = _run_subprocess_retry(
         [sys.executable, "-m", "benchmarks._worker"],
-        input=payload, capture_output=True, text=True, timeout=timeout,
-        env=env, cwd=ROOT,
-    )
-    if out.returncode != 0:
-        raise RuntimeError(f"worker failed:\n{out.stderr[-4000:]}")
-    return json.loads(out.stdout.strip().splitlines()[-1])
+        what=f"sweep worker ({spec.runtime}, {spec.devices}d)",
+        env=env, timeout=timeout, input_text=payload)
+    rows = json.loads(out.stdout.strip().splitlines()[-1])
+    if attempts:
+        for row in rows:
+            row["worker_retries"] = attempts
+    return rows
 
 
 def calibrate_worker(devices: int, payload: int = 64, *, smoke: bool = False,
@@ -208,14 +251,15 @@ def calibrate_worker(devices: int, payload: int = 64, *, smoke: bool = False,
     env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + ROOT
     env["JAX_PLATFORMS"] = "cpu"
     env.pop("XLA_FLAGS", None)  # the probes CLI sets its own forcing flag
-    res = subprocess.run(cmd, capture_output=True, text=True,
-                         timeout=timeout, env=env, cwd=ROOT)
-    if res.returncode != 0:
-        raise RuntimeError(f"calibration failed:\n{res.stderr[-4000:]}")
+    res, attempts = _run_subprocess_retry(
+        cmd, what=f"calibration ({devices}d)", env=env, timeout=timeout)
     lines = res.stdout.strip().splitlines()
     # stdout: "cost model [...] -> path", describe() line, then the JSON
     start = next(i for i, ln in enumerate(lines) if ln.startswith("{"))
-    return json.loads("\n".join(lines[start:]))
+    model = json.loads("\n".join(lines[start:]))
+    if attempts:
+        model["worker_retries"] = attempts
+    return model
 
 
 def metg_from_rows(rows: Sequence[Dict], threshold: float = 0.5,

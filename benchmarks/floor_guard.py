@@ -268,12 +268,79 @@ def trace_checks(trace_art: dict, *, max_visible: float,
     return checks
 
 
+def chaos_checks(chaos_art: dict, *, max_recovery_tax: float,
+                 max_armor_tax: float) -> List[PerfCheck]:
+    """Resilience leg over the benchmarks/chaos artifact.
+
+    ``chaos@schema`` is the sanity half (artifact schema, rows judged,
+    verdict present); ``chaos@identity`` fails outright when any chaos row
+    lost bit-identical recovery — that IS the in-run correctness signal,
+    and a correctness loss is never a slow-runner artifact. The per-class
+    ``chaos@tax:*`` checks then apply the standard two-signal rule to the
+    recovery tax: tax past the bound with bit-identity intact is a WARN
+    (loaded runner stretching the backoff sleeps); tax past the bound with
+    identity broken FAILs. ``chaos@armor`` bounds what the resilient
+    executor costs with no faults at all (the zero-cost contract on the
+    clean path)."""
+    errors: List[str] = []
+    if chaos_art.get("schema") != SCHEMA_CHAOS:
+        errors.append(
+            f"chaos artifact schema {chaos_art.get('schema')!r}, "
+            f"expected {SCHEMA_CHAOS}")
+    verdict = chaos_art.get("verdict") or {}
+    judged = [r for r in chaos_art.get("rows", []) if "skip" not in r]
+    if not judged:
+        errors.append("chaos artifact judged no rows")
+    if "recovery_bit_identical" not in verdict:
+        errors.append("verdict missing recovery_bit_identical")
+    checks = [PerfCheck(name="chaos@schema", value=None, reference=None,
+                        factor=1.0, sanity_errors=errors)]
+    identity_errors = [] if verdict.get("recovery_bit_identical", True) \
+        else ["a faulted run was NOT bit-identical after recovery"]
+    checks.append(PerfCheck(name="chaos@identity", value=None,
+                            reference=None, factor=1.0,
+                            sanity_errors=identity_errors))
+    fmt = lambda v: f"{v:.2f}x tax"  # noqa: E731
+    for cls, summary in sorted((verdict.get("per_class") or {}).items()):
+        if cls == "straggler":
+            # the straggler row's wall carries a deliberate stall sized to
+            # the run (a detection row, not a recovery row): its tax is
+            # ~3x by construction and proves nothing about recovery cost
+            continue
+        health = 1.0 if summary.get("bit_identical") else 0.0
+        checks.append(PerfCheck(
+            name=f"chaos@tax:{cls}",
+            value=summary.get("max_recovery_tax"), reference=1.0,
+            factor=max_recovery_tax, fmt=fmt,
+            health_desc="bit_identical", health_value=health,
+            health_bad=lambda h: h < 1.0,
+            sanity_errors=_sane_positive(
+                f"chaos@tax:{cls}", summary.get("max_recovery_tax")),
+        ))
+    identity_health = 1.0 if verdict.get("recovery_bit_identical") else 0.0
+    checks.append(PerfCheck(
+        name="chaos@armor", value=verdict.get("max_armor_tax"),
+        reference=1.0, factor=max_armor_tax, fmt=fmt,
+        health_desc="bit_identical", health_value=identity_health,
+        health_bad=lambda h: h < 1.0,
+        sanity_errors=_sane_positive("chaos@armor",
+                                     verdict.get("max_armor_tax")),
+    ))
+    return checks
+
+
+SCHEMA_CHAOS = 1
+
+
 def build_suite(current: dict, baseline: dict, factor: float,
                 min_amortization: float,
                 cost_model: Optional[dict] = None,
                 trace_art: Optional[dict] = None,
                 max_visible: float = 1.0,
-                max_exchange_fraction: float = 0.6) -> List[PerfCheck]:
+                max_exchange_fraction: float = 0.6,
+                chaos_art: Optional[dict] = None,
+                max_recovery_tax: float = 2.5,
+                max_armor_tax: float = 3.0) -> List[PerfCheck]:
     checks = floor_checks(current, baseline, factor, min_amortization)
     checks += butterfly_checks(current, baseline, factor)
     if cost_model is not None:
@@ -281,6 +348,9 @@ def build_suite(current: dict, baseline: dict, factor: float,
     if trace_art is not None:
         checks += trace_checks(trace_art, max_visible=max_visible,
                                max_exchange_fraction=max_exchange_fraction)
+    if chaos_art is not None:
+        checks += chaos_checks(chaos_art, max_recovery_tax=max_recovery_tax,
+                               max_armor_tax=max_armor_tax)
     return checks
 
 
@@ -317,7 +387,10 @@ def check(current: dict, baseline: dict, factor: float,
           cost_model: Optional[dict] = None,
           trace_art: Optional[dict] = None,
           max_visible: float = 1.0,
-          max_exchange_fraction: float = 0.6) -> list:
+          max_exchange_fraction: float = 0.6,
+          chaos_art: Optional[dict] = None,
+          max_recovery_tax: float = 2.5,
+          max_armor_tax: float = 3.0) -> list:
     """Returns a list of human-readable failures (empty = pass)."""
     base = baseline.get("floor_wall_per_step", {})
     if not base:
@@ -329,9 +402,12 @@ def check(current: dict, baseline: dict, factor: float,
         families["butterfly@"] = 1
     if trace_art is not None:
         families["trace@"] = 1
+    if chaos_art is not None:
+        families["chaos@"] = 2
     suite = build_suite(current, baseline, factor, min_amortization,
                         cost_model, trace_art, max_visible,
-                        max_exchange_fraction)
+                        max_exchange_fraction, chaos_art,
+                        max_recovery_tax, max_armor_tax)
     return run_suite(suite, families)
 
 
@@ -365,6 +441,18 @@ def main(argv=None):
     ap.add_argument("--max-exchange-fraction", type=float, default=0.6,
                     help="in-run health bound: exchange share of total "
                          "wall above which an overlap shortfall FAILs")
+    ap.add_argument("--chaos", default=None, nargs="?",
+                    const="artifacts/bench/chaos.json",
+                    help="benchmarks/chaos artifact feeding the resilience "
+                         "leg (flag alone uses the default path; missing "
+                         "file = skip)")
+    ap.add_argument("--max-recovery-tax", type=float, default=2.5,
+                    help="faulted/clean resilient wall ratio above which "
+                         "a chaos tax check regresses (two-signal: WARN "
+                         "unless bit-identity also broke)")
+    ap.add_argument("--max-armor-tax", type=float, default=3.0,
+                    help="no-fault resilient/production wall ratio bound "
+                         "(the clean-path cost of the armor)")
     a = ap.parse_args(argv)
     trace_path = a.trace
     if trace_path is None and a.smoke:
@@ -392,9 +480,18 @@ def main(argv=None):
         except FileNotFoundError:
             print(f"floor_guard: trace artifact {trace_path} absent "
                   f"(trace health leg skipped)")
+    chaos_art = None
+    if a.chaos:
+        try:
+            with open(a.chaos) as f:
+                chaos_art = json.load(f)
+        except FileNotFoundError:
+            print(f"floor_guard: chaos artifact {a.chaos} absent "
+                  f"(resilience leg skipped)")
     failures = check(current, baseline, a.factor, a.min_amortization,
                      cost_model, trace_art, max_visible,
-                     a.max_exchange_fraction)
+                     a.max_exchange_fraction, chaos_art,
+                     a.max_recovery_tax, a.max_armor_tax)
     for msg in failures:
         print(f"floor_guard: FAIL: {msg}", file=sys.stderr)
     return 1 if failures else 0

@@ -13,6 +13,7 @@ single CPU device unchanged (see elastic.py).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -21,6 +22,17 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+#: manifest checksum algorithm (content digest of arrays.npz)
+CHECKSUM_ALGO = "sha256"
+
+
+def _file_digest(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
 
 
 def _flatten(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
@@ -65,12 +77,16 @@ class Checkpointer:
         tmp = final + ".tmp"
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "arrays.npz"),
-                 **{k: v for k, v in flat})
+        arrays_path = os.path.join(tmp, "arrays.npz")
+        np.savez(arrays_path, **{k: v for k, v in flat})
         manifest = {
             "step": step,
             "keys": [k for k, _ in flat],
             "extra": extra,
+            # content digest: restore refuses a checkpoint whose bytes
+            # don't match what save() published (bit rot, torn copy)
+            "checksum": {"algo": CHECKSUM_ALGO,
+                         "digest": _file_digest(arrays_path)},
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
@@ -108,7 +124,23 @@ class Checkpointer:
         path = os.path.join(self.dir, f"step_{step:08d}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
-        data = np.load(os.path.join(path, "arrays.npz"))
+        arrays_path = os.path.join(path, "arrays.npz")
+        # verify content digest BEFORE deserializing (pre-checksum
+        # manifests — no "checksum" key — restore as before)
+        recorded = manifest.get("checksum")
+        if recorded is not None:
+            actual = _file_digest(arrays_path)
+            if actual != recorded["digest"]:
+                raise ValueError(
+                    f"corrupt checkpoint {arrays_path}: "
+                    f"{recorded['algo']} digest {actual} != recorded "
+                    f"{recorded['digest']}")
+        try:
+            data = np.load(arrays_path)
+        except Exception as e:
+            raise ValueError(
+                f"corrupt checkpoint {arrays_path}: unreadable npz "
+                f"({e})") from e
         flat, treedef = _flatten(target)
         sh_flat = (_flatten(shardings)[0] if shardings is not None
                    else [(k, None) for k, _ in flat])

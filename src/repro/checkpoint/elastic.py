@@ -22,10 +22,12 @@ from __future__ import annotations
 from typing import Any, Callable, Dict, Optional, Tuple
 
 from repro.checkpoint.checkpointer import Checkpointer
+from repro.resilience.faults import InjectedFault
 
 
-class SimulatedFailure(RuntimeError):
-    pass
+class SimulatedFailure(InjectedFault):
+    """Whole-process node death (the coarse fault class this module
+    recovers from; intra-run fault classes live in repro.resilience)."""
 
 
 class FailureInjector:
@@ -57,15 +59,24 @@ def run_with_restarts(
 
     Returns (final_state, restarts_used). `state` is any pytree; step 0's
     state comes from init_state() or the latest checkpoint if one exists.
+
+    A checkpoint that fails its content checksum (or is otherwise
+    unreadable) is not fatal: restore walks BACKWARD through the retained
+    steps until one verifies, and restarts from there — only if every
+    retained checkpoint is corrupt does the loop fall back to step 0.
     """
     restarts = 0
     while True:
-        latest = ckpt.latest_step()
-        if latest is None:
+        state, start = None, 0
+        for candidate in reversed(ckpt.all_steps()):
+            try:
+                state, _ = ckpt.restore(init_state(), step=candidate)
+                start = candidate
+                break
+            except ValueError:
+                continue  # corrupt/truncated: try the previous good one
+        if state is None:
             state, start = init_state(), 0
-        else:
-            state, _ = ckpt.restore(init_state(), step=latest)
-            start = latest
         try:
             for step in range(start, total_steps):
                 if injector is not None:

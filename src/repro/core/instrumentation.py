@@ -70,6 +70,10 @@ class OverheadReport:
     tokens_per_s: float = 0.0
     #: category -> fraction of traced wall (only when a tracer is attached)
     category_fractions: Optional[Dict[str, float]] = None
+    #: steps whose wall blew a deadline (repro.resilience detector)
+    flagged_steps: int = 0
+    #: steps whose output failed a health check (NaN logits etc.)
+    poisoned_steps: int = 0
 
     def lines(self) -> List[str]:
         out = [
@@ -90,6 +94,10 @@ class OverheadReport:
                 f"{k}={v * 100:.1f}%"
                 for k, v in sorted(self.category_fractions.items()) if v > 0)
             out.append(f"wall by category      : {cats}")
+        if self.flagged_steps or self.poisoned_steps:
+            out.append(f"faulted steps         : "
+                       f"{self.flagged_steps} past deadline, "
+                       f"{self.poisoned_steps} poisoned")
         return out
 
 
@@ -115,6 +123,10 @@ class OverheadProfiler:
         #: report carries the per-category decomposition of the same wall
         self.tracer = tracer
         self._dispatch: Optional[float] = None
+        #: step indices flagged by a deadline detector / health check
+        #: (serve.py feeds these; the report carries the counts)
+        self.flagged: List[int] = []
+        self.poisoned: List[int] = []
 
     def wrap(self, step_fn: Callable) -> Callable:
         def timed(*args, **kwargs):
@@ -182,4 +194,6 @@ class OverheadProfiler:
             sustained_flops_per_s=flops,
             tokens_per_s=tps,
             category_fractions=self._category_fractions(),
+            flagged_steps=len(self.flagged),
+            poisoned_steps=len(self.poisoned),
         )

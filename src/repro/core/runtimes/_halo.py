@@ -337,6 +337,39 @@ STRIDE_ASYNC_IMPLS = {
     "ppermute": _ppermute_stride_start,
 }
 
+#: kind -> the mutable transport registry behind it. This is the public
+#: seam for transport extensions: a TPU build registers "mosaic" starters,
+#: and the fault-injection layer (repro.resilience.faults) registers
+#: "chaos+<base>" wrappers that delegate to the base impl but consult the
+#: armed FaultPlan first — production impls and callers are untouched.
+TRANSPORT_REGISTRIES = {
+    "halo": HALO_ASYNC_IMPLS,
+    "stride": STRIDE_ASYNC_IMPLS,
+}
+
+
+def register_transport_impl(kind: str, name: str, start,
+                            *, replace: bool = False) -> None:
+    """Register a named transport starter in the ``kind`` registry.
+
+    ``start`` must follow the registry's starter signature (see
+    ``HALO_ASYNC_IMPLS`` / ``STRIDE_ASYNC_IMPLS``). Silent shadowing of a
+    production transport is refused unless ``replace=True`` — a chaos
+    wrapper accidentally registered as "xla" would corrupt every runtime
+    in the process.
+    """
+    try:
+        registry = TRANSPORT_REGISTRIES[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown transport registry {kind!r}; "
+            f"known {sorted(TRANSPORT_REGISTRIES)}") from None
+    if name in registry and not replace:
+        raise ValueError(
+            f"transport impl {name!r} already registered for {kind!r}; "
+            f"pass replace=True to shadow it deliberately")
+    registry[name] = start
+
 
 def exchange_stride_start(local: jax.Array, block_strides, num_devices: int,
                           axis: str = "shard", *, row_axis: int = 0,

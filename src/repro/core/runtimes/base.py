@@ -43,6 +43,60 @@ class TimingStats:
     dispatches: int  # host->device dispatch count for one graph execution
 
 
+@dataclasses.dataclass
+class EnsembleLaunchPlan:
+    """A host-steppable launch schedule for one ensemble run.
+
+    The resilience engine (repro.resilience.engine) needs host visibility
+    at launch boundaries — faults cannot be detected, retried, or replayed
+    inside one opaque XLA program — so runtimes that can expose their
+    launch structure build one of these instead of a single fused
+    executor. Every launch_fn call is a pure, deterministic function of
+    (carry, act row): replaying it from the pre-launch carry snapshot is
+    bit-identical, which is the recovery guarantee the chaos suite locks
+    in.
+
+    ``acts`` is the host (L, K, S) activity schedule (the PR 3 act-mask
+    machinery); the engine EDITS its own copy to evict a failed member
+    (zero the (K, S) slot from the eviction launch on) or re-admit a
+    fresh one into a freed slot.
+    """
+
+    #: lockstep timesteps advanced per launch (the blocked cadence)
+    steps_per_launch: int
+    #: each member's own horizon T_k (eviction reports freeze points
+    #: against these)
+    member_steps: Tuple[int, ...]
+    #: (L, K, S) float32 per-depth activity masks, host-side
+    acts: np.ndarray
+    #: per-member initial states (sequence) -> device carry (the t=0
+    #: body-only launch)
+    init_fn: Callable[[Sequence[jax.Array]], Any]
+    #: (carry, act_row (K, S) device array, t0 int32 scalar array) ->
+    #: next carry; t0 is the launch's first lockstep timestep (ignored by
+    #: schedules with time-invariant tables)
+    launch_fn: Callable[[Any, jax.Array, jax.Array], Any]
+    #: carry -> tuple of per-member (W_k, P_k) final states
+    finalize: Callable[[Any], Tuple[jax.Array, ...]]
+    #: (carry, slot, init state) -> carry with the slot's rows replaced by
+    #: the fresh member's post-t0 state (re-admission); None when the
+    #: schedule cannot replace rows in place
+    admit_fn: Optional[Callable[[Any, int, jax.Array], Any]] = None
+    #: measured-model expected per-launch wall (deadline basis); None when
+    #: the cost model cannot price absolute walls
+    expected_launch_us: Optional[float] = None
+    #: descriptive schedule kind ("stacked" / "stepwise")
+    kind: str = ""
+
+    @property
+    def num_launches(self) -> int:
+        return int(self.acts.shape[0])
+
+    def launch_t0(self, launch: int) -> int:
+        """First lockstep timestep executed by launch ``launch``."""
+        return 1 + launch * self.steps_per_launch
+
+
 class Runtime(abc.ABC):
     """Executes task graphs under one scheduling/communication strategy."""
 
@@ -146,6 +200,43 @@ class Runtime(abc.ABC):
         outs = fn(tuple(_fresh(x) for x in inits))
         outs = jax.block_until_ready(outs)
         return tuple(np.asarray(o) for o in outs)
+
+    # -- resilience --------------------------------------------------------
+
+    def build_ensemble_launches(
+        self, ensemble: GraphEnsemble
+    ) -> EnsembleLaunchPlan:
+        """A host-steppable launch schedule for resilient execution.
+
+        Backends whose whole run is one opaque XLA program cannot expose
+        launch boundaries — fault recovery for them is whole-run restart
+        (checkpoint/elastic.py). pallas_step overrides this with its real
+        blocked-launch structure.
+        """
+        raise NotImplementedError(
+            f"runtime {self.name} has no launch-granular schedule; "
+            f"resilient execution needs pallas_step (or whole-run restart "
+            f"via checkpoint.elastic.run_with_restarts)")
+
+    def execute_ensemble_resilient(
+        self,
+        ensemble: GraphEnsemble,
+        *,
+        plan=None,
+        policy=None,
+    ):
+        """Run the ensemble under the resilience engine.
+
+        ``plan`` is a repro.resilience FaultPlan (None = no injection; the
+        engine's per-launch hook is a single predicate check, so the
+        no-fault path adds no work beyond the host-stepped dispatch).
+        Returns a repro.resilience.ResilientResult whose ``outputs`` match
+        ``execute_ensemble``.
+        """
+        from repro.resilience import run_resilient
+
+        self._require_ensemble_support(ensemble)
+        return run_resilient(self, ensemble, plan=plan, policy=policy)
 
     # -- tracing -----------------------------------------------------------
 

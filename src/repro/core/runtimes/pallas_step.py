@@ -109,7 +109,7 @@ from repro.compat import shard_map
 from repro.core import patterns as _patterns
 from repro.core.graph import GraphEnsemble, TaskGraph
 from repro.core.runtimes import _halo
-from repro.core.runtimes.base import register
+from repro.core.runtimes.base import EnsembleLaunchPlan, register
 from repro.core.runtimes.bsp import AXIS, _BspBase
 from repro.core.task_kernels import KernelSpec
 from repro.kernels import ops as _kops
@@ -1466,6 +1466,207 @@ class PallasStepRuntime(_BspBase):
         acts_dev = jax.device_put(jnp.asarray(acts), rep)
         return lambda inits: fn(
             tuple(jax.device_put(x, sh) for x in inits), consts, acts_dev
+        )
+
+    # ----------------------------------------------------------- resilience
+
+    def build_ensemble_launches(
+        self, ensemble: GraphEnsemble
+    ) -> EnsembleLaunchPlan:
+        """Expose the ensemble's real launch structure for the resilience
+        engine (base.EnsembleLaunchPlan): stacked halo ensembles keep
+        their blocked cadence with the SERIAL exchange schedule (launch
+        boundaries must be host-visible, and the serial schedule is
+        bit-identical to the pipelined one — tests lock that in), mixed
+        ensembles run the tuple step fns at per-step cadence. Either way
+        each launch is one pure jitted function of (carry, act row), so
+        replay-from-snapshot is bit-identical by construction."""
+        self._require_ensemble_support(ensemble)
+        if self._is_stacked(ensemble):
+            return self._launch_plan_stacked(
+                ensemble, self._ensemble_steps_per_launch(ensemble))
+        return self._launch_plan_stepwise(ensemble)
+
+    def _launch_plan_stacked(
+        self, ensemble: GraphEnsemble, S: int
+    ) -> EnsembleLaunchPlan:
+        """Host-stepped twin of _build_ensemble_stacked[_blocked]: same
+        kernels, same operands, same act predicate — the scan is simply
+        unrolled to the host so the engine owns the launch loop."""
+        members = ensemble.members
+        K = len(members)
+        mesh = self._mesh()
+        D = len(self.devices)
+        B = self._block(members[0])
+        H = max(_patterns.halo_radius(g) for g in members)
+        depth = S * H
+        mode = self._combine_mode()
+        kw0 = self._kernel_kw(members[0].kernel)
+        steps = ensemble.steps
+        acts = _act_schedule(ensemble.member_steps, steps, S)  # (L, K, S)
+
+        if S > 1:
+            kwb = dict(kw0, steps_per_launch=S)
+            kwb.pop("block_rows", None)
+            ops4 = [self._blocked_operands(g, H) for g in members]
+        else:
+            ops4 = [self._operands(g, H) for g in members]
+        idx, wgt, idx0, wgt0 = _stack_operands(ops4)
+
+        def t0_local(local, i0, w0):  # (K, B, P)
+            return _kops.taskbench_step(local, i0, w0, **kw0)
+
+        def launch_local(s, i, w, a):  # a: (K, S) replicated
+            if S > 1:
+                iext, wext = _extend_tables(i, w, depth, D, mode, row_axis=1)
+                ext = _extend_state(s, depth, D, row_axis=1)
+                nf = _kops.taskbench_step(ext, iext, wext, a, **kwb)
+                return jax.lax.slice_in_dim(nf, depth, depth + B, axis=1)
+            nxt = _kops.taskbench_step(
+                _extend_state(s, H, D, row_axis=1), i, w, **kw0)
+            # per-member freeze: same predicate the stacked scan applies
+            # (act row at S=1 is exactly t < T_k)
+            return jnp.where(a[:, 0][:, None, None] > 0, nxt, s)
+
+        def admit_local(s, init, i0, w0, slot):  # init: (1, B, P)
+            t0 = _kops.taskbench_step(init, i0[:1], w0[:1], **kw0)
+            return jax.lax.dynamic_update_slice_in_dim(s, t0, slot, axis=0)
+
+        sh = NamedSharding(mesh, P(None, AXIS))
+        rep = NamedSharding(mesh, P())
+        t0_fn = jax.jit(shard_map(
+            t0_local, mesh=mesh, check_vma=False,
+            in_specs=(P(None, AXIS),) * 3, out_specs=P(None, AXIS)))
+        launch = jax.jit(shard_map(
+            launch_local, mesh=mesh, check_vma=False,
+            in_specs=(P(None, AXIS),) * 3 + (P(),), out_specs=P(None, AXIS)))
+        admit = jax.jit(shard_map(
+            admit_local, mesh=mesh, check_vma=False,
+            in_specs=(P(None, AXIS),) * 4 + (P(),), out_specs=P(None, AXIS)))
+        consts = tuple(
+            jax.device_put(jnp.asarray(a), sh) for a in (idx, wgt, idx0, wgt0))
+
+        def init_fn(inits):
+            return t0_fn(jax.device_put(jnp.stack(inits), sh),
+                         consts[2], consts[3])
+
+        def launch_fn(carry, act_row, t0):
+            del t0  # stacked halo tables are time-invariant
+            return launch(carry, consts[0], consts[1],
+                          jax.device_put(act_row, rep))
+
+        def admit_fn(carry, slot, init):
+            return admit(carry, jax.device_put(init[None], sh),
+                         consts[2], consts[3],
+                         jnp.asarray(slot, jnp.int32))
+
+        model = self._cost_model(members[0].payload)
+        return EnsembleLaunchPlan(
+            steps_per_launch=S,
+            member_steps=tuple(ensemble.member_steps),
+            acts=acts,
+            init_fn=init_fn,
+            launch_fn=launch_fn,
+            finalize=lambda carry: tuple(carry[k] for k in range(K)),
+            admit_fn=admit_fn,
+            expected_launch_us=_schedule.expected_launch_wall_us(
+                rows=K * B, steps_per_launch=S, model=model,
+                impl=self._halo_impl()),
+            kind="stacked",
+        )
+
+    def _launch_plan_stepwise(
+        self, ensemble: GraphEnsemble
+    ) -> EnsembleLaunchPlan:
+        """Per-step cadence for mixed-plan/heterogeneous ensembles: the
+        tuple path's (t0, step) fns with the launch loop on the host and
+        the freeze predicate driven by the act schedule (so eviction is
+        the same mask edit as the stacked plan)."""
+        members = ensemble.members
+        mesh = self._mesh()
+        D = len(self.devices)
+        steps = ensemble.steps
+        plans = [self.plan_for(g)[0] for g in members]
+        acts = _act_schedule(ensemble.member_steps, steps, 1)  # (L, K, 1)
+        ops4: List[tuple] = []
+        t0_fns: List[Callable] = []
+        step_fns: List[Callable] = []
+        for g, plan in zip(members, plans):
+            if plan == PLAN_HALO:
+                H = _patterns.halo_radius(g)
+                kw = self._kernel_kw(g.kernel)
+                ops4.append(self._operands(g, H))
+
+                def t0(s, o, kw=kw):
+                    return _kops.taskbench_step(
+                        s[None], o[2][None], o[3][None], **kw)[0]
+
+                def step(s, o, t, H=H, kw=kw):
+                    ext = _extend_state(s, H, D)
+                    return _kops.taskbench_step(
+                        ext[None], o[0][None], o[1][None], **kw)[0]
+            else:
+                ops4.append(())
+                t0, step = self._plan_step_fns(g, plan)
+            t0_fns.append(t0)
+            step_fns.append(step)
+
+        def t0_all(states, operands):
+            return tuple(
+                f(s, o) for f, s, o in zip(t0_fns, states, operands))
+
+        def step_all(states, operands, t, act):  # act: (K, 1) replicated
+            nxt = []
+            for k, (s, o) in enumerate(zip(states, operands)):
+                n = step_fns[k](s, o, t)
+                nxt.append(jnp.where(act[k, 0] > 0, n, s))
+            return tuple(nxt)
+
+        sh = NamedSharding(mesh, P(AXIS))
+        rep = NamedSharding(mesh, P())
+        t0_jit = jax.jit(shard_map(
+            t0_all, mesh=mesh, check_vma=False,
+            in_specs=(P(AXIS), P(AXIS)), out_specs=P(AXIS)))
+        step_jit = jax.jit(shard_map(
+            step_all, mesh=mesh, check_vma=False,
+            in_specs=(P(AXIS), P(AXIS), P(), P()), out_specs=P(AXIS)))
+        consts = tuple(
+            tuple(jax.device_put(jnp.asarray(a), sh) for a in o) for o in ops4)
+        admit_jits: dict = {}
+
+        def init_fn(inits):
+            return t0_jit(
+                tuple(jax.device_put(x, sh) for x in inits), consts)
+
+        def launch_fn(carry, act_row, t0):
+            return step_jit(carry, consts, jnp.asarray(t0, jnp.int32),
+                            jax.device_put(act_row, rep))
+
+        def admit_fn(carry, slot, init):
+            if slot not in admit_jits:
+                f = t0_fns[slot]
+                admit_jits[slot] = jax.jit(shard_map(
+                    lambda s, o, f=f: f(s, o), mesh=mesh, check_vma=False,
+                    in_specs=(P(AXIS), P(AXIS)), out_specs=P(AXIS)))
+            fresh = admit_jits[slot](jax.device_put(init, sh), consts[slot])
+            out = list(carry)
+            out[slot] = fresh
+            return tuple(out)
+
+        model = self._cost_model(members[0].payload)
+        rows = sum(self._block(g) for g in members)
+        return EnsembleLaunchPlan(
+            steps_per_launch=1,
+            member_steps=tuple(ensemble.member_steps),
+            acts=acts,
+            init_fn=init_fn,
+            launch_fn=launch_fn,
+            finalize=lambda carry: tuple(carry),
+            admit_fn=admit_fn,
+            expected_launch_us=_schedule.expected_launch_wall_us(
+                rows=rows, steps_per_launch=1, model=model,
+                impl=self._halo_impl()),
+            kind="stepwise",
         )
 
     # ----------------------------------------------------------- accounting

@@ -514,3 +514,62 @@ def gathered_beats_strides(
         f"replication={width - block} rows x "
         f"{model.row_step_us:.3f}us)")
     return verdict, reason
+
+
+# --------------------------------------------------------------- deadlines
+
+#: deadline = DEADLINE_FACTOR x the model's expected launch wall. Generous
+#: on purpose: a missed straggler costs one late launch, a false positive
+#: flags healthy work — and the resilience engine only *reports* deadline
+#: hits, so the factor bounds noise tolerance, not correctness.
+DEADLINE_FACTOR = 8.0
+
+
+def expected_launch_wall_us(
+    *,
+    rows: int,
+    steps_per_launch: int,
+    model=None,
+    impl: str = "xla",
+    gather_width: Optional[int] = None,
+) -> Optional[float]:
+    """The cost model's expected wall of ONE blocked launch, in us.
+
+    ``rows`` is the per-device working-row count (K x block for a stacked
+    ensemble). Priced as launch dispatch + rows x S row-steps + one
+    transport (a deep halo exchange, or a full-state gather when
+    ``gather_width`` names the allgather plan's width). Only a MEASURED
+    model carries absolute walls — analytic/env models return None and
+    the caller self-calibrates from observed walls instead
+    (resilience.detect.DeadlineDetector's fallback)."""
+    model = _resolve_model(model)
+    launch_us = getattr(model, "launch_us", None)
+    row_step_us = getattr(model, "row_step_us", None)
+    if launch_us is None or row_step_us is None:
+        return None
+    us = launch_us + rows * max(1, steps_per_launch) * row_step_us
+    if gather_width is not None:
+        g = model.gather_us_at(gather_width)
+        if g is not None:
+            us += g
+    elif model.halo_exchange_us:
+        us += model.halo_exchange_us.get(
+            impl, min(model.halo_exchange_us.values()))
+    return us
+
+
+def launch_deadline_us(
+    *,
+    rows: int,
+    steps_per_launch: int,
+    model=None,
+    impl: str = "xla",
+    gather_width: Optional[int] = None,
+    factor: float = DEADLINE_FACTOR,
+) -> Optional[float]:
+    """``factor`` x the expected launch wall — the straggler deadline, or
+    None when the model cannot price one (see expected_launch_wall_us)."""
+    expected = expected_launch_wall_us(
+        rows=rows, steps_per_launch=steps_per_launch, model=model,
+        impl=impl, gather_width=gather_width)
+    return None if expected is None else factor * expected

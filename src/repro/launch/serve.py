@@ -39,6 +39,16 @@ class ServeResult:
     decode_s: float
     tokens_per_s: float
     report: Optional[Any]
+    #: decode steps whose wall blew the self-calibrated deadline
+    #: (repro.resilience.DeadlineDetector): [{step, wall_us, deadline_us,
+    #: overshoot_us}] — a stalled step is REPORTED, never silently absorbed
+    flagged_steps: List[dict] = dataclasses.field(default_factory=list)
+    #: decode steps whose logits carried NaN/Inf (poisoned output)
+    poisoned_steps: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def healthy(self) -> bool:
+        return not self.flagged_steps and not self.poisoned_steps
 
 
 def serve(
@@ -52,6 +62,7 @@ def serve(
     greedy: bool = True,
     temperature: float = 1.0,
     verbose: bool = True,
+    deadline_factor: Optional[float] = None,
 ) -> ServeResult:
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
@@ -107,18 +118,30 @@ def serve(
                 b = {"embeds": 0.02 * jax.random.normal(
                     key, (tok.shape[0], 1, cfg.d_model))}
             lg, caches = model.decode_step(params, b, lengths, caches)
+            # one fused scalar: argmax of poisoned logits still yields a
+            # legal token id, so health must be read off the logits
+            bad = ~jnp.isfinite(lg).all()
             if greedy:
                 nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
             else:
                 nxt = jax.random.categorical(key, lg / temperature, axis=-1
                                              ).astype(jnp.int32)
-            return nxt[:, None], caches
+            return nxt[:, None], caches, bad
 
     profiler = OverheadProfiler(
         devices=mesh.size if mesh is not None else 1,
         tasks_per_step=batch,  # one "task" = one sequence's token step
         tokens_per_step=batch,  # each decode step emits one token per seq
     )
+    # deadline detector around each decode step: no cost model prices a
+    # decode step, so it self-calibrates from the run's own clean walls
+    # (step 0 carries the compile and is inside the warmup window)
+    from repro.resilience import DEFAULT_DEADLINE_FACTOR, DeadlineDetector
+
+    detector = DeadlineDetector(
+        factor=deadline_factor or DEFAULT_DEADLINE_FACTOR)
+    flagged: List[dict] = []
+    poisoned: List[int] = []
     lengths = jnp.full((batch,), prompt_len, jnp.int32)
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
     out: List[np.ndarray] = [np.asarray(tok)]
@@ -126,9 +149,19 @@ def serve(
     for i in range(gen - 1):
         key, sub = jax.random.split(key)
         t1 = time.perf_counter()
-        tok, caches = decode(params, tok, lengths, caches, sub)
+        tok, caches, bad = decode(params, tok, lengths, caches, sub)
         tok = jax.block_until_ready(tok)
-        profiler.record(time.perf_counter() - t1)
+        wall = time.perf_counter() - t1
+        profiler.record(wall)
+        det = detector.observe(wall * 1e6)
+        if det is not None:
+            flagged.append({"step": i, "wall_us": det.wall_us,
+                            "deadline_us": det.deadline_us,
+                            "overshoot_us": det.overshoot_us})
+            profiler.flagged.append(i)
+        if bool(bad):
+            poisoned.append(i)
+            profiler.poisoned.append(i)
         lengths = lengths + 1
         out.append(np.asarray(tok))
     decode_s = time.perf_counter() - t0
@@ -147,12 +180,19 @@ def serve(
             print("\n-- per-token overhead (paper methodology, §3) --")
             for line in report.lines():
                 print("  " + line)
+        for f in flagged:
+            print(f"WARNING: decode step {f['step']} blew its deadline: "
+                  f"{f['wall_us']:.0f}us > {f['deadline_us']:.0f}us")
+        for i in poisoned:
+            print(f"WARNING: decode step {i} produced non-finite logits")
     return ServeResult(
         tokens=tokens,
         prefill_s=prefill_s,
         decode_s=decode_s,
         tokens_per_s=batch * (gen - 1) / decode_s if decode_s > 0 else 0.0,
         report=report,
+        flagged_steps=flagged,
+        poisoned_steps=poisoned,
     )
 
 

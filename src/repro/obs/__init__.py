@@ -24,6 +24,7 @@ from repro.obs.export import (
 )
 from repro.obs.tracer import (
     CAT_DECISION,
+    CAT_FAULT,
     CAT_LAUNCH,
     CATEGORIES,
     NULL_TRACER,
@@ -34,7 +35,8 @@ from repro.obs.tracer import (
 )
 
 __all__ = [
-    "CATEGORIES", "CAT_DECISION", "CAT_LAUNCH", "NULL_TRACER", "NullTracer",
+    "CATEGORIES", "CAT_DECISION", "CAT_FAULT", "CAT_LAUNCH",
+    "NULL_TRACER", "NullTracer",
     "Span", "Tracer", "coerce_tracer",
     "TRACE_SCHEMA_VERSION", "span_dicts", "to_chrome_trace",
     "write_chrome_trace", "write_jsonl",

@@ -11,6 +11,10 @@ a category tag from the fixed taxonomy:
   compute.boundary   the pipelined boundary phase (2*S*r edge rows)
   compute.interior   interior / whole-block kernel walls
   gather             full-state all-gather walls (the allgather plan)
+  fault              fault handling: detection, retry/backoff sleeps, launch
+                     replays, evictions (repro.resilience) — the recovery
+                     tax, attributed like any other wall so a faulted run's
+                     decomposition shows exactly where recovery spent time
   idle               wall not covered by any recorded span (derived by
                      decompose.py, but recordable explicitly too)
 
@@ -41,8 +45,12 @@ CATEGORIES = (
     "compute.boundary",
     "compute.interior",
     "gather",
+    "fault",
     "idle",
 )
+
+#: Wall category for fault detection/recovery work (repro.resilience).
+CAT_FAULT = "fault"
 
 #: Composite interval: one pipelined launch, phases fused in-program.
 CAT_LAUNCH = "launch"

@@ -1,0 +1,114 @@
+"""Property-based chaos suite: ANY seeded fault plan recovers exactly.
+
+The fuzzed form of the PR-8 acceptance criterion, built on the same
+optional-hypothesis conftest stub as test_property_equivalence.py: for any
+(pattern x steps_per_launch x fault classes x plan seed) drawn by
+hypothesis, the resilient executor must reproduce the fault-free run bit
+for bit — transport retries and launch replays exactly, and member
+eviction exactly against the truncated-steps hetero-ensemble oracle
+(survivors are never perturbed; the dead member's rows are precisely the
+masked rows the act-schedule machinery produces for a member of the
+frozen length).
+
+Shapes stay small: every drawn case compiles its launch plan, and member
+cases compile the oracle ensemble too.
+"""
+import dataclasses
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GraphEnsemble, KernelSpec, TaskGraph, get_runtime
+from repro.resilience import (
+    FAULT_LAUNCH,
+    FAULT_MEMBER,
+    FAULT_STRAGGLER,
+    FAULT_TRANSPORT,
+    FaultPlan,
+    run_resilient,
+)
+
+WIDTH = 8
+#: one representative per plan kind: halo (stacked), stride + allgather
+#: (stepwise) — the two resilient launch-plan builders
+PATTERNS = ("stencil_1d", "tree", "all_to_all")
+S_VALUES = (1, 4)
+MEMBER_STEPS = ((13, 9), (10, 10), (7, 12))
+
+
+def _graph(pattern: str, steps: int, seed: int) -> TaskGraph:
+    return TaskGraph(steps=steps, width=WIDTH, payload=16, pattern=pattern,
+                     radius=1, kernel=KernelSpec("compute_bound", 4),
+                     seed=seed)
+
+
+chaos_cases = st.tuples(
+    st.sampled_from(PATTERNS),
+    st.sampled_from(S_VALUES),
+    st.sampled_from(MEMBER_STEPS),
+    st.sampled_from([
+        (FAULT_TRANSPORT,),
+        (FAULT_LAUNCH,),
+        (FAULT_TRANSPORT, FAULT_LAUNCH, FAULT_STRAGGLER),
+    ]),
+    st.integers(min_value=0, max_value=10),  # plan seed
+)
+
+
+@settings(max_examples=12, deadline=None, derandomize=True)
+@given(chaos_cases)
+def test_property_replayed_faults_recover_bit_identical(case):
+    """Transport/launch/straggler plans never change a single bit."""
+    pattern, s, member_steps, kinds, seed = case
+    ens = GraphEnsemble(tuple(
+        _graph(pattern, t, k) for k, t in enumerate(member_steps)))
+    rt = get_runtime("pallas_step", steps_per_launch=s)
+    want = [np.asarray(o) for o in rt.execute_ensemble(ens)]
+    lp = rt.build_ensemble_launches(ens)
+    plan = FaultPlan.random(seed, num_launches=lp.num_launches,
+                            num_members=len(member_steps), rate=0.5,
+                            kinds=kinds, straggler_delay_s=0.001)
+    res = run_resilient(rt, ens, plan=plan)
+    for k, (got, ref) in enumerate(zip(res.outputs, want)):
+        assert np.array_equal(got, ref), (
+            f"member {k} diverged under {plan.describe()} "
+            f"({pattern}, S={s})")
+    assert not res.evicted
+
+
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(st.tuples(
+    st.sampled_from(PATTERNS),
+    st.sampled_from(S_VALUES),
+    st.integers(min_value=0, max_value=10),
+))
+def test_property_eviction_is_exactly_the_masked_rows(case):
+    """Member-death plans: survivors bit-identical to the clean run, the
+    evicted member bit-identical to a clean run truncated at the frozen
+    step — i.e. the eviction's masked rows, nothing more or less."""
+    pattern, s, seed = case
+    members = (_graph(pattern, 13, 0), _graph(pattern, 9, 1))
+    ens = GraphEnsemble(members)
+    rt = get_runtime("pallas_step", steps_per_launch=s)
+    want = [np.asarray(o) for o in rt.execute_ensemble(ens)]
+    lp = rt.build_ensemble_launches(ens)
+    plan = FaultPlan.random(seed, num_launches=lp.num_launches,
+                            num_members=2, rate=0.5, kinds=(FAULT_MEMBER,))
+    res = run_resilient(rt, ens, plan=plan)
+    if not res.evicted:
+        for got, ref in zip(res.outputs, want):
+            assert np.array_equal(got, ref)
+        return
+    oracle_members = tuple(
+        dataclasses.replace(g, steps=res.evicted[k])
+        if k in res.evicted else g
+        for k, g in enumerate(members))
+    oracle = rt.execute_ensemble(GraphEnsemble(oracle_members))
+    for k, (got, ref) in enumerate(zip(res.outputs, oracle)):
+        assert np.array_equal(got, np.asarray(ref)), (
+            f"member {k} (evicted={sorted(res.evicted)}) diverged under "
+            f"{plan.describe()} ({pattern}, S={s})")
+    for k in range(2):
+        if k not in res.evicted:
+            assert np.array_equal(res.outputs[k], want[k]), (
+                f"survivor {k} perturbed by eviction")

@@ -229,3 +229,109 @@ def test_pipeline_modality_extras():
     p2 = SyntheticTokenPipeline(cfg2, shape, batch_override=2, seq_override=8)
     b2 = p2.batch_at(0)
     assert b2["embeds"].shape == (2, 8, cfg2.d_model)
+
+
+# ------------------------------------------------ content checksums (PR 8)
+
+
+def test_manifest_records_content_checksum(tmp_path):
+    import json
+
+    ckpt = Checkpointer(str(tmp_path))
+    path = ckpt.save(1, tree())
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["checksum"]["algo"] == "sha256"
+    assert len(manifest["checksum"]["digest"]) == 64
+
+
+def test_restore_rejects_corrupt_checkpoint_loudly(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    t = tree()
+    path = ckpt.save(1, t)
+    npz = os.path.join(path, "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.seek(30)
+        f.write(b"\xde\xad\xbe\xef")
+    with pytest.raises(ValueError) as exc:
+        ckpt.restore(t, step=1)
+    # the error names the file and both digests — debuggable from the log
+    msg = str(exc.value)
+    assert "arrays.npz" in msg and "sha256" in msg and "!=" in msg
+
+
+def test_restore_rejects_truncated_checkpoint(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    t = tree()
+    path = ckpt.save(1, t)
+    npz = os.path.join(path, "arrays.npz")
+    size = os.path.getsize(npz)
+    with open(npz, "r+b") as f:
+        f.truncate(size // 2)
+    with pytest.raises(ValueError, match="corrupt checkpoint"):
+        ckpt.restore(t, step=1)
+
+
+def test_restore_accepts_pre_checksum_manifest(tmp_path):
+    import json
+
+    ckpt = Checkpointer(str(tmp_path))
+    t = tree()
+    path = ckpt.save(1, t)
+    mpath = os.path.join(path, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    del manifest["checksum"]  # a checkpoint written before PR 8
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    restored, _ = ckpt.restore(t, step=1)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(t["a"]))
+
+
+def test_run_with_restarts_falls_back_past_corrupt_checkpoint(tmp_path):
+    """Corrupting the LATEST checkpoint mid-run must not kill the job: the
+    restart walks back to the previous good checkpoint and the final state
+    is still bit-identical to an uninterrupted run."""
+
+    def init_state():
+        return {"x": jnp.zeros((4,)), "step_sum": jnp.float32(0)}
+
+    def step_fn(state, step):
+        return {"x": state["x"] + step,
+                "step_sum": state["step_sum"] + step * 0.5}
+
+    ckpt = Checkpointer(str(tmp_path / "a"), keep=0)
+
+    class CorruptingInjector(FailureInjector):
+        def maybe_fail(self, step):
+            if step == 13 and 13 not in self.fired:
+                # chew the newest checkpoint right before dying
+                latest = ckpt.latest_step()
+                npz = os.path.join(ckpt.dir, f"step_{latest:08d}",
+                                   "arrays.npz")
+                with open(npz, "r+b") as f:
+                    f.seek(40)
+                    f.write(b"\x00\x00\x00\x00")
+            super().maybe_fail(step)
+
+    final_a, restarts = run_with_restarts(
+        total_steps=17, ckpt=ckpt, ckpt_every=5, init_state=init_state,
+        step_fn=step_fn, injector=CorruptingInjector((13,)),
+    )
+    assert restarts == 1
+    ckpt_b = Checkpointer(str(tmp_path / "b"))
+    final_b, _ = run_with_restarts(
+        total_steps=17, ckpt=ckpt_b, ckpt_every=5, init_state=init_state,
+        step_fn=step_fn,
+    )
+    np.testing.assert_array_equal(np.asarray(final_a["x"]),
+                                  np.asarray(final_b["x"]))
+    np.testing.assert_array_equal(np.asarray(final_a["step_sum"]),
+                                  np.asarray(final_b["step_sum"]))
+
+
+def test_simulated_failure_is_an_injected_fault():
+    from repro.resilience import InjectedFault
+
+    assert issubclass(SimulatedFailure, InjectedFault)

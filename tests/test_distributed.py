@@ -559,3 +559,40 @@ def test_hierarchical_multipod_train_reduced():
         assert np.isfinite(res.final_loss)
         print("OK", res.final_loss)
     """, devices=8)
+
+
+def test_resilient_ensemble_recovery_on_4_devices():
+    """The PR-8 acceptance criterion at real (forced-host) device count:
+    every fault class injected into the resilient executor on a 4-device
+    mesh recovers bit-identically — transport/launch/straggler against the
+    clean run, member death against the truncated-steps oracle."""
+    run_sub("""
+        import dataclasses, numpy as np
+        from repro.core import GraphEnsemble, KernelSpec, TaskGraph, \\
+            get_runtime
+        from repro.resilience import (FaultPlan, FaultSpec, run_resilient)
+
+        def mk(steps, seed):
+            return TaskGraph(steps=steps, width=16, pattern="stencil_1d",
+                             payload=16, radius=1, seed=seed,
+                             kernel=KernelSpec("compute_bound", 4))
+
+        ens = GraphEnsemble((mk(13, 0), mk(9, 1)))
+        rt = get_runtime("pallas_step", steps_per_launch=4)
+        clean = [np.asarray(o) for o in rt.execute_ensemble(ens)]
+        for spec in [FaultSpec("transport", 1, times=2),
+                     FaultSpec("launch", 1, mode="raise"),
+                     FaultSpec("launch", 2, mode="poison"),
+                     FaultSpec("straggler", 1, delay_s=0.001)]:
+            res = run_resilient(rt, ens, plan=FaultPlan((spec,)))
+            for got, ref in zip(res.outputs, clean):
+                assert np.array_equal(got, ref), spec
+        res = run_resilient(
+            rt, ens, plan=FaultPlan((FaultSpec("member", 1, member=1),)))
+        frozen = res.evicted[1]
+        oracle = rt.execute_ensemble(GraphEnsemble(
+            (mk(13, 0), dataclasses.replace(mk(9, 1), steps=frozen))))
+        for got, ref in zip(res.outputs, oracle):
+            assert np.array_equal(got, np.asarray(ref))
+        print("OK frozen@", frozen)
+    """, devices=4)

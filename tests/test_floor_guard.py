@@ -155,3 +155,88 @@ def test_cost_model_garbage_fails():
     assert any("no entries" in f
                for f in run(current(), baseline(),
                             cost_model={"schema": 1, "entries": {}}))
+
+
+# ------------------------------------------------- chaos leg (resilience)
+
+
+def chaos_art(*, identical=True, tax=1.2, armor=1.3, schema=1):
+    def cls(name, bit):
+        return {"rows": 2, "max_recovery_tax": tax, "bit_identical": bit,
+                "total_retries": 3, "total_replays": 1}
+
+    return {
+        "schema": schema,
+        "rows": [{"fault": "transport", "bit_identical": identical}],
+        "verdict": {
+            "recovery_bit_identical": identical,
+            "max_armor_tax": armor,
+            "max_hook_tax": 1.02,
+            "per_class": {"transport": cls("transport", identical),
+                          "launch": cls("launch", identical),
+                          "straggler": {"rows": 1, "max_recovery_tax": 3.2,
+                                        "bit_identical": identical}},
+            "devices_proven": [1, 4] if identical else [],
+        },
+    }
+
+
+def run_chaos(art, max_recovery_tax=2.5, max_armor_tax=3.0):
+    return fg.check(current(), baseline(), 2.0, 1.05,
+                    chaos_art=art, max_recovery_tax=max_recovery_tax,
+                    max_armor_tax=max_armor_tax)
+
+
+def test_chaos_healthy_artifact_passes():
+    assert run_chaos(chaos_art()) == []
+
+
+def test_chaos_tax_regression_alone_warns(capsys):
+    # two-signal rule: 4x recovery tax with bit-identity intact is a WARN
+    assert run_chaos(chaos_art(tax=4.0)) == []
+    assert "SLOW-RUNNER?" in capsys.readouterr().out
+
+
+def test_chaos_tax_regression_with_identity_loss_fails():
+    failures = run_chaos(chaos_art(identical=False, tax=4.0))
+    assert any("chaos@tax" in f and "health signal collapsed" in f
+               for f in failures)
+
+
+def test_chaos_identity_loss_alone_fails():
+    failures = run_chaos(chaos_art(identical=False))
+    assert any("chaos@identity" in f and "NOT bit-identical" in f
+               for f in failures)
+
+
+def test_chaos_straggler_tax_is_not_judged(capsys):
+    # the straggler row's tax is a deliberate stall, never a regression
+    assert run_chaos(chaos_art()) == []
+    assert "chaos@tax:straggler" not in capsys.readouterr().out
+
+
+def test_chaos_schema_drift_fails():
+    failures = run_chaos(chaos_art(schema=99))
+    assert any("chaos@schema" in f for f in failures)
+
+
+def test_chaos_armor_tax_regression_warns_not_fails(capsys):
+    assert run_chaos(chaos_art(armor=5.0)) == []
+    assert "chaos@armor" in capsys.readouterr().out
+
+
+def test_real_chaos_artifact_if_present():
+    """The committed/CI chaos.json (when one exists locally) must satisfy
+    its own guard — catches schema drift between chaos.py and the leg."""
+    import json
+
+    path = pathlib.Path(__file__).resolve().parents[1] / \
+        "artifacts/bench/chaos.json"
+    if not path.exists():
+        import pytest
+
+        pytest.skip("no local chaos artifact")
+    with open(path) as f:
+        art = json.load(f)
+    failures = run_chaos(art, max_recovery_tax=1e9, max_armor_tax=1e9)
+    assert failures == []

@@ -124,3 +124,52 @@ def test_dryrun_skip_cell_logic():
     assert ("gemma3-4b", "long_500k") not in skips
     assert ("hymba-1.5b", "long_500k") not in skips
     assert ("mixtral-8x7b", "long_500k") not in skips
+
+
+def test_serve_reports_clean_run_healthy():
+    cfg = get_config("stablelm-3b").reduced()
+    res = serve(cfg, batch=2, prompt_len=8, gen=6, verbose=False)
+    assert res.healthy
+    assert res.flagged_steps == [] and res.poisoned_steps == []
+    assert res.report.flagged_steps == 0 and res.report.poisoned_steps == 0
+
+
+def test_serve_deadline_detector_flags_stalled_step(monkeypatch):
+    """A decode step stalling past factor x the observed median must land
+    in ServeResult.flagged_steps (and the profiler report), not vanish
+    into the wall."""
+    import time as time_mod
+
+    from repro.launch import serve as serve_mod
+
+    cfg = get_config("stablelm-3b").reduced()
+    real_block = serve_mod.jax.block_until_ready
+    calls = {"n": 0}
+
+    def stalling_block(x):
+        calls["n"] += 1
+        # decode calls block_until_ready once per step (prefill earlier):
+        # stall one late step, after the detector's warmup window
+        if calls["n"] == 9:
+            time_mod.sleep(0.25)
+        return real_block(x)
+
+    monkeypatch.setattr(serve_mod.jax, "block_until_ready", stalling_block)
+    res = serve(cfg, batch=2, prompt_len=8, gen=12, verbose=False)
+    assert len(res.flagged_steps) >= 1
+    f = res.flagged_steps[0]
+    assert f["wall_us"] > f["deadline_us"] > 0
+    assert f["overshoot_us"] > 0
+    assert res.report.flagged_steps >= 1
+    assert not res.healthy
+
+
+def test_overhead_report_lines_include_fault_counts():
+    prof = OverheadProfiler(devices=1, tasks_per_step=1)
+    for w in (0.01, 0.01, 0.01):
+        prof.record(w)
+    prof.flagged.append(1)
+    prof.poisoned.append(2)
+    rep = prof.report()
+    assert rep.flagged_steps == 1 and rep.poisoned_steps == 1
+    assert any("faulted steps" in ln for ln in rep.lines())

@@ -1,0 +1,316 @@
+"""Fault-tolerant ensemble runtime (repro.resilience).
+
+The contract under test, per DESIGN.md §11:
+
+  * injection is declarative, seeded, and zero-cost when disarmed;
+  * every recovery path is BIT-IDENTICAL — transport retries and launch
+    replays reproduce the fault-free outputs exactly; member eviction
+    reproduces the truncated-steps hetero-ensemble oracle exactly;
+  * deadlines come from the measured cost model when one exists and from
+    the run's own clean walls otherwise, and detection only reports.
+
+Single device here; the 4-device subprocess version lives in
+test_distributed.py, and the fuzzed version in test_chaos_property.py.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import GraphEnsemble, KernelSpec, TaskGraph, get_runtime
+from repro.core.runtimes import _halo
+from repro.resilience import (
+    FAULT_LAUNCH,
+    FAULT_MEMBER,
+    FAULT_STRAGGLER,
+    FAULT_TRANSPORT,
+    DeadlineDetector,
+    FaultPlan,
+    FaultSpec,
+    FaultState,
+    RecoveryPolicy,
+    TransientTransportFault,
+    UnrecoverableFault,
+    armed,
+    install_chaos_impls,
+    run_resilient,
+    transport_site,
+)
+from repro.resilience import faults as faults_mod
+
+
+def graph(steps=13, seed=0, pattern="stencil_1d", width=8):
+    return TaskGraph(steps=steps, width=width, pattern=pattern, payload=16,
+                     kernel=KernelSpec("compute_bound", 4), radius=1,
+                     seed=seed)
+
+
+def ensemble(pattern="stencil_1d"):
+    return GraphEnsemble((graph(13, 0, pattern), graph(9, 1, pattern)))
+
+
+def runtime(**opts):
+    return get_runtime("pallas_step", **opts)
+
+
+# ---------------------------------------------------------------- plans
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("cosmic_ray", 0)
+    with pytest.raises(ValueError, match="launch index"):
+        FaultSpec(FAULT_LAUNCH, -1)
+    with pytest.raises(ValueError, match="unknown launch fault mode"):
+        FaultSpec(FAULT_LAUNCH, 0, mode="segfault")
+    with pytest.raises(ValueError, match="duplicate fault site"):
+        FaultPlan((FaultSpec(FAULT_LAUNCH, 2), FaultSpec(FAULT_LAUNCH, 2)))
+    with pytest.raises(ValueError, match="die twice"):
+        FaultPlan((FaultSpec(FAULT_MEMBER, 0, member=1),
+                   FaultSpec(FAULT_MEMBER, 3, member=1)))
+
+
+def test_fault_plan_random_is_deterministic_and_valid():
+    a = FaultPlan.random(7, num_launches=20, num_members=3, rate=0.5)
+    b = FaultPlan.random(7, num_launches=20, num_members=3, rate=0.5)
+    assert a == b
+    assert a.specs  # rate 0.5 over 60 sites: must draw something
+    assert FaultPlan.random(8, num_launches=20, num_members=3,
+                            rate=0.5) != a
+    # every generated spec satisfies the plan invariants by construction
+    FaultPlan(specs=a.specs)
+
+
+def test_fault_plan_json_roundtrip():
+    plan = FaultPlan.random(3, num_launches=10, num_members=2, rate=0.4,
+                            kinds=(FAULT_TRANSPORT, FAULT_LAUNCH,
+                                   FAULT_MEMBER, FAULT_STRAGGLER))
+    assert FaultPlan.from_dict(plan.to_dict()) == plan
+
+
+def test_fault_state_consumption():
+    plan = FaultPlan((FaultSpec(FAULT_TRANSPORT, 1, times=2),
+                      FaultSpec(FAULT_LAUNCH, 3, mode="poison")))
+    st = FaultState(plan)
+    assert st.transport_should_fail(1)
+    assert st.transport_should_fail(1)
+    assert not st.transport_should_fail(1)  # healed after `times`
+    assert not st.transport_should_fail(0)
+    assert st.peek(FAULT_LAUNCH, 3).mode == "poison"
+    assert st.take(FAULT_LAUNCH, 3) is not None
+    assert st.take(FAULT_LAUNCH, 3) is None  # one-shot
+
+
+# ------------------------------------------------- chaos transport impls
+
+
+def test_install_chaos_impls_registers_wrappers():
+    names = install_chaos_impls()
+    assert "chaos+xla" in names
+    for registry in _halo.TRANSPORT_REGISTRIES.values():
+        assert "chaos+xla" in registry
+    # idempotent
+    assert install_chaos_impls() == names
+
+
+def test_register_transport_impl_refuses_shadowing():
+    with pytest.raises(ValueError, match="already registered"):
+        _halo.register_transport_impl("halo", "xla", lambda *a, **k: None)
+    with pytest.raises(ValueError, match="unknown transport registry"):
+        _halo.register_transport_impl("warp", "x", lambda *a, **k: None)
+
+
+def test_chaos_impl_raises_only_while_armed():
+    install_chaos_impls()
+    start = _halo.HALO_ASYNC_IMPLS["chaos+xla"]
+    plan = FaultPlan((FaultSpec(FAULT_TRANSPORT, 5, times=1),))
+    # disarmed: delegates straight to the base impl (here: crashes on the
+    # wrong arg count, but does NOT raise an injected fault)
+    with pytest.raises(TypeError):
+        start()
+    with armed(FaultState(plan)), transport_site(5):
+        with pytest.raises(TransientTransportFault):
+            start()
+    # the site consumed its single failure: next call delegates again
+    with armed(FaultState(plan)), transport_site(4):
+        with pytest.raises(TypeError):
+            start()
+
+
+def test_armed_stack_restores_on_exit():
+    st = FaultState(FaultPlan((FaultSpec(FAULT_LAUNCH, 0),)))
+    assert faults_mod.armed_state() is None
+    with armed(st):
+        assert faults_mod.armed_state() is st
+    assert faults_mod.armed_state() is None
+
+
+# ------------------------------------------------------ engine recovery
+
+
+def test_resilient_clean_matches_execute_ensemble():
+    ens = ensemble()
+    rt = runtime(steps_per_launch=4)
+    want = rt.execute_ensemble(ens)
+    res = run_resilient(rt, ens)
+    assert res.launches == rt.build_ensemble_launches(ens).num_launches
+    assert not res.events
+    for got, ref in zip(res.outputs, want):
+        np.testing.assert_array_equal(got, np.asarray(ref))
+
+
+@pytest.mark.parametrize("spec", [
+    FaultSpec(FAULT_TRANSPORT, 1, times=3),
+    FaultSpec(FAULT_LAUNCH, 1, mode="raise"),
+    FaultSpec(FAULT_LAUNCH, 2, mode="poison"),
+    FaultSpec(FAULT_STRAGGLER, 1, delay_s=0.001),
+], ids=["transport", "raise", "poison", "straggler"])
+def test_recovery_bit_identical_per_class(spec):
+    ens = ensemble()
+    rt = runtime(steps_per_launch=4)
+    want = [np.asarray(o) for o in rt.execute_ensemble(ens)]
+    res = run_resilient(rt, ens, plan=FaultPlan((spec,)))
+    for got, ref in zip(res.outputs, want):
+        np.testing.assert_array_equal(got, ref)
+    if spec.kind == FAULT_TRANSPORT:
+        assert res.retries == spec.times
+    if spec.kind == FAULT_LAUNCH:
+        assert res.replays == 1
+        assert any(e.mode == spec.mode for e in res.events)
+
+
+@pytest.mark.parametrize("pattern", ["stencil_1d", "tree", "all_to_all"])
+def test_recovery_across_plan_kinds(pattern):
+    """Stacked (halo) and stepwise (stride/allgather) launch plans both
+    recover bit-identically from a mixed plan."""
+    ens = ensemble(pattern)
+    rt = runtime(steps_per_launch=4)
+    want = [np.asarray(o) for o in rt.execute_ensemble(ens)]
+    plan = FaultPlan((FaultSpec(FAULT_TRANSPORT, 0, times=1),
+                      FaultSpec(FAULT_LAUNCH, 1, mode="raise")))
+    res = run_resilient(rt, ens, plan=plan)
+    for got, ref in zip(res.outputs, want):
+        np.testing.assert_array_equal(got, ref)
+    assert res.retries == 1 and res.replays == 1
+
+
+def test_eviction_matches_truncated_oracle():
+    ens = ensemble()
+    rt = runtime(steps_per_launch=4)
+    res = run_resilient(
+        rt, ens, plan=FaultPlan((FaultSpec(FAULT_MEMBER, 1, member=1),)))
+    frozen = res.evicted[1]
+    # the dead member froze at the last pre-fault launch boundary
+    assert frozen == min(9, 1 + 1 * 4)
+    oracle = rt.execute_ensemble(GraphEnsemble(
+        (graph(13, 0), dataclasses.replace(graph(9, 1), steps=frozen))))
+    for got, ref in zip(res.outputs, oracle):
+        np.testing.assert_array_equal(got, np.asarray(ref))
+
+
+def test_eviction_at_launch_zero_freezes_init():
+    ens = ensemble()
+    rt = runtime(steps_per_launch=4)
+    res = run_resilient(
+        rt, ens, plan=FaultPlan((FaultSpec(FAULT_MEMBER, 0, member=0),)))
+    assert res.evicted[0] == 1  # nothing past the t=0 init survives
+    oracle = rt.execute_ensemble(GraphEnsemble(
+        (dataclasses.replace(graph(13, 0), steps=1), graph(9, 1))))
+    for got, ref in zip(res.outputs, oracle):
+        np.testing.assert_array_equal(got, np.asarray(ref))
+
+
+def test_readmission_matches_fresh_member_oracle():
+    ens = ensemble()
+    rt = runtime(steps_per_launch=4)
+    res = run_resilient(
+        rt, ens, plan=FaultPlan((FaultSpec(FAULT_MEMBER, 0, member=1),)),
+        policy=RecoveryPolicy(readmit=True))
+    info = res.readmitted[1]
+    assert info["launch"] == 1
+    oracle = rt.execute_ensemble(GraphEnsemble((
+        graph(13, 0),
+        dataclasses.replace(graph(9, 1), steps=info["steps"],
+                            seed=info["seed"]))))
+    for got, ref in zip(res.outputs, oracle):
+        np.testing.assert_array_equal(got, np.asarray(ref))
+
+
+def test_transport_budget_exhaustion_raises():
+    ens = ensemble()
+    rt = runtime(steps_per_launch=4)
+    plan = FaultPlan((FaultSpec(FAULT_TRANSPORT, 0, times=50),))
+    policy = RecoveryPolicy(max_transport_retries=2,
+                            backoff_base_s=1e-4, backoff_cap_s=1e-3)
+    with pytest.raises(UnrecoverableFault, match="still failing"):
+        run_resilient(rt, ens, plan=plan, policy=policy)
+
+
+def test_resilient_emits_fault_tracer_records():
+    from repro.obs import Tracer
+    from repro.obs.tracer import CAT_FAULT
+
+    ens = ensemble()
+    rt = runtime(steps_per_launch=4)
+    tr = Tracer()
+    plan = FaultPlan((FaultSpec(FAULT_TRANSPORT, 1, times=1),))
+    run_resilient(rt, ens, plan=plan, tracer=tr)
+    fault_spans = [s for s in tr.spans if s.category == CAT_FAULT]
+    names = {s.name for s in fault_spans}
+    assert "transport_fault" in names
+    assert "backoff" in names  # the backoff sleep is a real (timed) span
+    assert any(s.end_us > s.start_us for s in fault_spans
+               if s.name == "backoff")
+
+
+def test_unsupported_backend_names_the_fallback():
+    rt = get_runtime("fused")
+    with pytest.raises(NotImplementedError, match="run_with_restarts"):
+        rt.build_ensemble_launches(ensemble())
+
+
+# ----------------------------------------------------------- detection
+
+
+def test_detector_self_calibrates_from_clean_walls():
+    det = DeadlineDetector(factor=4.0, warmup=3, min_deadline_us=1.0)
+    assert det.deadline_us() is None
+    for _ in range(3):
+        assert det.observe(100.0) is None
+    assert det.deadline_us() == pytest.approx(400.0)
+    d = det.observe(1000.0)
+    assert d is not None and d.overshoot_us == pytest.approx(600.0)
+    # the flagged wall must NOT drag the median toward itself
+    assert det.deadline_us() == pytest.approx(400.0)
+    assert det.source == "observed"
+
+
+def test_detector_prefers_measured_expectation():
+    det = DeadlineDetector(factor=2.0, expected_us=50.0,
+                           min_deadline_us=1.0)
+    assert det.deadline_us() == pytest.approx(100.0)  # armed from launch 0
+    assert det.observe(99.0) is None
+    assert det.observe(101.0) is not None
+    assert det.source == "measured"
+    with pytest.raises(ValueError, match="factor"):
+        DeadlineDetector(factor=1.0)
+
+
+def test_deadline_resolver_math():
+    from repro.kernels.probes import CostModel
+    from repro.kernels.schedule import (expected_launch_wall_us,
+                                        launch_deadline_us)
+
+    measured = CostModel(source="measured", exchange_row_steps=100.0,
+                         launch_us=50.0, row_step_us=0.5,
+                         halo_exchange_us={"xla": 20.0})
+    exp = expected_launch_wall_us(rows=8, steps_per_launch=4,
+                                  model=measured, impl="xla")
+    assert exp == pytest.approx(50.0 + 8 * 4 * 0.5 + 20.0)
+    assert launch_deadline_us(rows=8, steps_per_launch=4, model=measured,
+                              impl="xla", factor=10.0) == \
+        pytest.approx(10.0 * exp)
+    # the analytic model carries no absolute microseconds: unpriceable
+    analytic = CostModel(source="analytic", exchange_row_steps=600.0)
+    assert expected_launch_wall_us(rows=8, steps_per_launch=4,
+                                   model=analytic) is None
