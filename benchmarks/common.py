@@ -60,6 +60,11 @@ class SweepSpec:
     #: worker process (rows carry a "variant" key): the option-sweep
     #: analogue of compare_runtimes, e.g. a steps_per_launch ladder.
     option_variants: Dict = dataclasses.field(default_factory=dict)
+    #: "fused" times the backend's normal executor (whole loop in jitted
+    #: programs); "per_launch" times the host-stepped EnsembleLaunchPlan
+    #: (one dispatch + sync per launch — the resilience/serving cadence,
+    #: where per-dispatch collective cost is not amortized into a scan).
+    dispatch: str = "fused"
     #: record a span trace (repro.obs) in a SEPARATE traced execution after
     #: the timed reps — rows gain a "trace" key with the per-category wall
     #: decomposition. The timed path is untouched (DESIGN.md §10).
@@ -118,6 +123,16 @@ def run_sweep_inproc(spec: SweepSpec) -> List[Dict]:
                     serial_wall = spec.ensemble * rt.measure(
                         members[0], reps=spec.reps,
                         warmup=spec.warmup)[0].wall_time
+            elif spec.dispatch == "per_launch":
+                g = members[0]
+                ens = GraphEnsemble([g])
+                ok, why = rt.supports_ensemble(ens)
+                if not ok:
+                    rows.append({"runtime": name, "variant": vlabel,
+                                 "grain": grain, "skip": why})
+                    continue
+                sample, stats = rt.measure_launch_plan(
+                    ens, reps=spec.reps, warmup=spec.warmup)
             else:
                 g = members[0]
                 ok, why = rt.supports(g)
@@ -260,6 +275,42 @@ def calibrate_worker(devices: int, payload: int = 64, *, smoke: bool = False,
     if attempts:
         model["worker_retries"] = attempts
     return model
+
+
+def gather_impl_worker(devices: int, widths: Tuple[int, ...],
+                       payload: int = 64, reps: int = 25,
+                       timeout: int = 600) -> Dict[str, Dict[int, float]]:
+    """Measure ``gather_global`` transport walls per (impl, width) in a
+    subprocess with its own forced device count.
+
+    This is ``probes.probe_gather_impl_us`` — one dispatched collective
+    per timed call, median-of-reps (the typical per-dispatch wall; see
+    the probe's docstring), the exact table
+    ``schedule.choose_gather_impl`` ranks. Returns ``{impl: {width: us}}``
+    for impls xla and chunked at the given device count."""
+    code = (
+        "import json\n"
+        "from repro.kernels.probes import probe_gather_impl_us\n"
+        f"t = probe_gather_impl_us({devices}, {payload},\n"
+        f"    widths={tuple(widths)}, impls=('xla', 'chunked'),\n"
+        f"    device_counts=({devices},), reps={reps})\n"
+        "print(json.dumps(t))\n"
+    )
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + ROOT
+    env["JAX_PLATFORMS"] = "cpu"
+    out, _ = _run_subprocess_retry(
+        [sys.executable, "-c", code],
+        what=f"gather transport probe ({devices}d)", env=env,
+        timeout=timeout)
+    raw = json.loads(out.stdout.strip().splitlines()[-1])
+    # json stringifies the int keys; flatten the devices level (single d)
+    return {
+        impl: {int(w): us for w, us in by_d.get(str(devices), {}).items()}
+        for impl, by_d in raw.items()
+    }
 
 
 def metg_from_rows(rows: Sequence[Dict], threshold: float = 0.5,

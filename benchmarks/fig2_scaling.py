@@ -1,72 +1,370 @@
-"""Fig 2: METG vs device count under overdecomposition {8, 16}.
+"""Fig 2: scaling vs device count — METG curves plus the pallas_step
+weak/strong-scaling story on simulated meshes up to 64 devices.
 
 Paper: METG of each system with 1..16 nodes; lower + flatter is better
-(flat = communication topology doesn't penalize scale). Ours: device count
-sweep via subprocesses; distributed backends only (the shared-memory
-backends don't scale past one "node" by construction).
-Output: artifacts/bench/fig2.csv.
+(flat = communication topology doesn't penalize scale). Ours adds the
+megakernel: ``pallas_step`` and its unpipelined ablation join the backend
+set, and a dedicated scaling sweep runs D in {1, 2, 4, 8, 16, 32, 64}
+simulated devices in two modes:
+
+  weak    W = od * D (fixed per-device rows). On this container every
+          forced-host device multiplexes ONE physical core, so total
+          compute grows with D and raw walls cannot stay flat; the
+          scale-invariant metric is wall PER TASK, which at grain=1 is
+          almost pure runtime overhead. Weak efficiency(D) =
+          wall_per_task(1) / wall_per_task(D): the fraction of the
+          1-device per-task cost retained as collectives widen.
+  strong  W fixed (default 128), so per-device blocks shrink as D grows.
+          Strong efficiency(D) = wall(1) / wall(D): with one physical
+          core there is no parallel speedup to find, so the curve reads
+          as pure overhead growth (1.0 = free scaling, below = the cost
+          of more rendezvous per step).
+
+A gather ablation measures the allgather plan's transport — monolithic
+("xla") vs hierarchical ("chunked") ``gather_global`` — back-to-back in
+one worker per D at the plan's width, one dispatched collective per
+timed call (the ``probe_gather_impl_us`` regime, see
+``run_gather_ablation``): the measured basis for
+``schedule.choose_gather_impl``'s structural D >= 16 crossover.
+
+Every CSV row carries an execution-mode label: "distributed" backends
+shard rows over the forced-host mesh, while "shared_memory_fallback"
+names the backends (fused, serialized) that ignore extra devices and run
+the whole graph on one — their flat "scaling" curves are a property of
+the fallback, not of the runtime, and used to be silently mixed into the
+same table.
+
+Outputs: artifacts/bench/fig2.csv (rows, labeled) and
+artifacts/bench/fig2_scaling.json (efficiency curves + gather ablation +
+the scaling@ guard block floor_guard consumes). ``--smoke`` caps the
+sweep at D=8 and writes fig2_scaling_smoke.json for the CI leg.
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 from benchmarks.common import (
     SweepSpec,
     backend_options_args,
+    bench_path,
+    calibrate_worker,
     fmt_us,
+    gather_impl_worker,
     metg_from_rows,
     parse_backend_options,
     run_worker,
     write_csv,
 )
 
-BACKENDS = ("bsp", "bsp_scan", "overlap", "fused")
+#: the METG table's backend set (satellite fix: pallas_step was missing —
+#: the megakernel never appeared in the figure it was built for)
+BACKENDS = ("bsp", "bsp_scan", "overlap", "fused", "pallas_step")
+
+#: the scaling sweep's backends: the megakernel, its unpipelined ablation
+#: (how much of the curve the boundary/interior split buys), and bsp as
+#: the per-launch-dispatch reference the scaling@ guard's health signal
+#: compares against in-run.
+SCALING_BACKENDS = ("pallas_step", "pallas_step[nopipe]", "bsp")
+
+#: backends that shard rows over the device mesh; everything else runs the
+#: whole graph on one device regardless of the requested count
+DISTRIBUTED = ("bsp", "bsp_scan", "overlap", "pallas_step")
+
+DEVICE_COUNTS = (1, 2, 4, 8, 16, 32, 64)
+GATHER_DEVICES = (8, 16, 32, 64)
+
+#: guard point: weak-scaling efficiency is judged at the largest swept D
+#: at or below this count (16 on the full sweep, 8 in --smoke)
+GUARD_DEVICES = 16
 
 
-def run(device_counts=(1, 2, 4, 8), ods=(8, 16), steps: int = 50,
-        reps: int = 3, grains=(1, 16, 256, 4096, 16384), options=None,
-        verbose: bool = True):
+def _backend_spec(backend: str):
+    """Benchmark backend label -> (runtime name, extra options).
+
+    ``name[nopipe]`` is the pipeline ablation; the bracket syntax keeps
+    ablations first-class rows without inventing runtime registry names.
+    """
+    if backend.endswith("[nopipe]"):
+        return backend[: -len("[nopipe]")], {"pipeline": False}
+    return backend, {}
+
+
+def exec_mode(backend: str, devices: int) -> str:
+    """The CSV's execution-mode label for (backend, device count)."""
+    name, _ = _backend_spec(backend)
+    if devices <= 1:
+        return "single_device"
+    if name in DISTRIBUTED:
+        return "distributed"
+    return "shared_memory_fallback"
+
+
+def _wall_per_task_us(row) -> float:
+    return row["wall"] / max(1, row["tasks"]) * 1e6
+
+
+def _efficiency_curves(points):
+    """[(devices, wall_s, wall_per_task_us), ...] -> the JSON curve dict.
+
+    Efficiencies are anchored at the smallest swept D (the 1-device
+    column when present); a sweep that never ran D=1 still gets curves,
+    they just read relative to its smallest point.
+    """
+    points = sorted(points)
+    if not points:
+        return {}
+    d0, wall0, wpt0 = points[0]
+    return {
+        "devices": [d for d, _, _ in points],
+        "wall_s": [w for _, w, _ in points],
+        "wall_per_task_us": [w for _, _, w in points],
+        "anchor_devices": d0,
+        "weak_efficiency": [wpt0 / w if w > 0 else 0.0
+                            for _, _, w in points],
+        "strong_efficiency": [wall0 / w if w > 0 else 0.0
+                              for _, w, _ in points],
+    }
+
+
+def run_metg_table(device_counts=(1, 2, 4, 8), ods=(8, 16), steps=50,
+                   reps=3, grains=(1, 16, 256, 4096, 16384), options=None,
+                   backends=BACKENDS, verbose=True):
+    """The paper-shaped METG table (one row per backend x od x D)."""
     rows_csv = []
-    for backend in BACKENDS:
+    for backend in backends:
+        name, extra = _backend_spec(backend)
         for od in ods:
             for d in device_counts:
                 spec = SweepSpec(
-                    runtime=backend, pattern="stencil_1d", devices=d,
+                    runtime=name, pattern="stencil_1d", devices=d,
                     overdecomposition=od, steps=steps, grains=tuple(grains),
-                    reps=reps, options=dict(options or {}),
+                    reps=reps, options={**extra, **(options or {})},
                 )
                 rows = run_worker(spec)
                 res = metg_from_rows(rows)
                 rows_csv.append([
-                    backend, od, d,
+                    backend, "metg", exec_mode(backend, d), od, d,
+                    od * d, "",
                     "" if res.metg_us is None else res.metg_us,
+                    "", "",
                     res.peak_flops_per_second,
                 ])
                 if verbose:
-                    print(f"fig2 {backend:9s} od={od:2d} devices={d:2d} "
+                    print(f"fig2 {backend:18s} od={od:2d} devices={d:2d} "
+                          f"[{exec_mode(backend, d)}] "
                           f"METG = {fmt_us(res.metg_us)} us", flush=True)
-    path = write_csv(
-        "fig2.csv",
-        ["backend", "overdecomposition", "devices", "metg_us",
-         "peak_flops_per_s"],
-        rows_csv,
-    )
-    if verbose:
-        print(f"wrote {path}")
     return rows_csv
+
+
+def run_scaling(device_counts=DEVICE_COUNTS, od=16, strong_width=128,
+                steps=20, reps=2, backends=SCALING_BACKENDS, options=None,
+                verbose=True):
+    """Weak + strong sweeps at grain=1 (pure overhead) -> (csv rows,
+    curves dict keyed backend -> mode -> curve)."""
+    rows_csv, curves = [], {}
+    for backend in backends:
+        name, extra = _backend_spec(backend)
+        for mode in ("weak", "strong"):
+            points = []
+            for d in sorted(device_counts):
+                width = od * d if mode == "weak" else strong_width
+                if width % d:
+                    if verbose:
+                        print(f"fig2 {backend:18s} {mode} devices={d:2d} "
+                              f"skipped: width {width} % {d} != 0",
+                              flush=True)
+                    continue
+                spec = SweepSpec(
+                    runtime=name, pattern="stencil_1d", devices=d,
+                    width=width, steps=steps, grains=(1,), reps=reps,
+                    options={**extra, **(options or {})},
+                )
+                row = run_worker(spec)[0]
+                if "skip" in row:
+                    if verbose:
+                        print(f"fig2 {backend:18s} {mode} devices={d:2d} "
+                              f"skipped: {row['skip']}", flush=True)
+                    continue
+                wpt = _wall_per_task_us(row)
+                points.append((d, row["wall"], wpt))
+                rows_csv.append([
+                    backend, mode, exec_mode(backend, d), od, d, width, 1,
+                    "", row["wall"], wpt, "",
+                ])
+                if verbose:
+                    print(f"fig2 {backend:18s} {mode} devices={d:2d} "
+                          f"W={width:5d} [{exec_mode(backend, d)}] "
+                          f"wall/task = {wpt:.2f} us", flush=True)
+            curves.setdefault(backend, {})[mode] = _efficiency_curves(points)
+    return rows_csv, curves
+
+
+def run_gather_ablation(device_counts=GATHER_DEVICES, reps=25,
+                        options=None, verbose=True):
+    """The allgather plan's transport, monolithic ("xla") vs hierarchical
+    ("chunked"), measured back-to-back in ONE worker per D at the plan's
+    width W = 4D — ``probe_gather_impl_us``: one dispatched collective
+    per timed call, MEDIAN-of-reps. This is the per-dispatch regime (the
+    cadence of the host-stepped EnsembleLaunchPlan driving the resilience
+    engine and the serving loop) and the exact table
+    ``schedule.choose_gather_impl`` ranks. The median matters: the full
+    D-participant barrier's wall is heavy-tailed by scheduler convoy
+    effects on the oversubscribed mesh, and the chunked gather's bounded
+    rendezvous width cuts exactly that tail — the typical wall a launch
+    loop pays on every dispatch, which best-of-reps would erase. The
+    ablation is deliberately NOT an end-to-end step wall: inside the
+    fused executor's scanned program the per-step cost is decided by
+    collective BARRIER COUNT (all D device threads cross every barrier
+    regardless of group size), which flips the verdict to the
+    single-barrier monolithic gather and says nothing about rendezvous
+    width — that amortized regime is what the weak/strong sweeps above
+    already measure."""
+    del options  # transport probe: no runtime options to thread
+    rows_csv, ablation = [], []
+    for d in sorted(device_counts):
+        width = 4 * d
+        if width % d:
+            continue
+        table = gather_impl_worker(d, (width,), reps=reps)
+        walls = {impl: by_w.get(width) for impl, by_w in table.items()}
+        for impl in ("xla", "chunked"):
+            if walls.get(impl) is None:
+                continue
+            rows_csv.append([
+                "pallas_step", "gather", exec_mode("pallas_step", d), "",
+                d, width, "", f"gather={impl}", walls[impl] * 1e-6,
+                "", "",
+            ])
+        if walls.get("xla") and walls.get("chunked"):
+            speedup = walls["xla"] / walls["chunked"]
+            ablation.append({
+                "devices": d, "width": width,
+                "xla_wall_s": walls["xla"] * 1e-6,
+                "chunked_wall_s": walls["chunked"] * 1e-6,
+                "chunked_speedup": speedup,
+            })
+            if verbose:
+                print(f"fig2 gather ablation devices={d:2d} W={width:4d} "
+                      f"chunked speedup x{speedup:.2f}", flush=True)
+    return rows_csv, ablation
+
+
+def _guard_block(curves, ablation, device_counts):
+    """The scaling@ leg's input: the weak efficiency of pallas_step at
+    the guard point, and the in-run bsp comparison that separates a slow
+    runner from a real regression (floor_guard's two-signal contract)."""
+    guarded = [d for d in device_counts if d <= GUARD_DEVICES]
+    if not guarded:
+        return {}
+    gd = max(guarded)
+
+    def at(backend, mode, field):
+        curve = curves.get(backend, {}).get(mode, {})
+        devs = curve.get("devices", [])
+        if gd not in devs:
+            return None
+        return curve[field][devs.index(gd)]
+
+    block = {
+        "guard_devices": gd,
+        "weak_efficiency": at("pallas_step", "weak", "weak_efficiency"),
+        "strong_efficiency": at("pallas_step", "strong",
+                                "strong_efficiency"),
+        "pallas_wall_per_task_us": at("pallas_step", "weak",
+                                      "wall_per_task_us"),
+        "bsp_wall_per_task_us": at("bsp", "weak", "wall_per_task_us"),
+    }
+    abl = [a for a in ablation if a["devices"] >= 16]
+    if abl:
+        block["chunked_speedup_at_16plus"] = min(
+            a["chunked_speedup"] for a in abl)
+    return block
+
+
+CSV_HEADER = [
+    "backend", "mode", "exec_mode", "overdecomposition", "devices",
+    "width", "grain", "variant", "wall_s", "wall_per_task_us", "metg_us",
+]
+
+
+def run(device_counts=DEVICE_COUNTS, ods=(8, 16), od=16, steps=20,
+        reps=2, metg_device_counts=(1, 2, 4, 8), metg_steps=50,
+        metg_reps=3, grains=(1, 16, 256, 4096, 16384),
+        gather_devices=GATHER_DEVICES, options=None, smoke=False,
+        calibrate=True, verbose=True):
+    device_counts = tuple(sorted(device_counts))
+    gather_devices = tuple(d for d in gather_devices
+                           if d <= max(device_counts))
+    calibration = None
+    if calibrate:
+        # one calibration at the largest swept D feeds every "auto"
+        # resolution in the workers AND the artifact's provenance block
+        calibration = calibrate_worker(max(device_counts), smoke=smoke)
+    metg_rows = run_metg_table(
+        device_counts=tuple(d for d in metg_device_counts
+                            if d <= max(device_counts)),
+        ods=ods, steps=metg_steps, reps=metg_reps, grains=grains,
+        options=options, verbose=verbose)
+    scaling_rows, curves = run_scaling(
+        device_counts=device_counts, od=od, steps=steps, reps=reps,
+        options=options, verbose=verbose)
+    gather_rows, ablation = run_gather_ablation(
+        device_counts=gather_devices, verbose=verbose)
+
+    rows_csv = []
+    for r in metg_rows + scaling_rows + gather_rows:
+        rows_csv.append(r + [""] * (len(CSV_HEADER) - len(r)))
+    csv_path = write_csv("fig2.csv", CSV_HEADER, rows_csv)
+
+    data = {
+        "device_counts": list(device_counts),
+        "overdecomposition": od,
+        "steps": steps,
+        "reps": reps,
+        "smoke": bool(smoke),
+        "curves": curves,
+        "gather_ablation": ablation,
+        "guard": _guard_block(curves, ablation, device_counts),
+        "calibration": calibration,
+    }
+    json_path = bench_path(
+        "fig2_scaling_smoke.json" if smoke else "fig2_scaling.json")
+    with open(json_path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    if verbose:
+        print(f"wrote {csv_path}")
+        print(f"wrote {json_path}")
+    return data
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--devices", type=int, nargs="*", default=[1, 2, 4, 8])
-    ap.add_argument("--steps", type=int, default=50)
-    ap.add_argument("--reps", type=int, default=3)
-    ap.add_argument("--paper", action="store_true")
+    ap.add_argument("--devices", type=int, nargs="*",
+                    default=list(DEVICE_COUNTS))
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--paper", action="store_true",
+                    help="paper-scale steps/reps (hours)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="cap the sweep at D=8, tiny grids; writes "
+                         "fig2_scaling_smoke.json (the CI scaling@ input)")
+    ap.add_argument("--no-calibrate", action="store_true",
+                    help="skip the cost-model calibration worker")
     backend_options_args(ap)
     a = ap.parse_args(argv)
-    steps, reps = (1000, 5) if a.paper else (a.steps, a.reps)
+    if a.smoke:
+        counts = tuple(d for d in a.devices if d <= 8) or (1, 2, 4, 8)
+        run(device_counts=counts, ods=(16,), steps=10, reps=1,
+            metg_device_counts=(1, 4, 8), metg_steps=10, metg_reps=1,
+            grains=(1, 256, 4096), gather_devices=(4, 8),
+            options=parse_backend_options(a), smoke=True,
+            calibrate=not a.no_calibrate)
+        return 0
+    steps, reps = (50, 5) if a.paper else (a.steps, a.reps)
     run(device_counts=tuple(a.devices), steps=steps, reps=reps,
-        options=parse_backend_options(a))
+        options=parse_backend_options(a), calibrate=not a.no_calibrate)
     return 0
 
 

@@ -332,6 +332,72 @@ def chaos_checks(chaos_art: dict, *, max_recovery_tax: float,
 SCHEMA_CHAOS = 1
 
 
+def scaling_checks(scaling_art: dict, scaling_base: dict, factor: float, *,
+                   max_pallas_over_bsp: float,
+                   min_gather_speedup: float) -> List[PerfCheck]:
+    """Scaling leg over the fig2_scaling artifact (weak/strong sweeps).
+
+    ``scaling@schema`` is the sanity half: the guard block exists and its
+    efficiencies are in range. ``scaling@weak`` judges the weak-scaling
+    OVERHEAD GROWTH at the guard device count — 1/efficiency, lower is
+    better, so the standard ratio-vs-reference machinery applies — against
+    the committed baseline, with the run's OWN pallas/bsp wall-per-task
+    ratio at the same D as the health signal: the megakernel pricing tasks
+    like per-step-dispatch bsp in the same process is a fast-path
+    collapse, which runner slowness cannot produce (both walls stretch
+    together). ``scaling@gather`` bounds the chunked-vs-monolithic gather
+    ablation at D >= 16: the walls come from ONE worker process, so the
+    ratio is already machine-independent and the health signal is the
+    speedup itself. Smoke artifacts cap at D=8 and carry no 16+ ablation —
+    that check SKIPs, the weak check still judges at the smoke guard D.
+    A baseline produced at a different guard D yields no reference
+    (SKIP): efficiency at D=8 says nothing about the D=16 bar.
+    """
+    errors: List[str] = []
+    guard = scaling_art.get("guard") or {}
+    if not guard:
+        errors.append("scaling artifact has no guard block")
+    eff = guard.get("weak_efficiency")
+    if eff is not None and not (0.0 < float(eff) <= 2.0):
+        errors.append(f"weak_efficiency out of (0, 2]: {eff!r}")
+    errors += _sane_positive("guard_devices", guard.get("guard_devices"))
+    checks = [PerfCheck(name="scaling@schema", value=None, reference=None,
+                        factor=1.0, sanity_errors=errors)]
+
+    base_guard = scaling_base.get("guard") or {}
+    value = None if eff is None else 1.0 / max(float(eff), 1e-9)
+    base_eff = base_guard.get("weak_efficiency")
+    measured_ref = None
+    if (base_eff is not None
+            and base_guard.get("guard_devices") == guard.get("guard_devices")):
+        measured_ref = 1.0 / max(float(base_eff), 1e-9)
+    weak_name = f"scaling@weak:D{guard.get('guard_devices', '?')}"
+    ref, fac = _reference_for(scaling_base, weak_name, measured_ref, factor)
+    pallas = guard.get("pallas_wall_per_task_us")
+    bsp = guard.get("bsp_wall_per_task_us")
+    in_run = None
+    if pallas is not None and bsp:
+        in_run = float(pallas) / float(bsp)
+    checks.append(PerfCheck(
+        name=weak_name, value=value, reference=ref, factor=fac,
+        fmt=lambda v: f"{v:.2f}x overhead growth",
+        health_desc="pallas/bsp", health_value=in_run,
+        health_bad=lambda r, hi=max_pallas_over_bsp: r > hi,
+        sanity_errors=_sane_positive("weak overhead growth", value),
+    ))
+
+    speedup = guard.get("chunked_speedup_at_16plus")
+    checks.append(PerfCheck(
+        name="scaling@gather",
+        value=None if speedup is None else 1.0 / max(float(speedup), 1e-9),
+        reference=1.0, factor=1.0 / min_gather_speedup,
+        fmt=lambda v: f"chunked at {1.0 / v:.2f}x vs monolithic",
+        health_desc="in-run speedup", health_value=speedup,
+        health_bad=lambda s, lo=min_gather_speedup: s < lo,
+    ))
+    return checks
+
+
 def build_suite(current: dict, baseline: dict, factor: float,
                 min_amortization: float,
                 cost_model: Optional[dict] = None,
@@ -340,7 +406,11 @@ def build_suite(current: dict, baseline: dict, factor: float,
                 max_exchange_fraction: float = 0.6,
                 chaos_art: Optional[dict] = None,
                 max_recovery_tax: float = 2.5,
-                max_armor_tax: float = 3.0) -> List[PerfCheck]:
+                max_armor_tax: float = 3.0,
+                scaling_art: Optional[dict] = None,
+                scaling_base: Optional[dict] = None,
+                max_pallas_over_bsp: float = 1.5,
+                min_gather_speedup: float = 0.9) -> List[PerfCheck]:
     checks = floor_checks(current, baseline, factor, min_amortization)
     checks += butterfly_checks(current, baseline, factor)
     if cost_model is not None:
@@ -351,6 +421,10 @@ def build_suite(current: dict, baseline: dict, factor: float,
     if chaos_art is not None:
         checks += chaos_checks(chaos_art, max_recovery_tax=max_recovery_tax,
                                max_armor_tax=max_armor_tax)
+    if scaling_art is not None:
+        checks += scaling_checks(scaling_art, scaling_base or {}, factor,
+                                 max_pallas_over_bsp=max_pallas_over_bsp,
+                                 min_gather_speedup=min_gather_speedup)
     return checks
 
 
@@ -390,7 +464,11 @@ def check(current: dict, baseline: dict, factor: float,
           max_exchange_fraction: float = 0.6,
           chaos_art: Optional[dict] = None,
           max_recovery_tax: float = 2.5,
-          max_armor_tax: float = 3.0) -> list:
+          max_armor_tax: float = 3.0,
+          scaling_art: Optional[dict] = None,
+          scaling_base: Optional[dict] = None,
+          max_pallas_over_bsp: float = 1.5,
+          min_gather_speedup: float = 0.9) -> list:
     """Returns a list of human-readable failures (empty = pass)."""
     base = baseline.get("floor_wall_per_step", {})
     if not base:
@@ -404,10 +482,14 @@ def check(current: dict, baseline: dict, factor: float,
         families["trace@"] = 1
     if chaos_art is not None:
         families["chaos@"] = 2
+    if scaling_art is not None:
+        families["scaling@"] = 1
     suite = build_suite(current, baseline, factor, min_amortization,
                         cost_model, trace_art, max_visible,
                         max_exchange_fraction, chaos_art,
-                        max_recovery_tax, max_armor_tax)
+                        max_recovery_tax, max_armor_tax,
+                        scaling_art, scaling_base,
+                        max_pallas_over_bsp, min_gather_speedup)
     return run_suite(suite, families)
 
 
@@ -453,6 +535,24 @@ def main(argv=None):
     ap.add_argument("--max-armor-tax", type=float, default=3.0,
                     help="no-fault resilient/production wall ratio bound "
                          "(the clean-path cost of the armor)")
+    ap.add_argument("--scaling", default=None, nargs="?",
+                    const="artifacts/bench/fig2_scaling.json",
+                    help="fig2_scaling artifact feeding the scaling@ leg "
+                         "(flag alone uses the full-run path; under "
+                         "--smoke the bare flag points at the smoke "
+                         "artifact; missing file = skip)")
+    ap.add_argument("--scaling-baseline",
+                    default="artifacts/bench/fig2_scaling_baseline.json",
+                    help="committed scaling baseline (guard references; "
+                         "missing file = references only from overrides)")
+    ap.add_argument("--max-pallas-over-bsp", type=float, default=1.5,
+                    help="in-run health bound: pallas_step/bsp "
+                         "wall-per-task ratio at the guard D above which "
+                         "a weak-efficiency regression FAILs")
+    ap.add_argument("--min-gather-speedup", type=float, default=0.9,
+                    help="chunked/monolithic gather speedup at D>=16 "
+                         "below which the ablation check FAILs (in-run "
+                         "ratio, no slow-runner escape)")
     a = ap.parse_args(argv)
     trace_path = a.trace
     if trace_path is None and a.smoke:
@@ -488,10 +588,30 @@ def main(argv=None):
         except FileNotFoundError:
             print(f"floor_guard: chaos artifact {a.chaos} absent "
                   f"(resilience leg skipped)")
+    scaling_path = a.scaling
+    if scaling_path == "artifacts/bench/fig2_scaling.json" and a.smoke:
+        scaling_path = "artifacts/bench/fig2_scaling_smoke.json"
+    scaling_art = scaling_base = None
+    if scaling_path:
+        try:
+            with open(scaling_path) as f:
+                scaling_art = json.load(f)
+        except FileNotFoundError:
+            print(f"floor_guard: scaling artifact {scaling_path} absent "
+                  f"(scaling@ leg skipped)")
+        if scaling_art is not None:
+            try:
+                with open(a.scaling_baseline) as f:
+                    scaling_base = json.load(f)
+            except FileNotFoundError:
+                print(f"floor_guard: scaling baseline {a.scaling_baseline} "
+                      f"absent (scaling@weak judged only via overrides)")
     failures = check(current, baseline, a.factor, a.min_amortization,
                      cost_model, trace_art, max_visible,
                      a.max_exchange_fraction, chaos_art,
-                     a.max_recovery_tax, a.max_armor_tax)
+                     a.max_recovery_tax, a.max_armor_tax,
+                     scaling_art, scaling_base,
+                     a.max_pallas_over_bsp, a.min_gather_speedup)
     for msg in failures:
         print(f"floor_guard: FAIL: {msg}", file=sys.stderr)
     return 1 if failures else 0

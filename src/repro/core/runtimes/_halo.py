@@ -337,6 +337,86 @@ STRIDE_ASYNC_IMPLS = {
     "ppermute": _ppermute_stride_start,
 }
 
+def _gather_xla(local: jax.Array, num_devices: int, axis: str,
+                *, row_axis: int = 0) -> jax.Array:
+    """One tiled all-gather: the monolithic baseline transport."""
+    return jax.lax.all_gather(local, axis, axis=row_axis, tiled=True)
+
+
+def _gather_ppermute(local: jax.Array, num_devices: int, axis: str,
+                     *, row_axis: int = 0) -> jax.Array:
+    """Assemble the ring from D-1 whole-block backward shifts and rotate
+    into global order — the minimal-collective-primitive spelling, kept
+    for transport parity tests (exact row copies, so outputs are
+    bit-identical to "xla")."""
+    _, bwd = ring_perms(num_devices, axis)
+    blocks = [local]  # device-local order: [d, d+1, ..., d+D-1]
+    cur = local
+    for _ in range(num_devices - 1):
+        cur = jax.lax.ppermute(cur, axis, bwd)
+        blocks.append(cur)
+    stacked = jnp.concatenate(blocks, axis=row_axis)
+    n = local.shape[row_axis]
+    d = jax.lax.axis_index(axis)
+    # rotate [d..d+D-1] into [0..D-1]: global row 0 sits n*d rows from the
+    # END of the device-local order exactly when d > 0; a doubled buffer
+    # sliced at (D - d) * n mod (D * n) does it without traced-shift roll
+    doubled = jnp.concatenate([stacked, stacked], axis=row_axis)
+    start = jnp.mod((num_devices - d) * n, num_devices * n)
+    return jax.lax.dynamic_slice_in_dim(
+        doubled, start, num_devices * n, axis=row_axis)
+
+
+def gather_chunk_group(num_devices: int) -> int:
+    """Segment size for the chunked gather: the divisor of D nearest
+    sqrt(D), so both stages rendezvous ~sqrt(D) participants instead of
+    one D-wide barrier. 1 or D degenerates to the monolithic gather."""
+    best, best_err = 1, float("inf")
+    for g in range(1, num_devices + 1):
+        if num_devices % g:
+            continue
+        err = abs(g - num_devices ** 0.5)
+        if err < best_err or (err == best_err and g > best):
+            best, best_err = g, err
+    return best
+
+
+def _gather_chunked(local: jax.Array, num_devices: int, axis: str,
+                    *, row_axis: int = 0) -> jax.Array:
+    """Hierarchical (neighbor-limited) gather: a ring of segment
+    all-gathers instead of one D-wide rendezvous.
+
+    Stage 1 all-gathers within contiguous ring segments of G = divisor-of-D
+    nearest sqrt(D) devices; stage 2 all-gathers the assembled segment
+    blocks across one-representative-per-segment stride groups. Each
+    collective synchronizes ~sqrt(D) participants, which is what makes the
+    global patterns pay O(W/D * log D)-ish coordination instead of a flat
+    D-wide barrier per launch. Both stages move exact row copies in global
+    order, so the result is bit-identical to the monolithic transport.
+    """
+    g = gather_chunk_group(num_devices)
+    if g <= 1 or g >= num_devices:
+        return _gather_xla(local, num_devices, axis, row_axis=row_axis)
+    ngroups = num_devices // g
+    segments = [[b * g + i for i in range(g)] for b in range(ngroups)]
+    seg = jax.lax.all_gather(local, axis, axis=row_axis, tiled=True,
+                             axis_index_groups=segments)
+    across = [[i + b * g for b in range(ngroups)] for i in range(g)]
+    return jax.lax.all_gather(seg, axis, axis=row_axis, tiled=True,
+                              axis_index_groups=across)
+
+
+#: name -> global-gather transport, mirroring the halo/stride registries:
+#: "xla" is the monolithic tiled all-gather, "ppermute" the D-1-shift ring
+#: spelling, "chunked" the hierarchical two-stage segment gather that
+#: bounds every rendezvous at ~sqrt(D) participants (the D >= 16 default
+#: when a measured cost model ranks it cheaper).
+GATHER_IMPLS = {
+    "xla": _gather_xla,
+    "ppermute": _gather_ppermute,
+    "chunked": _gather_chunked,
+}
+
 #: kind -> the mutable transport registry behind it. This is the public
 #: seam for transport extensions: a TPU build registers "mosaic" starters,
 #: and the fault-injection layer (repro.resilience.faults) registers
@@ -345,6 +425,7 @@ STRIDE_ASYNC_IMPLS = {
 TRANSPORT_REGISTRIES = {
     "halo": HALO_ASYNC_IMPLS,
     "stride": STRIDE_ASYNC_IMPLS,
+    "gather": GATHER_IMPLS,
 }
 
 
@@ -423,34 +504,39 @@ def gather_global(local: jax.Array, num_devices: int, axis: str = "shard",
                   *, row_axis: int = 0, impl: str = "xla") -> jax.Array:
     """The full global-order state on every device (the all-gather plan).
 
-    "xla" is one tiled all-gather. "ppermute" assembles the ring from
-    D-1 whole-block backward shifts and rotates into global order — the
-    minimal-collective-primitive spelling, kept for transport parity
-    tests (both move exact row copies, so outputs are bit-identical).
+    ``impl`` names a GATHER_IMPLS transport: "xla" (one monolithic tiled
+    all-gather), "ppermute" (D-1 ring shifts, parity-test spelling), or
+    "chunked" (hierarchical segment gather bounding every rendezvous at
+    ~sqrt(D) participants). All transports move exact row copies, so
+    outputs are bit-identical across impls.
     """
     if num_devices == 1:
         return local
-    if impl == "xla":
-        return jax.lax.all_gather(local, axis, axis=row_axis, tiled=True)
-    if impl != "ppermute":
+    try:
+        start = GATHER_IMPLS[impl]
+    except KeyError:
         raise ValueError(
-            f"unknown gather impl {impl!r}; known ['ppermute', 'xla']")
-    _, bwd = ring_perms(num_devices, axis)
-    blocks = [local]  # device-local order: [d, d+1, ..., d+D-1]
-    cur = local
-    for _ in range(num_devices - 1):
-        cur = jax.lax.ppermute(cur, axis, bwd)
-        blocks.append(cur)
-    stacked = jnp.concatenate(blocks, axis=row_axis)
-    n = local.shape[row_axis]
-    d = jax.lax.axis_index(axis)
-    # rotate [d..d+D-1] into [0..D-1]: global row 0 sits n*d rows from the
-    # END of the device-local order exactly when d > 0; a doubled buffer
-    # sliced at (D - d) * n mod (D * n) does it without traced-shift roll
-    doubled = jnp.concatenate([stacked, stacked], axis=row_axis)
-    start = jnp.mod((num_devices - d) * n, num_devices * n)
-    return jax.lax.dynamic_slice_in_dim(
-        doubled, start, num_devices * n, axis=row_axis)
+            f"unknown gather impl {impl!r}; known "
+            f"{sorted(GATHER_IMPLS)}") from None
+    return start(local, num_devices, axis, row_axis=row_axis)
+
+
+def global_mean(local: jax.Array, width: int, num_devices: int,
+                axis: str = "shard", *, row_axis: int = 0) -> jax.Array:
+    """Mean over the GLOBAL row axis via one psum — the uniform
+    all_to_all combine lowering.
+
+    When every point depends on every point with weight 1/W, the gathered
+    W-row buffer collapses to one vector: sum the local rows, psum the
+    partial across the row axis, divide by W. This replaces an O(W)
+    replication per launch with an O(payload) reduction. NOT bit-identical
+    to the gather+masked-mean kernel (different summation order), but
+    within float32 reduction tolerance — callers gate it behind an option.
+    """
+    partial = jnp.sum(local, axis=row_axis)
+    if num_devices > 1:
+        partial = jax.lax.psum(partial, axis)
+    return partial / jnp.asarray(width, local.dtype)
 
 
 def exchange_halos(local: jax.Array, r: int, num_devices: int,

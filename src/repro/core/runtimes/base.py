@@ -379,6 +379,68 @@ class Runtime(abc.ABC):
         ]
         return combine_grain_samples(members, wall_time=stats.best), stats
 
+    def measure_launch_plan(
+        self,
+        ensemble: GraphEnsemble,
+        *,
+        reps: int = 3,
+        warmup: int = 1,
+    ) -> Tuple[GrainSample, TimingStats]:
+        """Timed host-stepped execution of ``build_ensemble_launches``.
+
+        One dispatch + host sync per launch — the cadence of the
+        resilience engine and the serving loop, where a per-launch
+        collective is paid at every host boundary instead of amortizing
+        inside one scanned program. Transport choices that only differ
+        in per-dispatch cost (gather impls, async halo transports) are
+        invisible to `measure`'s fused executor and measurable here.
+        """
+        import jax.numpy as jnp
+
+        self._require_ensemble_support(ensemble)
+        lp = self.build_ensemble_launches(ensemble)
+        inits = tuple(
+            jax.block_until_ready(jax.device_put(x))
+            for x in self._ensemble_inits(ensemble)
+        )
+        acts = np.asarray(lp.acts, dtype=np.float32)
+        t0s = [jnp.asarray(lp.launch_t0(l), jnp.int32)
+               for l in range(lp.num_launches)]
+
+        def run_once():
+            carry = jax.block_until_ready(
+                lp.init_fn(tuple(_fresh(x) for x in inits)))
+            for l in range(lp.num_launches):
+                carry = jax.block_until_ready(
+                    lp.launch_fn(carry, acts[l], t0s[l]))
+            return lp.finalize(carry)
+
+        for _ in range(max(warmup, 1)):
+            jax.block_until_ready(run_once())
+        walls: List[float] = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(run_once())
+            walls.append(time.perf_counter() - t0)
+
+        stats = TimingStats(
+            best=min(walls),
+            mean=sum(walls) / len(walls),
+            walls=tuple(walls),
+            dispatches=1 + lp.num_launches,
+        )
+        members = [
+            GrainSample(
+                iterations=g.kernel.iterations,
+                wall_time=stats.best,
+                total_flops=float(g.total_flops()),
+                num_tasks=g.num_tasks,
+                cores=len(self.devices),
+            )
+            for g in ensemble.members
+        ]
+        return combine_grain_samples(members, wall_time=stats.best), stats
+
 
 # ----------------------------------------------------------------- registry
 

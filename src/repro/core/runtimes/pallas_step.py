@@ -121,12 +121,20 @@ from repro.kernels.taskbench_step import (
     finalize_weights,
     prepare_step_operands,
 )
+from repro.launch.mesh import make_row_member_mesh
 
 #: Execution-plan kinds the pattern→plan dispatch resolves to.
 PLAN_HALO = "halo"
 PLAN_STRIDE = "stride"
 PLAN_ALLGATHER = "allgather"
 PLAN_KINDS = (PLAN_HALO, PLAN_STRIDE, PLAN_ALLGATHER)
+
+#: Second mesh axis of the 2D (row, member) mesh: stacked ensembles shard
+#: K members along it (``member_shards`` option), while every halo /
+#: stride / gather transport keeps running over AXIS — in a 2D mesh a
+#: named-axis collective only spans its own axis, so row transports
+#: never cross the member axis by construction (DESIGN.md §12).
+MEMBER_AXIS = "member"
 
 
 def _ext_dep_operands(
@@ -651,14 +659,18 @@ class PallasStepRuntime(_BspBase):
             return "pair"
         return "onehot" if jax.default_backend() == "tpu" else "gather"
 
-    def _operands(self, graph: TaskGraph, halo: int):
+    def _operands(self, graph: TaskGraph, halo: int,
+                  block: Optional[int] = None):
         """Host-built (idx, wgt, idx0, wgt0) for one member graph (S=1).
 
         The t>=1 operands follow the selected combine mode; the t=0 (body
         only) call is always a 1-column self window, which is identical
         across modes (window offset 0 == gather of own row).
+        ``block`` overrides the per-device row count (the K-sharded 2D
+        mesh shards rows over Dr < D devices, so its blocks are larger
+        than ``_block``'s 1D default).
         """
-        B = self._block(graph)
+        B = self._block(graph) if block is None else block
         if self._combine_mode() == "window":
             idx, wgt = _window_operands(graph, halo)
         else:
@@ -666,14 +678,15 @@ class PallasStepRuntime(_BspBase):
         idx0, wgt0 = _self_operands(graph.width, B)
         return idx, wgt, idx0, wgt0
 
-    def _blocked_operands(self, graph: TaskGraph, halo: int):
+    def _blocked_operands(self, graph: TaskGraph, halo: int,
+                          block: Optional[int] = None):
         """Host-built (idx, wgt, idx0, wgt0) for the blocked path.
 
         Window mode reuses the per-global-row weight table; gather/onehot
         switch to SIGNED offsets (_rel_dep_operands) so the tables can be
         deep-halo-exchanged and rebased onto the working buffer in-scan.
         """
-        B = self._block(graph)
+        B = self._block(graph) if block is None else block
         if self._combine_mode() == "window":
             idx, wgt = _window_operands(graph, halo)
         else:
@@ -702,6 +715,83 @@ class PallasStepRuntime(_BspBase):
         single-collective default) or "ppermute" (per-direction; isolates
         the pure scheduling effect in ablations)."""
         return str(self.options.get("halo_impl", "xla"))
+
+    def _gather_impl(self, width: int) -> str:
+        """Transport for the all-gather plan's ``gather_global``.
+
+        ``gather_impl`` option: an explicit registry name wins; "auto"
+        (default) follows a non-default ``halo_impl`` (so ppermute/chaos
+        ablations keep injecting into the gather, the pre-2D behavior)
+        and otherwise asks the schedule layer to rank chunked vs
+        monolithic at this (devices, width) — measured walls when the
+        cost model has the devices-dimension probes, the ~sqrt(D)
+        rendezvous heuristic past D >= 16 otherwise. Every choice is
+        bit-identical; only the wall changes.
+        """
+        opt = str(self.options.get("gather_impl", "auto"))
+        if opt != "auto":
+            if opt not in _halo.GATHER_IMPLS:
+                raise ValueError(
+                    f"unknown gather impl {opt!r}; known "
+                    f"{sorted(_halo.GATHER_IMPLS)}")
+            return opt
+        halo = self._halo_impl()
+        if halo != "xla" and halo in _halo.GATHER_IMPLS:
+            return halo
+        impl, _reason = _schedule.choose_gather_impl(
+            width=width, devices=len(self.devices),
+            model=self._cost_model())
+        return impl
+
+    def _member_shards(self, ensemble: GraphEnsemble) -> int:
+        """Resolved Dk for the stacked ensemble paths (``member_shards``
+        option; default 1 = the replicated 1D row mesh). "auto" asks the
+        schedule layer to price the (Dr, Dk) split. An explicit Dk that
+        cannot shard this ensemble's K is rejected loudly here (the mesh
+        builder rejects Dk not dividing the device count the same way)."""
+        raw = self.options.get("member_shards", 1)
+        K = len(ensemble.members)
+        D = len(self.devices)
+        if _schedule.is_auto(raw):
+            g = ensemble.members[0]
+            dk, _reason = _schedule.choose_member_shards(
+                devices=D, num_members=K, width=g.width,
+                steps_per_launch=self._ensemble_steps_per_launch(ensemble),
+                radius=max(_patterns.halo_radius(m)
+                           for m in ensemble.members),
+                model=self._cost_model(g.payload))
+            return dk
+        dk = int(raw)
+        if dk < 1:
+            raise ValueError(f"member_shards must be >= 1, got {dk}")
+        if dk == 1:
+            return 1
+        if K % dk:
+            raise ValueError(
+                f"member_shards={dk} does not divide this ensemble's "
+                f"K={K} members — each member-axis shard needs an equal "
+                f"K/Dk slice of the stacked (K, B, payload) state. Pass "
+                f"member_shards=1 (or a divisor of {K}) to fall back to "
+                f"the replicated 1D row mesh.")
+        if D % dk:
+            # same loud contract as make_row_member_mesh, raised before
+            # any shard_map can fail with an opaque XLA error
+            make_row_member_mesh(self.devices, dk, row_axis=AXIS,
+                                 member_axis=MEMBER_AXIS)
+        return dk
+
+    def _stacked_mesh(self, ensemble: GraphEnsemble):
+        """(mesh, dk, Dr) for the stacked paths: the 2D (row, member)
+        mesh when member_shards > 1, else the 1D row mesh. Row-axis
+        collectives span Dr = D / Dk devices either way (AXIS is the
+        leading mesh axis in both)."""
+        dk = self._member_shards(ensemble)
+        D = len(self.devices)
+        if dk == 1:
+            return self._mesh(), 1, D
+        mesh = make_row_member_mesh(self.devices, dk, row_axis=AXIS,
+                                    member_axis=MEMBER_AXIS)
+        return mesh, dk, D // dk
 
     def _pipeline_active(self, block: int, s: int, halo: int,
                          payload: Optional[int] = None) -> bool:
@@ -1041,17 +1131,37 @@ class PallasStepRuntime(_BspBase):
         timestep t's (idx, wgt) tables (``_global_table_fn``), slice this
         device's output rows out of the global tables, one megakernel
         launch. Tables ride as closures (global tables are
-        device-invariant; the per-device slice happens in-scan)."""
+        device-invariant; the per-device slice happens in-scan).
+
+        Uniform all_to_all skips the gather entirely (``psum_mean``
+        option, default on): every row's combine is the same global mean,
+        so one psum of the local row-sums replaces the O(W) replication —
+        within float32 reduction tolerance of the gathered combine, not
+        bit-identical (summation order differs)."""
         D = len(self.devices)
         B = self._block(graph)
+        W = graph.width
         kw = self._kernel_kw(graph.kernel,
                              combine=self._plan_combine(PLAN_ALLGATHER))
-        impl = self._halo_impl()
+        impl = self._gather_impl(W)
         tables_for, time_varying = self._global_table_fn(graph)
         i0, w0 = _self_tables(B)
 
         def t0(s, o):
             return _kops.taskbench_step(s[None], i0[None], w0[None], **kw)[0]
+
+        if (graph.pattern == "all_to_all"
+                and bool(self.options.get("psum_mean", True))):
+
+            def step(s, o, t):
+                mean = _halo.global_mean(s, W, D, AXIS)
+                src = jnp.broadcast_to(mean[None, :], (B, mean.shape[0]))
+                # self tables on the combined rows: the same body-only
+                # launch shape as t0 (combine of src[p] is src[p] itself)
+                return _kops.taskbench_step(
+                    src[None], i0[None], w0[None], **kw)[0]
+
+            return t0, step
 
         def step(s, o, t):
             full = _halo.gather_global(s, D, AXIS, impl=impl)
@@ -1120,7 +1230,7 @@ class PallasStepRuntime(_BspBase):
                               combine=self._plan_combine(PLAN_ALLGATHER))
         kwb = dict(kw0, steps_per_launch=S)
         kwb.pop("block_rows", None)
-        impl = self._halo_impl()
+        impl = self._gather_impl(graph.width)
         tables_for, time_varying = self._global_table_fn(graph)
         acts = _act_schedule((T,), T, S)[:, 0]  # (L, S)
         # first timestep of each launch (selects the depth tables in-scan)
@@ -1173,19 +1283,29 @@ class PallasStepRuntime(_BspBase):
         return self._build_ensemble_tuple(ensemble)
 
     def _build_ensemble_stacked(self, ensemble: GraphEnsemble) -> Callable:
-        """All K members' combines + bodies in ONE megakernel launch/step."""
+        """All K members' combines + bodies in ONE megakernel launch/step.
+
+        With ``member_shards`` Dk > 1 the shard_map runs over the 2D
+        (row, member) mesh: the K axis splits Dk ways (so each device
+        holds a (K/Dk, W/Dr, P) slice instead of all K members), rows
+        split over the remaining Dr = D/Dk row devices, and every halo
+        exchange still names AXIS — spanning only its Dr-device row
+        subgroup, never the member axis. Outputs are bit-identical to the
+        replicated path (same per-row arithmetic, only ownership moves).
+        """
         members = ensemble.members
         K = len(members)
         unroll = int(self.options.get("unroll", 1))
-        mesh = self._mesh()
-        D = len(self.devices)
+        mesh, dk, Dr = self._stacked_mesh(ensemble)
         H = max(_patterns.halo_radius(g) for g in members)
         kw = self._kernel_kw(members[0].kernel)
         steps = ensemble.steps
         hetero = ensemble.heterogeneous_steps
         member_steps = np.asarray(ensemble.member_steps, np.int32)
+        kspec = P(MEMBER_AXIS, AXIS) if dk > 1 else P(None, AXIS)
+        mspec = P(MEMBER_AXIS) if dk > 1 else P()
 
-        ops4 = [self._operands(g, H) for g in members]
+        ops4 = [self._operands(g, H, block=g.width // Dr) for g in members]
         idx, wgt, idx0, wgt0 = _stack_operands(ops4)
 
         def megastep(ext_src, i, w):  # (K, S, P), (K, B, D'), (K, B, D')
@@ -1197,7 +1317,7 @@ class PallasStepRuntime(_BspBase):
                 return state
 
             def body(s, t):
-                nxt = megastep(_extend_state(s, H, D, row_axis=1), i, w)
+                nxt = megastep(_extend_state(s, H, Dr, row_axis=1), i, w)
                 if hetero:  # freeze members whose own T is exhausted
                     active = (t < msteps)[:, None, None]
                     nxt = jnp.where(active, nxt, s)
@@ -1211,13 +1331,14 @@ class PallasStepRuntime(_BspBase):
         fn = jax.jit(
             shard_map(
                 local_run, mesh=mesh, check_vma=False,
-                in_specs=(P(None, AXIS),) * 5 + (P(),), out_specs=P(None, AXIS),
+                in_specs=(kspec,) * 5 + (mspec,), out_specs=kspec,
             )
         )
-        sh = NamedSharding(mesh, P(None, AXIS))
+        sh = NamedSharding(mesh, kspec)
         consts = tuple(
             jax.device_put(jnp.asarray(a), sh) for a in (idx, wgt, idx0, wgt0)
-        ) + (jnp.asarray(member_steps),)
+        ) + (jax.device_put(jnp.asarray(member_steps),
+                            NamedSharding(mesh, mspec)),)
 
         def run(inits):
             out = fn(jax.device_put(jnp.stack(inits), sh), *consts)
@@ -1232,8 +1353,7 @@ class PallasStepRuntime(_BspBase):
         members = ensemble.members
         K = len(members)
         unroll = int(self.options.get("unroll", 1))
-        mesh = self._mesh()
-        D = len(self.devices)
+        mesh, dk, Dr = self._stacked_mesh(ensemble)
         H = max(_patterns.halo_radius(g) for g in members)
         depth = S * H
         mode = self._combine_mode()
@@ -1241,11 +1361,16 @@ class PallasStepRuntime(_BspBase):
         kwb = dict(kw0, steps_per_launch=S)
         kwb.pop("block_rows", None)
         steps = ensemble.steps
+        kspec = P(MEMBER_AXIS, AXIS) if dk > 1 else P(None, AXIS)
+        # acts is (L, K, S): the member axis shards its K slices alongside
+        # the state, so each device only masks the members it owns
+        aspec = P(None, MEMBER_AXIS) if dk > 1 else P()
 
-        ops4 = [self._blocked_operands(g, H) for g in members]
+        ops4 = [self._blocked_operands(g, H, block=g.width // Dr)
+                for g in members]
         idx, wgt, idx0, wgt0 = _stack_operands(ops4)
         acts = _act_schedule(ensemble.member_steps, steps, S)  # (L, K, S)
-        pipelined = self._pipeline_active(self._block(members[0]), S, H,
+        pipelined = self._pipeline_active(members[0].width // Dr, S, H,
                                           members[0].payload)
         impl = self._halo_impl()
 
@@ -1258,13 +1383,13 @@ class PallasStepRuntime(_BspBase):
                 # one boundary launch (K row-fused 6*depth-row programs) +
                 # one interior launch per deep exchange — every member
                 # shares both
-                ph = _phase_tables(i, w, depth, D, mode)
-                h = _prologue_exchange(state, depth, D, impl)
+                ph = _phase_tables(i, w, depth, Dr, mode)
+                h = _prologue_exchange(state, depth, Dr, impl)
 
                 def pbody(carry, a):  # a: (K, S)
                     s, hl, hr = carry
                     s2, h2 = _pipelined_launch(
-                        s, hl, hr, a, ph, depth, D, kwb, impl)
+                        s, hl, hr, a, ph, depth, Dr, kwb, impl)
                     return (s2, h2.recv_left, h2.recv_right), None
 
                 (state, _, _), _ = jax.lax.scan(
@@ -1272,10 +1397,10 @@ class PallasStepRuntime(_BspBase):
                     act_seq, unroll=unroll)
                 return state
 
-            iext, wext = _extend_tables(i, w, depth, D, mode, row_axis=1)
+            iext, wext = _extend_tables(i, w, depth, Dr, mode, row_axis=1)
 
             def body(s, a):  # a: (K, S) per-member per-depth activity
-                ext = _extend_state(s, depth, D, row_axis=1)
+                ext = _extend_state(s, depth, Dr, row_axis=1)
                 nf = _kops.taskbench_step(ext, iext, wext, a, **kwb)
                 return jax.lax.slice_in_dim(nf, depth, depth + B, axis=1), None
 
@@ -1285,11 +1410,11 @@ class PallasStepRuntime(_BspBase):
         fn = jax.jit(
             shard_map(
                 local_run, mesh=mesh, check_vma=False,
-                in_specs=(P(None, AXIS),) * 5 + (P(),), out_specs=P(None, AXIS),
+                in_specs=(kspec,) * 5 + (aspec,), out_specs=kspec,
             )
         )
-        sh = NamedSharding(mesh, P(None, AXIS))
-        rep = NamedSharding(mesh, P())
+        sh = NamedSharding(mesh, kspec)
+        rep = NamedSharding(mesh, aspec)
         consts = tuple(
             jax.device_put(jnp.asarray(a), sh) for a in (idx, wgt, idx0, wgt0)
         ) + (jax.device_put(jnp.asarray(acts), rep),)
@@ -1495,54 +1620,73 @@ class PallasStepRuntime(_BspBase):
         unrolled to the host so the engine owns the launch loop."""
         members = ensemble.members
         K = len(members)
-        mesh = self._mesh()
-        D = len(self.devices)
-        B = self._block(members[0])
+        mesh, dk, Dr = self._stacked_mesh(ensemble)
+        B = members[0].width // Dr
         H = max(_patterns.halo_radius(g) for g in members)
         depth = S * H
         mode = self._combine_mode()
         kw0 = self._kernel_kw(members[0].kernel)
         steps = ensemble.steps
         acts = _act_schedule(ensemble.member_steps, steps, S)  # (L, K, S)
+        kspec = P(MEMBER_AXIS, AXIS) if dk > 1 else P(None, AXIS)
+        # the act row (K, S) shards its K slices with the state, so the
+        # engine's host-side eviction edits (acts[l:, k, :] = 0) land on
+        # exactly the member-shard that owns slot k
+        aspec = P(MEMBER_AXIS) if dk > 1 else P()
+        # admitted init rows replicate over the member axis (only the
+        # owning shard writes them) and row-shard over AXIS
+        ispec = P(None, AXIS)
 
         if S > 1:
             kwb = dict(kw0, steps_per_launch=S)
             kwb.pop("block_rows", None)
-            ops4 = [self._blocked_operands(g, H) for g in members]
+            ops4 = [self._blocked_operands(g, H, block=B) for g in members]
         else:
-            ops4 = [self._operands(g, H) for g in members]
+            ops4 = [self._operands(g, H, block=B) for g in members]
         idx, wgt, idx0, wgt0 = _stack_operands(ops4)
 
         def t0_local(local, i0, w0):  # (K, B, P)
             return _kops.taskbench_step(local, i0, w0, **kw0)
 
-        def launch_local(s, i, w, a):  # a: (K, S) replicated
+        def launch_local(s, i, w, a):  # a: (K, S), K-sharded with state
             if S > 1:
-                iext, wext = _extend_tables(i, w, depth, D, mode, row_axis=1)
-                ext = _extend_state(s, depth, D, row_axis=1)
+                iext, wext = _extend_tables(i, w, depth, Dr, mode, row_axis=1)
+                ext = _extend_state(s, depth, Dr, row_axis=1)
                 nf = _kops.taskbench_step(ext, iext, wext, a, **kwb)
                 return jax.lax.slice_in_dim(nf, depth, depth + B, axis=1)
             nxt = _kops.taskbench_step(
-                _extend_state(s, H, D, row_axis=1), i, w, **kw0)
+                _extend_state(s, H, Dr, row_axis=1), i, w, **kw0)
             # per-member freeze: same predicate the stacked scan applies
             # (act row at S=1 is exactly t < T_k)
             return jnp.where(a[:, 0][:, None, None] > 0, nxt, s)
 
         def admit_local(s, init, i0, w0, slot):  # init: (1, B, P)
             t0 = _kops.taskbench_step(init, i0[:1], w0[:1], **kw0)
+            if dk > 1:
+                # global slot -> this member-shard's local K range; only
+                # the owning shard commits the update (clamped slice +
+                # where keeps everything shape-static under shard_map)
+                kl = s.shape[0]
+                loc = slot - jax.lax.axis_index(MEMBER_AXIS) * kl
+                owned = jnp.logical_and(loc >= 0, loc < kl)
+                upd = jax.lax.dynamic_update_slice_in_dim(
+                    s, t0, jnp.clip(loc, 0, kl - 1), axis=0)
+                return jnp.where(owned, upd, s)
             return jax.lax.dynamic_update_slice_in_dim(s, t0, slot, axis=0)
 
-        sh = NamedSharding(mesh, P(None, AXIS))
-        rep = NamedSharding(mesh, P())
+        sh = NamedSharding(mesh, kspec)
+        rep = NamedSharding(mesh, aspec)
+        ish = NamedSharding(mesh, ispec)
         t0_fn = jax.jit(shard_map(
             t0_local, mesh=mesh, check_vma=False,
-            in_specs=(P(None, AXIS),) * 3, out_specs=P(None, AXIS)))
+            in_specs=(kspec,) * 3, out_specs=kspec))
         launch = jax.jit(shard_map(
             launch_local, mesh=mesh, check_vma=False,
-            in_specs=(P(None, AXIS),) * 3 + (P(),), out_specs=P(None, AXIS)))
+            in_specs=(kspec,) * 3 + (aspec,), out_specs=kspec))
         admit = jax.jit(shard_map(
             admit_local, mesh=mesh, check_vma=False,
-            in_specs=(P(None, AXIS),) * 4 + (P(),), out_specs=P(None, AXIS)))
+            in_specs=(kspec, ispec) + (kspec,) * 2 + (P(),),
+            out_specs=kspec))
         consts = tuple(
             jax.device_put(jnp.asarray(a), sh) for a in (idx, wgt, idx0, wgt0))
 
@@ -1570,7 +1714,7 @@ class PallasStepRuntime(_BspBase):
             finalize=lambda carry: tuple(carry[k] for k in range(K)),
             admit_fn=admit_fn,
             expected_launch_us=_schedule.expected_launch_wall_us(
-                rows=K * B, steps_per_launch=S, model=model,
+                rows=(K // dk) * B, steps_per_launch=S, model=model,
                 impl=self._halo_impl()),
             kind="stacked",
         )
@@ -2140,7 +2284,7 @@ class PallasStepRuntime(_BspBase):
         B = self._block(graph)
         kw = self._kernel_kw(graph.kernel,
                              combine=self._plan_combine(PLAN_ALLGATHER))
-        impl = self._halo_impl()
+        impl = self._gather_impl(graph.width)
         tr = self.tracer
         sh = NamedSharding(mesh, P(AXIS))
         tab_at = self._global_tables_host(graph)
@@ -2150,6 +2294,37 @@ class PallasStepRuntime(_BspBase):
             lambda local: _kops.taskbench_step(
                 local[None], i0[None], w0[None], **kw)[0],
             mesh=mesh, check_vma=False, in_specs=P(AXIS), out_specs=P(AXIS)))
+
+        if (graph.pattern == "all_to_all"
+                and bool(self.options.get("psum_mean", True))):
+            # production's psum-mean lowering, host-stepped: one reduction
+            # span replaces the gather span (same numerics as execute())
+            W = graph.width
+
+            def psum_step(local):
+                mean = _halo.global_mean(local, W, D, AXIS)
+                src = jnp.broadcast_to(mean[None, :], (B, mean.shape[0]))
+                return _kops.taskbench_step(
+                    src[None], i0[None], w0[None], **kw)[0]
+
+            p_fn = jax.jit(shard_map(
+                psum_step, mesh=mesh, check_vma=False,
+                in_specs=P(AXIS), out_specs=P(AXIS)))
+
+            def run(init):
+                with tr.span("t0_launch", "dispatch", step=0):
+                    st = t0_fn(jax.device_put(init, sh))
+                with tr.span("t0_kernel", "compute.interior", step=0):
+                    st = jax.block_until_ready(st)
+                for t in range(1, graph.steps):
+                    with _halo.transport_span(
+                            tr, "gather_psum_mean", impl="psum",
+                            step=t, width=W):
+                        st = jax.block_until_ready(p_fn(st))
+                return st
+
+            return run
+
         g_fn = jax.jit(shard_map(
             lambda local: _halo.gather_global(local, D, AXIS, impl=impl),
             mesh=mesh, check_vma=False, in_specs=P(AXIS), out_specs=P()))
@@ -2194,7 +2369,7 @@ class PallasStepRuntime(_BspBase):
                               combine=self._plan_combine(PLAN_ALLGATHER))
         kwb = dict(kw0, steps_per_launch=S)
         kwb.pop("block_rows", None)
-        impl = self._halo_impl()
+        impl = self._gather_impl(graph.width)
         tr = self.tracer
         sh = NamedSharding(mesh, P(AXIS))
         rep = NamedSharding(mesh, P())

@@ -97,6 +97,14 @@ class CostModel:
     halo_exchange_us: Dict[str, float] = dataclasses.field(default_factory=dict)
     stride_exchange_us: Dict[str, float] = dataclasses.field(default_factory=dict)
     gather_us: Dict[int, float] = dataclasses.field(default_factory=dict)
+    #: impl -> devices -> width -> us: the devices-dimension gather probes
+    #: behind schedule.choose_gather_impl (chunked-vs-monolithic is a
+    #: function of D, not just W, so the flat gather_us curve cannot rank
+    #: transports). Optional — absent on pre-PR-9 calibrations, which
+    #: still load (same schema) and simply fall back to the structural
+    #: gather rule.
+    gather_impl_us: Dict[str, Dict[int, Dict[int, float]]] = (
+        dataclasses.field(default_factory=dict))
     platform: str = ""
     devices: int = 0
     payload: int = 0
@@ -116,14 +124,15 @@ class CostModel:
         return (self.is_measured and self.launch_us is not None
                 and self.row_step_us is not None and bool(self.gather_us))
 
-    def gather_us_at(self, width: int) -> Optional[float]:
-        """Measured ``gather_global`` wall at ``width``, piecewise-linear
-        between probed widths and clamp-extrapolated with the end slopes
-        (collective walls are near-affine in bytes moved at these sizes).
-        None when the model has no gather probes."""
-        if not self.gather_us:
+    @staticmethod
+    def _interp_width(curve: Dict[int, float],
+                      width: int) -> Optional[float]:
+        """Piecewise-linear over probed widths, clamp-extrapolated with
+        the end slopes (collective walls are near-affine in bytes moved
+        at these sizes). None on an empty curve."""
+        if not curve:
             return None
-        pts = sorted(self.gather_us.items())
+        pts = sorted(curve.items())
         if len(pts) == 1 or width <= pts[0][0]:
             lo, hi = pts[0], pts[min(1, len(pts) - 1)]
         elif width >= pts[-1][0]:
@@ -135,6 +144,28 @@ class CostModel:
             return float(lo[1])
         slope = (hi[1] - lo[1]) / (hi[0] - lo[0])
         return float(max(0.0, lo[1] + slope * (width - lo[0])))
+
+    def gather_us_at(self, width: int) -> Optional[float]:
+        """Measured ``gather_global`` wall at ``width`` (default
+        transport), interpolated per :meth:`_interp_width`. None when the
+        model has no gather probes."""
+        return self._interp_width(self.gather_us, width)
+
+    def gather_walls_at(self, width: int,
+                        devices: Optional[int] = None) -> Dict[str, float]:
+        """Per-transport gather walls at (devices, width) from the
+        devices-dimension probes: impl -> interpolated us, only for impls
+        probed at exactly ``devices`` (a wall measured at D' devices says
+        nothing about the rendezvous structure at D — the same
+        exact-device-match rule ``_match_entry`` enforces for whole
+        models). Empty when nothing was probed at that count."""
+        d = int(devices) if devices is not None else self.devices
+        out: Dict[str, float] = {}
+        for impl, by_devices in self.gather_impl_us.items():
+            us = self._interp_width(by_devices.get(d, {}), width)
+            if us is not None:
+                out[impl] = us
+        return out
 
     def stride_us_for(self, impl: str = "xla") -> Optional[float]:
         """One XOR block-exchange wall for ``impl``, falling back to any
@@ -181,6 +212,10 @@ class CostModel:
         d = dataclasses.asdict(self)
         # JSON object keys are strings; keep widths sorted for stable files
         d["gather_us"] = {str(k): v for k, v in sorted(self.gather_us.items())}
+        d["gather_impl_us"] = {
+            impl: {str(dd): {str(w): us for w, us in sorted(curve.items())}
+                   for dd, curve in sorted(by_d.items())}
+            for impl, by_d in sorted(self.gather_impl_us.items())}
         return d
 
     @classmethod
@@ -192,6 +227,11 @@ class CostModel:
         d = dict(d)
         d["gather_us"] = {int(k): float(v)
                           for k, v in d.get("gather_us", {}).items()}
+        d["gather_impl_us"] = {
+            str(impl): {int(dd): {int(w): float(us)
+                                  for w, us in curve.items()}
+                        for dd, curve in by_d.items()}
+            for impl, by_d in d.get("gather_impl_us", {}).items()}
         return cls(**d)
 
     def cache_key(self) -> str:
@@ -362,6 +402,34 @@ def _time_best_us(fn, reps: int, warmup: int = 1) -> float:
     return best * 1e6
 
 
+def _time_median_us(fn, reps: int, warmup: int = 2) -> float:
+    """Median-of-reps wall of ``fn()`` in microseconds.
+
+    For per-dispatch collectives on an oversubscribed (forced-host) mesh
+    the wall distribution is heavy-tailed by thread scheduling — a full
+    D-participant barrier pays a convoy tax whenever the scheduler wakes
+    its threads in an unlucky order. Best-of-reps erases exactly that
+    tail, ranking transports by a best case no dispatch cadence ever
+    pays repeatedly; the median is what a host-stepped launch loop pays
+    per launch, so transport CHOICE probes use it."""
+    import time
+
+    import jax
+
+    for _ in range(max(1, warmup)):
+        jax.block_until_ready(fn())
+    walls = []
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        walls.append(time.perf_counter() - t0)
+    walls.sort()
+    n = len(walls)
+    mid = n // 2
+    med = walls[mid] if n % 2 else 0.5 * (walls[mid - 1] + walls[mid])
+    return med * 1e6
+
+
 def _step_call(width: int, payload: int):
     """A zero-arg thunk running ONE single-step window-mode launch of the
     fused step kernel over ``width`` rows (radius-1 three-point stencil:
@@ -419,9 +487,18 @@ def _probe_mesh(devices: int):
 
 
 def _sharded_wall_us(local_fn, devices: int, rows_per_device: int,
-                     payload: int, reps: int) -> float:
+                     payload: int, reps: int,
+                     stat: str = "best",
+                     replicated_out: bool = False) -> float:
     """Wall of one jitted shard_map'd ``local_fn(local) -> array`` over a
-    (devices*rows, payload) f32 operand."""
+    (devices*rows, payload) f32 operand. ``stat`` picks the aggregation:
+    "best" (floor probes) or "median" (transport-choice probes — see
+    ``_time_median_us`` for why). ``replicated_out`` returns the local
+    fn's result replicated (P(None)) instead of row-sharded — gather
+    probes need it so the program's product IS the gathered buffer; a
+    reduction-style consumption instead invites XLA to rewrite the
+    gather+reduce into a cheaper collective and the probe stops
+    measuring the transport it names."""
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
@@ -429,10 +506,12 @@ def _sharded_wall_us(local_fn, devices: int, rows_per_device: int,
     from repro.compat import shard_map
 
     mesh = _probe_mesh(devices)
+    out_specs = P(None) if replicated_out else P(_AXIS)
     fn = jax.jit(shard_map(local_fn, mesh=mesh, check_vma=False,
-                           in_specs=P(_AXIS), out_specs=P(_AXIS)))
+                           in_specs=P(_AXIS), out_specs=out_specs))
     arr = jnp.zeros((devices * rows_per_device, payload), jnp.float32)
-    return _time_best_us(lambda: fn(arr), reps)
+    timer = _time_median_us if stat == "median" else _time_best_us
+    return timer(lambda: fn(arr), reps)
 
 
 def probe_halo_exchange_us(devices: int, payload: int = 64, *,
@@ -500,6 +579,72 @@ def probe_gather_us(devices: int, payload: int = 64, *,
     return out
 
 
+def _gather_probe_device_counts(devices: int) -> Tuple[int, ...]:
+    """The devices-dimension grid: the calibration count and its /2, /4
+    subdivisions when they divide it (subgroup meshes over a prefix of the
+    same device set), all >= 2. One calibration run then serves the
+    scaling sweep's smaller Ds without extra subprocesses."""
+    counts = []
+    for d in (devices, devices // 2, devices // 4):
+        if d >= 2 and devices % d == 0 and d not in counts:
+            counts.append(d)
+    return tuple(counts)
+
+
+def probe_gather_impl_us(devices: int, payload: int = 64, *,
+                         widths: Sequence[int] = (64, 256, 512),
+                         impls: Sequence[str] = ("xla", "chunked"),
+                         device_counts: Optional[Sequence[int]] = None,
+                         reps: int = 25,
+                         ) -> Dict[str, Dict[int, Dict[int, float]]]:
+    """``gather_global`` wall per (transport, device count, width) — the
+    devices-dimension behind ``schedule.choose_gather_impl``. Each sub
+    count runs on a mesh over a prefix of the available devices; widths
+    that don't divide a count are skipped for it, and impls that degrade
+    to the monolithic path at a count (chunked with no usable segment
+    split) are skipped there too so the table never ranks an impl against
+    itself.
+
+    Walls are MEDIAN-of-reps, unlike the floor probes' best-of: the full
+    D-participant barrier's wall is heavy-tailed by scheduler convoy
+    effects on an oversubscribed mesh, and a transport choice paid on
+    every host-stepped dispatch should be ranked by the typical wall,
+    not a best case that erases exactly the tail the chunked gather's
+    bounded rendezvous width avoids."""
+    from repro.core.runtimes import _halo
+
+    counts = tuple(device_counts) if device_counts is not None \
+        else _gather_probe_device_counts(devices)
+    out: Dict[str, Dict[int, Dict[int, float]]] = {}
+    for impl in impls:
+        if impl not in _halo.GATHER_IMPLS:
+            raise ValueError(
+                f"unknown gather impl {impl!r}; known "
+                f"{sorted(_halo.GATHER_IMPLS)}")
+    for d in counts:
+        for impl in impls:
+            if impl == "chunked":
+                g = _halo.gather_chunk_group(d)
+                if g <= 1 or g >= d:
+                    continue  # degrades to xla at this count
+            for width in sorted(set(int(w) for w in widths)):
+                if width < d or width % d:
+                    continue
+
+                def local(x, impl=impl, d=d):
+                    # the program's output IS the gathered (W, P) buffer
+                    # (replicated_out) — what the allgather plan feeds
+                    # the kernel; see _sharded_wall_us for why a
+                    # reduction-style consumption would measure the
+                    # wrong collective
+                    return _halo.gather_global(x, d, _AXIS, impl=impl)
+
+                us = _sharded_wall_us(local, d, width // d, payload, reps,
+                                      stat="median", replicated_out=True)
+                out.setdefault(impl, {}).setdefault(d, {})[width] = us
+    return out
+
+
 def run_probes(devices: Optional[int] = None, payload: int = 64, *,
                reps: int = 5, smoke: bool = False) -> CostModel:
     """All probes -> one measured CostModel (not yet persisted).
@@ -522,6 +667,16 @@ def run_probes(devices: Optional[int] = None, payload: int = 64, *,
     stride = probe_stride_exchange_us(devices, payload, reps=reps)
     gather = probe_gather_us(devices, payload, widths=gather_widths,
                              reps=reps)
+    # Devices-dimension transport table (choose_gather_impl's input):
+    # smoke probes only the calibration count, full runs add the /2, /4
+    # subgroup counts so one calibration serves the scaling sweep.
+    impl_counts = (devices,) if smoke else None
+    # median-of-reps needs a real sample; don't let the floor probes'
+    # small reps starve the transport-choice distribution
+    impl_reps = max(reps, 5 if smoke else 25)
+    gather_impl = probe_gather_impl_us(
+        devices, payload, widths=gather_widths,
+        device_counts=impl_counts, reps=impl_reps) if devices >= 2 else {}
     # The covers/pays-off unit: one exchange in row-steps, priced with the
     # DEFAULT transport ("xla") because that is what the pipelined
     # schedule runs unless ablated.
@@ -536,6 +691,9 @@ def run_probes(devices: Optional[int] = None, payload: int = 64, *,
         halo_exchange_us={k: float(v) for k, v in halo.items()},
         stride_exchange_us={k: float(v) for k, v in stride.items()},
         gather_us={k: float(v) for k, v in gather.items()},
+        gather_impl_us={impl: {d: {w: float(us) for w, us in curve.items()}
+                               for d, curve in by_d.items()}
+                        for impl, by_d in gather_impl.items()},
         platform=_platform(),
         devices=int(devices),
         payload=int(payload),
@@ -569,11 +727,25 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         # Must land before the first jax.devices() call (backend init);
         # merely having imported jax is fine. If some earlier code already
         # initialized a too-small backend, _probe_mesh fails loudly.
+        import re
+
         flags = os.environ.get("XLA_FLAGS", "")
-        if "xla_force_host_platform_device_count" not in flags:
+        m = re.search(r"--xla_force_host_platform_device_count=(\d+)",
+                      flags)
+        if m is None:
             os.environ["XLA_FLAGS"] = (
                 f"{flags} --xla_force_host_platform_device_count="
                 f"{args.devices}").strip()
+        elif int(m.group(1)) < args.devices:
+            # An ambient pin SMALLER than the calibration target used to
+            # survive the substring check above, so the CLI promised
+            # --devices N while run_probes saw the ambient count and
+            # _probe_mesh failed with a mismatch naming neither side.
+            # The backend is not initialized yet in this process, so the
+            # flag can simply be rewritten to what the CLI was asked for.
+            os.environ["XLA_FLAGS"] = flags.replace(
+                m.group(0),
+                f"--xla_force_host_platform_device_count={args.devices}")
         os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
     model = run_probes(devices=args.devices or None, payload=args.payload,

@@ -516,6 +516,111 @@ def gathered_beats_strides(
     return verdict, reason
 
 
+#: below this device count a single rendezvous is already minimal and the
+#: chunked gather's second stage is pure overhead; at/above it the two
+#: ~sqrt(D)-participant segment gathers win structurally on this container
+DEFAULT_CHUNKED_GATHER_MIN_DEVICES = 16
+
+
+def choose_gather_impl(*, width: int, devices: int,
+                       model=None) -> Tuple[str, str]:
+    """Rank gather_global transports at (devices, width).
+
+    All gather impls are bit-identical (exact row copies); only the wall
+    differs, so this is a pure cost choice. A measured model with the
+    devices-dimension gather probes (``gather_impl_us``) ranks by
+    interpolated walls at this exact (D, W); otherwise the structural
+    rule applies: "chunked" at D >= DEFAULT_CHUNKED_GATHER_MIN_DEVICES
+    (two ~sqrt(D)-party segment all-gathers against one D-wide
+    rendezvous), monolithic "xla" below. Returns (impl, reason) with the
+    reason naming the numbers, same contract as gathered_beats_strides.
+    """
+    if devices <= 2:
+        return "xla", (f"{devices} device(s): one rendezvous is already "
+                       f"minimal, nothing to chunk")
+    model = _resolve_model(model)
+    walls = {}
+    if getattr(model, "gather_walls_at", None) is not None:
+        walls = model.gather_walls_at(width, devices) or {}
+    if len(walls) >= 2:
+        impl = min(walls, key=walls.get)
+        detail = ", ".join(
+            f"{k}={v:.1f}us" for k, v in sorted(walls.items()))
+        return impl, (f"measured gather walls at D={devices}, "
+                      f"W={width}: {detail}")
+    if devices >= DEFAULT_CHUNKED_GATHER_MIN_DEVICES:
+        return "chunked", (
+            f"structural: D={devices} >= "
+            f"{DEFAULT_CHUNKED_GATHER_MIN_DEVICES}, two ~sqrt(D)-party "
+            f"segment gathers beat one {devices}-wide rendezvous "
+            f"(no measured devices-dimension probes to overrule)")
+    return "xla", (
+        f"structural: D={devices} < "
+        f"{DEFAULT_CHUNKED_GATHER_MIN_DEVICES}, monolithic all-gather "
+        f"(no measured devices-dimension probes to overrule)")
+
+
+def choose_member_shards(*, devices: int, num_members: int, width: int,
+                         steps_per_launch: int = 1, radius: int = 1,
+                         model=None) -> Tuple[int, str]:
+    """Price the (Dr, Dk) split of the 2D (row, member) mesh.
+
+    Per-device compute is split-invariant — (K/Dk) members x (W/Dr) rows
+    = K*W/D rows whatever the split — so the split is priced on exchange
+    structure alone: sharding K divides every deep-halo payload by Dk
+    (each device ships halos for only its K/Dk members) and grows blocks
+    to W/Dr, cutting the multi-hop count ceil(S*r / B). Candidates are
+    the common divisors Dk of (devices, num_members) that keep a row
+    RING alive (Dr = devices/Dk >= 2; Dr == 1 would drop the halo
+    transport's partner set entirely, a different code path the stacked
+    builders do not take) and W % Dr == 0.
+
+    A measured model prices each candidate as
+
+      hops(Dk) * halo_exchange_us + (K/Dk) * 2*S*r * row_step_us
+
+    (rendezvous count + moved halo rows) and returns the argmin; the
+    analytic fallback keeps Dk=1 — pre-measurement behavior unchanged,
+    same conservatism as gathered_beats_strides.
+    """
+    depth = max(1, int(steps_per_launch)) * max(0, int(radius))
+    candidates = []
+    for dk in range(1, min(devices, num_members) + 1):
+        if devices % dk or num_members % dk:
+            continue
+        dr = devices // dk
+        if dr < 2 and devices > 1:
+            continue
+        if width % dr:
+            continue
+        candidates.append(dk)
+    if not candidates or candidates == [1]:
+        return 1, (f"no viable (Dr, Dk) split: D={devices}, K={num_members} "
+                   f"share no divisor keeping Dr >= 2 and W % Dr == 0")
+    model = _resolve_model(model)
+    halo_us = getattr(model, "halo_exchange_us", None) or {}
+    row_step_us = getattr(model, "row_step_us", None)
+    launch_us = getattr(model, "launch_us", None)
+    if not halo_us or row_step_us is None or launch_us is None:
+        return 1, ("member-shard pricing needs a measured model; "
+                   f"verdict source: {model.describe()} — keeping the "
+                   "replicated 1D row mesh")
+    ex_us = min(halo_us.values())
+
+    def price(dk: int) -> float:
+        block = width // (devices // dk)
+        hops = max(1, -(-depth // max(1, block)))
+        return (hops * ex_us
+                + (num_members / dk) * 2 * depth * row_step_us)
+
+    best = min(candidates, key=price)
+    return best, (
+        f"measured: Dk={best} prices {price(best):.1f}us/launch vs "
+        f"Dk=1 at {price(1):.1f}us "
+        f"(exchange={ex_us:.1f}us, row-step={row_step_us:.3f}us, "
+        f"depth={depth}, K={num_members}, D={devices})")
+
+
 # --------------------------------------------------------------- deadlines
 
 #: deadline = DEADLINE_FACTOR x the model's expected launch wall. Generous

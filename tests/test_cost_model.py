@@ -343,3 +343,82 @@ def test_run_probes_structure_and_round_trip(tmp_path):
     assert m.can_rank_plans
     path = probes.save_cost_model(m, tmp_path / "cm.json")
     assert probes.load_cost_model(path)[m.cache_key()] == m
+
+
+# ------------------------------------- gather transport choice (PR 9)
+
+
+def test_gather_impl_us_codec_round_trip():
+    """The devices-dimension probes survive JSON (string keys at both
+    nested int levels) and stay OPTIONAL: a pre-PR-9 dict without the
+    field loads as an empty table under the same schema."""
+    m = measured(devices=16,
+                 gather_impl_us={"xla": {16: {64: 900.0, 256: 1100.0}},
+                                 "chunked": {16: {64: 500.0}, 8: {64: 450.0}}})
+    r = probes.CostModel.from_dict(json.loads(json.dumps(m.to_dict())))
+    assert r == m
+    assert r.gather_walls_at(64, 16) == {"xla": 900.0, "chunked": 500.0}
+    # exact-device-match rule: D=8 only has the chunked probe
+    assert r.gather_walls_at(64, 8) == {"chunked": 450.0}
+    assert r.gather_walls_at(64, 4) == {}
+    legacy = {k: v for k, v in m.to_dict().items() if k != "gather_impl_us"}
+    assert probes.CostModel.from_dict(legacy).gather_impl_us == {}
+
+
+def test_choose_gather_impl_measured_ranks_walls():
+    m = measured(devices=16,
+                 gather_impl_us={"xla": {16: {64: 900.0}},
+                                 "chunked": {16: {64: 500.0}}})
+    impl, why = schedule.choose_gather_impl(width=64, devices=16, model=m)
+    assert impl == "chunked"
+    for needle in ("measured", "chunked=500.0us", "xla=900.0us"):
+        assert needle in why, why
+    # the measured table outranks the structural rule in BOTH directions
+    m2 = measured(devices=16,
+                  gather_impl_us={"xla": {16: {64: 400.0}},
+                                  "chunked": {16: {64: 500.0}}})
+    impl, _ = schedule.choose_gather_impl(width=64, devices=16, model=m2)
+    assert impl == "xla"
+
+
+def test_choose_gather_impl_structural_crossover():
+    """No devices-dimension probes -> the structural rule: monolithic
+    below D=16, chunked at and above, and the reason says why."""
+    for d, want in [(2, "xla"), (8, "xla"), (16, "chunked"),
+                    (64, "chunked")]:
+        impl, why = schedule.choose_gather_impl(width=256, devices=d,
+                                                model=measured())
+        assert impl == want, (d, impl, why)
+    _, why = schedule.choose_gather_impl(width=256, devices=16,
+                                         model=measured())
+    assert "sqrt(D)" in why
+
+
+def test_choose_member_shards_analytic_keeps_replicated():
+    dk, why = schedule.choose_member_shards(devices=8, num_members=4,
+                                            width=64)
+    assert dk == 1
+    assert "analytic" in why
+
+
+def test_choose_member_shards_measured_prices_split():
+    """With a measured model, sharding K divides the moved halo rows, so
+    the priced argmin picks a real split; candidates that break a row
+    ring (Dr < 2) or width divisibility are never offered."""
+    m = measured(devices=8)
+    dk, why = schedule.choose_member_shards(devices=8, num_members=4,
+                                            width=64, steps_per_launch=2,
+                                            model=m)
+    assert dk == 4  # Dr=2 keeps the ring; the largest K split wins
+    assert "measured" in why and "us/launch" in why
+    # K=3 shares no divisor > 1 with D=8: no viable split, loud reason
+    dk, why = schedule.choose_member_shards(devices=8, num_members=3,
+                                            width=64, model=m)
+    assert dk == 1 and "no viable" in why
+
+
+def test_run_probes_smoke_includes_gather_impl_table():
+    """run_probes now carries the devices-dimension transport table; on a
+    single device it stays empty (nothing to rendezvous)."""
+    m = probes.run_probes(devices=1, smoke=True, reps=1)
+    assert m.gather_impl_us == {}

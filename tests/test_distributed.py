@@ -596,3 +596,143 @@ def test_resilient_ensemble_recovery_on_4_devices():
             assert np.array_equal(got, np.asarray(ref))
         print("OK frozen@", frozen)
     """, devices=4)
+
+
+def test_gather_transports_match_monolithic_oracle_16_devices():
+    """PR 9: the chunked hierarchical gather at D=16 (chunk group 4, a
+    real two-stage split) is bit-identical to the monolithic all-gather
+    AND to the numpy global-order oracle — gathers move exact row copies,
+    so any reordering in the segment/stride stages would show as an exact
+    mismatch here, not a tolerance failure."""
+    run_sub("""
+        import numpy as np
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.core.runtimes import _halo
+
+        D = 16
+        mesh = Mesh(np.array(jax.devices()[:D]), ("shard",))
+        W, payload = 64, 3
+        x = jnp.arange(W * payload, dtype=jnp.float32).reshape(W, payload)
+        oracle = np.asarray(x)
+        assert _halo.gather_chunk_group(D) == 4
+        outs = {}
+        for impl in ("xla", "ppermute", "chunked"):
+            fn = jax.jit(shard_map(
+                lambda l, impl=impl: _halo.gather_global(
+                    l, D, "shard", impl=impl),
+                mesh=mesh, in_specs=P("shard"), out_specs=P(None),
+                check_vma=False))
+            out = np.asarray(fn(x))
+            assert out.shape == oracle.shape, impl
+            assert (out == oracle).all(), impl
+            outs[impl] = out
+        assert (outs["chunked"] == outs["xla"]).all()
+        print("OK")
+    """, devices=16)
+
+
+def test_pallas_step_deep_halo_multihop_8_devices():
+    """PR 9: W=32 on 8 devices gives B=4, so S=8 with r=1 (and S=4 with
+    r=2) needs halo depth past a whole neighbor block — the multi-hop
+    ring path — at a device count where a hop crosses real (forced-host)
+    device boundaries twice."""
+    run_sub("""
+        import numpy as np
+        import jax
+        from repro.core import TaskGraph, KernelSpec, get_runtime
+
+        devs = jax.devices()[:8]
+        for pattern, radius, S in [("stencil_1d", 1, 8), ("nearest", 2, 4)]:
+            g = TaskGraph(steps=16, width=32, payload=8, pattern=pattern,
+                          radius=radius,
+                          kernel=KernelSpec("compute_bound", 4))
+            ref = get_runtime("fused").execute(g)
+            rt = get_runtime("pallas_step", devices=devs,
+                             steps_per_launch=S)
+            ok, why = rt.supports(g)
+            assert ok, why
+            out = rt.execute(g)
+            np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6,
+                                       err_msg=(pattern, S))
+        print("OK")
+    """, devices=8)
+
+
+@pytest.mark.parametrize("devices,dk", [(8, 2), (16, 4)])
+def test_pallas_step_member_sharded_bit_identical(devices, dk):
+    """PR 9 tentpole: the K-sharded stacked ensemble on the 2D (row,
+    member) mesh — D devices as (Dr, Dk) — is bit-identical to the
+    replicated baseline on Dr devices (same per-device block width, so
+    identical arithmetic), through both the clean run AND a resilient run
+    with one member evicted mid-flight (the PR 8 act-mask semantics must
+    survive the member shard)."""
+    run_sub(f"""
+        import numpy as np
+        import jax
+        from repro.core import (TaskGraph, KernelSpec, GraphEnsemble,
+                                get_runtime)
+        from repro.resilience.engine import run_resilient
+        from repro.resilience.faults import (FaultPlan, FaultSpec,
+                                             FAULT_MEMBER)
+
+        D, dk = {devices}, {dk}
+        Dr = D // dk
+        devs = jax.devices()
+        members = [TaskGraph(steps=8, width=4 * Dr, payload=8,
+                             pattern="stencil_1d", radius=1, seed=k,
+                             kernel=KernelSpec("compute_bound", 2))
+                   for k in range(2 * dk)]
+        ens = GraphEnsemble(members)
+        rep = get_runtime("pallas_step", devices=devs[:Dr],
+                          steps_per_launch=2)
+        ksh = get_runtime("pallas_step", devices=devs[:D],
+                          steps_per_launch=2, member_shards=dk)
+        ok, why = ksh.supports_ensemble(ens)
+        assert ok, why
+        for u, v in zip(rep.execute_ensemble(ens),
+                        ksh.execute_ensemble(ens)):
+            u, v = np.asarray(u), np.asarray(v)
+            assert u.shape == v.shape and (u == v).all()
+        plan = FaultPlan((FaultSpec(FAULT_MEMBER, 2, member=1),))
+        f_rep = run_resilient(rep, ens, plan=plan)
+        f_ksh = run_resilient(ksh, ens, plan=plan)
+        assert f_rep.evicted == f_ksh.evicted
+        for u, v in zip(f_rep.outputs, f_ksh.outputs):
+            u, v = np.asarray(u), np.asarray(v)
+            assert u.shape == v.shape and (u == v).all()
+        print("OK")
+    """, devices=devices)
+
+
+def test_member_shards_guard_names_fallback():
+    """The 2D mesh builder and the runtime's member_shards resolution
+    reject a non-dividing Dk LOUDLY, naming member_shards=1 as the
+    fallback (mirroring exchange_stride_start's non-pow2 rejection) —
+    never an opaque reshape error from inside shard_map."""
+    run_sub("""
+        import jax
+        from repro.core import TaskGraph, KernelSpec, GraphEnsemble, get_runtime
+        from repro.launch.mesh import make_row_member_mesh
+
+        devs = jax.devices()[:8]
+        try:
+            make_row_member_mesh(devs, 3)
+            raise SystemExit("expected ValueError for Dk=3 over 8 devices")
+        except ValueError as e:
+            assert "member_shards=1" in str(e), e
+        members = [TaskGraph(steps=4, width=32, payload=8,
+                             pattern="stencil_1d", radius=1, seed=k,
+                             kernel=KernelSpec("compute_bound", 1))
+                   for k in range(4)]
+        try:
+            get_runtime("pallas_step", devices=devs,
+                        member_shards=3).execute_ensemble(
+                            GraphEnsemble(members))
+            raise SystemExit("expected ValueError for member_shards=3, K=4")
+        except ValueError as e:
+            assert "member_shards=1" in str(e), e
+        print("OK")
+    """, devices=8)

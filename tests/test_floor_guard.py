@@ -240,3 +240,107 @@ def test_real_chaos_artifact_if_present():
         art = json.load(f)
     failures = run_chaos(art, max_recovery_tax=1e9, max_armor_tax=1e9)
     assert failures == []
+
+
+# ------------------------------------------------------- scaling@ (PR 9)
+
+
+def scaling_art(*, eff=0.8, gd=16, pallas=1.2, bsp=3.5, speedup=1.3,
+                **kw):
+    art = {
+        "guard": {
+            "guard_devices": gd,
+            "weak_efficiency": eff,
+            "strong_efficiency": 0.2,
+            "pallas_wall_per_task_us": pallas,
+            "bsp_wall_per_task_us": bsp,
+        },
+    }
+    if speedup is not None:
+        art["guard"]["chunked_speedup_at_16plus"] = speedup
+    art.update(kw)
+    return art
+
+
+def run_scaling(cur, base=None, **kw):
+    return fg.check(current(), baseline(), 2.0, 1.05,
+                    scaling_art=cur, scaling_base=base, **kw)
+
+
+def test_scaling_healthy_artifact_passes():
+    assert run_scaling(scaling_art(), scaling_art()) == []
+
+
+def test_scaling_weak_regression_alone_warns(capsys):
+    # efficiency halved vs the committed baseline, but the run's own
+    # pallas/bsp ratio is healthy: slow runner territory
+    assert run_scaling(scaling_art(eff=0.3), scaling_art(eff=0.8)) == []
+    out = capsys.readouterr().out
+    assert "SLOW-RUNNER?" in out and "[FAIL]" not in out
+
+
+def test_scaling_weak_regression_with_pallas_above_bsp_fails():
+    failures = run_scaling(scaling_art(eff=0.3, pallas=6.0, bsp=3.0),
+                           scaling_art(eff=0.8))
+    assert len(failures) == 1
+    assert "scaling@weak:D16" in failures[0]
+    assert "health signal collapsed" in failures[0]
+
+
+def test_scaling_gather_slowdown_fails_without_escape():
+    # the ablation ratio comes from ONE worker process: chunked falling
+    # behind monolithic at D>=16 is a real regression, no slow-runner out
+    failures = run_scaling(scaling_art(speedup=0.7), scaling_art())
+    assert len(failures) == 1 and "scaling@gather" in failures[0]
+
+
+def test_scaling_smoke_artifact_skips_gather_but_family_holds(capsys):
+    # a D<=8 smoke artifact has no 16+ ablation: gather SKIPs, the
+    # schema check still judges the family
+    assert run_scaling(scaling_art(gd=8, speedup=None),
+                       scaling_art(gd=8, speedup=None)) == []
+    assert "scaling@gather" in capsys.readouterr().out
+
+
+def test_scaling_guard_devices_mismatch_skips_weak(capsys):
+    # efficiency at D=8 says nothing about the D=16 bar: no reference
+    assert run_scaling(scaling_art(gd=8), scaling_art(gd=16)) == []
+    assert "no reference value" in capsys.readouterr().out
+
+
+def test_scaling_reference_override_is_keyed_by_guard_devices():
+    cur = scaling_art(eff=0.3, pallas=6.0, bsp=3.0)  # collapsed health
+    assert run_scaling(cur, scaling_art(eff=0.8)) != []
+    assert run_scaling(cur, scaling_art(
+        eff=0.8,
+        references={"scaling@weak:D16": {"reference": 3.0,
+                                         "factor": 2.0}})) == []
+
+
+def test_scaling_malformed_guard_fails_sanity():
+    failures = run_scaling({"guard": {}}, scaling_art())
+    assert any("scaling@schema" in f for f in failures)
+    failures = run_scaling(scaling_art(eff=-0.5), scaling_art())
+    assert any("out of (0, 2]" in f for f in failures)
+
+
+def test_real_scaling_artifact_if_present():
+    """The committed fig2_scaling artifacts must satisfy their own guard
+    against themselves — catches schema drift between fig2_scaling.py and
+    this leg."""
+    import json
+
+    bench = pathlib.Path(__file__).resolve().parents[1] / "artifacts/bench"
+    found = False
+    for name in ("fig2_scaling.json", "fig2_scaling_smoke.json"):
+        path = bench / name
+        if not path.exists():
+            continue
+        found = True
+        with open(path) as f:
+            art = json.load(f)
+        assert run_scaling(art, art) == []
+    if not found:
+        import pytest
+
+        pytest.skip("no local scaling artifact")
