@@ -398,6 +398,73 @@ def scaling_checks(scaling_art: dict, scaling_base: dict, factor: float, *,
     return checks
 
 
+SCHEMA_SERVE = 1
+
+
+def serve_checks(serve_art: dict, serve_base: dict, factor: float, *,
+                 min_slot_utilization: float = 0.5) -> List[PerfCheck]:
+    """Serving leg over the benchmarks/serve_taskbench artifact.
+
+    ``serve@schema`` is the sanity half; ``serve@identity`` fails outright
+    when any served request lost bit-identity against its serial oracle —
+    correctness, never a slow-runner artifact. ``serve@churn`` likewise
+    fails outright when the continuous-batching contract degraded: no
+    stacked cohort changed membership >= 2 times with zero recompiles, or
+    the packer collapsed the mixed stream below two stacked cohorts —
+    both are structural properties of the fabric, independent of runner
+    speed. The per-K ``serve@p99:*`` checks then apply the standard
+    two-signal rule to tail latency vs the committed baseline: a p99
+    regression alone WARNs (loaded runner stretches every wall); it FAILs
+    only when that row's in-run slot utilization ALSO cratered — idle
+    slots with slow requests mean admission/packing broke, which runner
+    slowness cannot produce (a slow runner keeps slots exactly as busy)."""
+    errors: List[str] = []
+    if serve_art.get("schema") != SCHEMA_SERVE:
+        errors.append(
+            f"serve artifact schema {serve_art.get('schema')!r}, "
+            f"expected {SCHEMA_SERVE}")
+    verdict = serve_art.get("verdict") or {}
+    rows = [r for r in serve_art.get("rows", []) if "skip" not in r]
+    if not rows:
+        errors.append("serve artifact judged no rows")
+    for key in ("bit_identical", "dynamic_cohort", "min_stacked_cohorts"):
+        if key not in verdict:
+            errors.append(f"verdict missing {key}")
+    checks = [PerfCheck(name="serve@schema", value=None, reference=None,
+                        factor=1.0, sanity_errors=errors)]
+    identity_errors = [] if verdict.get("bit_identical", True) \
+        else ["a served request was NOT bit-identical to its serial oracle"]
+    checks.append(PerfCheck(name="serve@identity", value=None,
+                            reference=None, factor=1.0,
+                            sanity_errors=identity_errors))
+    churn_errors = []
+    if not verdict.get("dynamic_cohort", True):
+        churn_errors.append(
+            "no stacked cohort churned membership >= 2 times without a "
+            "recompile (continuous batching degraded to static cohorts)")
+    if verdict.get("min_stacked_cohorts", 2) < 2:
+        churn_errors.append(
+            "mixed request stream produced < 2 stacked cohorts (packer "
+            "collapsed compatibility classes)")
+    checks.append(PerfCheck(name="serve@churn", value=None, reference=None,
+                            factor=1.0, sanity_errors=churn_errors))
+    base_p99 = (serve_base.get("verdict") or {}).get("p99_ms_by_slots", {})
+    fmt = lambda v: f"{v:.1f} ms p99"  # noqa: E731
+    for row in rows:
+        k = str(row.get("slots"))
+        name = f"serve@p99:K{k}"
+        ref, fac = _reference_for(serve_base, name, base_p99.get(k), factor)
+        checks.append(PerfCheck(
+            name=name, value=row.get("p99_ms"), reference=ref, factor=fac,
+            fmt=fmt,
+            health_desc="slot_utilization",
+            health_value=row.get("slot_utilization"),
+            health_bad=lambda u, lo=min_slot_utilization: u < lo,
+            sanity_errors=_sane_positive(name, row.get("p99_ms")),
+        ))
+    return checks
+
+
 def build_suite(current: dict, baseline: dict, factor: float,
                 min_amortization: float,
                 cost_model: Optional[dict] = None,
@@ -410,7 +477,10 @@ def build_suite(current: dict, baseline: dict, factor: float,
                 scaling_art: Optional[dict] = None,
                 scaling_base: Optional[dict] = None,
                 max_pallas_over_bsp: float = 1.5,
-                min_gather_speedup: float = 0.9) -> List[PerfCheck]:
+                min_gather_speedup: float = 0.9,
+                serve_art: Optional[dict] = None,
+                serve_base: Optional[dict] = None,
+                min_slot_utilization: float = 0.5) -> List[PerfCheck]:
     checks = floor_checks(current, baseline, factor, min_amortization)
     checks += butterfly_checks(current, baseline, factor)
     if cost_model is not None:
@@ -425,6 +495,9 @@ def build_suite(current: dict, baseline: dict, factor: float,
         checks += scaling_checks(scaling_art, scaling_base or {}, factor,
                                  max_pallas_over_bsp=max_pallas_over_bsp,
                                  min_gather_speedup=min_gather_speedup)
+    if serve_art is not None:
+        checks += serve_checks(serve_art, serve_base or {}, factor,
+                               min_slot_utilization=min_slot_utilization)
     return checks
 
 
@@ -468,7 +541,10 @@ def check(current: dict, baseline: dict, factor: float,
           scaling_art: Optional[dict] = None,
           scaling_base: Optional[dict] = None,
           max_pallas_over_bsp: float = 1.5,
-          min_gather_speedup: float = 0.9) -> list:
+          min_gather_speedup: float = 0.9,
+          serve_art: Optional[dict] = None,
+          serve_base: Optional[dict] = None,
+          min_slot_utilization: float = 0.5) -> list:
     """Returns a list of human-readable failures (empty = pass)."""
     base = baseline.get("floor_wall_per_step", {})
     if not base:
@@ -484,12 +560,17 @@ def check(current: dict, baseline: dict, factor: float,
         families["chaos@"] = 2
     if scaling_art is not None:
         families["scaling@"] = 1
+    if serve_art is not None:
+        # schema + identity + churn always judge; p99 rows may SKIP when
+        # the committed baseline predates a new K sweep
+        families["serve@"] = 3
     suite = build_suite(current, baseline, factor, min_amortization,
                         cost_model, trace_art, max_visible,
                         max_exchange_fraction, chaos_art,
                         max_recovery_tax, max_armor_tax,
                         scaling_art, scaling_base,
-                        max_pallas_over_bsp, min_gather_speedup)
+                        max_pallas_over_bsp, min_gather_speedup,
+                        serve_art, serve_base, min_slot_utilization)
     return run_suite(suite, families)
 
 
@@ -553,6 +634,19 @@ def main(argv=None):
                     help="chunked/monolithic gather speedup at D>=16 "
                          "below which the ablation check FAILs (in-run "
                          "ratio, no slow-runner escape)")
+    ap.add_argument("--serve", default=None, nargs="?",
+                    const="artifacts/bench/serve_taskbench.json",
+                    help="benchmarks/serve_taskbench artifact feeding the "
+                         "serving leg (flag alone uses the default path; "
+                         "missing file = skip)")
+    ap.add_argument("--serve-baseline",
+                    default="artifacts/bench/serve_taskbench_baseline.json",
+                    help="committed serving baseline (p99 references; "
+                         "missing file = references only from overrides)")
+    ap.add_argument("--min-slot-utilization", type=float, default=0.5,
+                    help="in-run health bound: slot utilization below "
+                         "which a p99 regression FAILs (idle slots + slow "
+                         "requests = admission broke, not the runner)")
     a = ap.parse_args(argv)
     trace_path = a.trace
     if trace_path is None and a.smoke:
@@ -606,12 +700,28 @@ def main(argv=None):
             except FileNotFoundError:
                 print(f"floor_guard: scaling baseline {a.scaling_baseline} "
                       f"absent (scaling@weak judged only via overrides)")
+    serve_art = serve_base = None
+    if a.serve:
+        try:
+            with open(a.serve) as f:
+                serve_art = json.load(f)
+        except FileNotFoundError:
+            print(f"floor_guard: serve artifact {a.serve} absent "
+                  f"(serving leg skipped)")
+        if serve_art is not None:
+            try:
+                with open(a.serve_baseline) as f:
+                    serve_base = json.load(f)
+            except FileNotFoundError:
+                print(f"floor_guard: serve baseline {a.serve_baseline} "
+                      f"absent (serve@p99 judged only via overrides)")
     failures = check(current, baseline, a.factor, a.min_amortization,
                      cost_model, trace_art, max_visible,
                      a.max_exchange_fraction, chaos_art,
                      a.max_recovery_tax, a.max_armor_tax,
                      scaling_art, scaling_base,
-                     a.max_pallas_over_bsp, a.min_gather_speedup)
+                     a.max_pallas_over_bsp, a.min_gather_speedup,
+                     serve_art, serve_base, a.min_slot_utilization)
     for msg in failures:
         print(f"floor_guard: FAIL: {msg}", file=sys.stderr)
     return 1 if failures else 0

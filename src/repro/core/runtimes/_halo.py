@@ -382,19 +382,37 @@ def gather_chunk_group(num_devices: int) -> int:
 
 
 def _gather_chunked(local: jax.Array, num_devices: int, axis: str,
-                    *, row_axis: int = 0) -> jax.Array:
+                    *, row_axis: int = 0,
+                    group: Optional[int] = None) -> jax.Array:
     """Hierarchical (neighbor-limited) gather: a ring of segment
     all-gathers instead of one D-wide rendezvous.
 
-    Stage 1 all-gathers within contiguous ring segments of G = divisor-of-D
-    nearest sqrt(D) devices; stage 2 all-gathers the assembled segment
-    blocks across one-representative-per-segment stride groups. Each
-    collective synchronizes ~sqrt(D) participants, which is what makes the
+    Stage 1 all-gathers within contiguous ring segments of G devices;
+    stage 2 all-gathers the assembled segment blocks across
+    one-representative-per-segment stride groups. Each collective
+    synchronizes a bounded participant count, which is what makes the
     global patterns pay O(W/D * log D)-ish coordination instead of a flat
     D-wide barrier per launch. Both stages move exact row copies in global
-    order, so the result is bit-identical to the monolithic transport.
+    order, so the result is bit-identical to the monolithic transport —
+    for EVERY G | D, which is why G is a pure cost choice.
+
+    ``group=None`` delegates G to the scheduling policy
+    (``schedule.choose_gather_chunk_group``: explicit > env > measured
+    grouping probes > the sqrt(D) analytic rule); an explicit ``group``
+    must divide D. G <= 1 or G >= D degenerates to the monolithic gather.
     """
-    g = gather_chunk_group(num_devices)
+    if group is None:
+        # lazy policy import (mirrors the runtime's schedule use): this
+        # module must stay importable without the probes/cache machinery
+        from repro.kernels import schedule as _schedule
+
+        group, _ = _schedule.choose_gather_chunk_group(
+            devices=num_devices,
+            width=local.shape[row_axis] * num_devices)
+    g = int(group)
+    if g >= 1 and num_devices % g:
+        raise ValueError(
+            f"chunked gather group {g} does not divide D={num_devices}")
     if g <= 1 or g >= num_devices:
         return _gather_xla(local, num_devices, axis, row_axis=row_axis)
     ngroups = num_devices // g
@@ -501,14 +519,18 @@ def exchange_stride(local: jax.Array, block_strides, num_devices: int,
 
 
 def gather_global(local: jax.Array, num_devices: int, axis: str = "shard",
-                  *, row_axis: int = 0, impl: str = "xla") -> jax.Array:
+                  *, row_axis: int = 0, impl: str = "xla",
+                  chunk_group: Optional[int] = None) -> jax.Array:
     """The full global-order state on every device (the all-gather plan).
 
     ``impl`` names a GATHER_IMPLS transport: "xla" (one monolithic tiled
     all-gather), "ppermute" (D-1 ring shifts, parity-test spelling), or
     "chunked" (hierarchical segment gather bounding every rendezvous at
     ~sqrt(D) participants). All transports move exact row copies, so
-    outputs are bit-identical across impls.
+    outputs are bit-identical across impls. ``chunk_group`` forces the
+    chunked transport's rendezvous group G (must divide D); it only
+    reaches the plain "chunked" impl — registry wrappers such as
+    "chaos+chunked" keep the policy-resolved default.
     """
     if num_devices == 1:
         return local
@@ -518,6 +540,9 @@ def gather_global(local: jax.Array, num_devices: int, axis: str = "shard",
         raise ValueError(
             f"unknown gather impl {impl!r}; known "
             f"{sorted(GATHER_IMPLS)}") from None
+    if chunk_group is not None and impl == "chunked":
+        return start(local, num_devices, axis, row_axis=row_axis,
+                     group=chunk_group)
     return start(local, num_devices, axis, row_axis=row_axis)
 
 

@@ -87,6 +87,12 @@ class EnsembleLaunchPlan:
     expected_launch_us: Optional[float] = None
     #: descriptive schedule kind ("stacked" / "stepwise")
     kind: str = ""
+    #: zero-arg callable reporting the launch executable's compile-cache
+    #: entry count (jit ``_cache_size`` when the jax build exposes it);
+    #: the serving fabric asserts it stays flat across membership churn —
+    #: the no-recompile contract of act-mask evict/admit. None when the
+    #: schedule cannot count compiles.
+    compile_counter: Optional[Callable[[], int]] = None
 
     @property
     def num_launches(self) -> int:

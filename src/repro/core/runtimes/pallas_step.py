@@ -854,16 +854,45 @@ class PallasStepRuntime(_BspBase):
             for g in members
         )
 
+    def stacking_verdict(self, ensemble: GraphEnsemble) -> Tuple[bool, str]:
+        """``supports()``-style verdict for the stacked fast path: (ok,
+        reason). Stacked launches share one (K, B, ...) operand set built
+        by the halo-plan machinery, so they require uniform (width,
+        payload), one kernel, and every member on the halo plan;
+        everything else takes the slow per-step tuple fallback. The reason
+        string names exactly which requirement failed so a packer (or a
+        trace reader) can see WHY a cohort degraded instead of silently
+        paying per-step dispatch."""
+        members = ensemble.members
+        reasons = []
+        if not ensemble.stackable:
+            widths = sorted({g.width for g in members})
+            payloads = sorted({g.payload for g in members})
+            reasons.append(
+                f"members do not stack into one (K, W, payload) state: "
+                f"widths {widths}, payloads {payloads}")
+        kernels = {g.kernel for g in members}
+        if len(kernels) != 1:
+            reasons.append("mixed kernels: " + ", ".join(sorted(
+                f"{k.kind}@it{k.iterations}" for k in kernels)))
+        off_plan = []
+        for i, g in enumerate(members):
+            plan, why = self.plan_for(g)
+            if plan != PLAN_HALO:
+                off_plan.append(
+                    f"member {i} ({g.pattern}) resolves the "
+                    f"{plan or 'un-supported'} plan")
+        if off_plan:
+            reasons.append(
+                "stacked operands are built by the halo-plan machinery: "
+                + "; ".join(off_plan))
+        if reasons:
+            return False, "; ".join(reasons)
+        return True, ("stacked: uniform (width, payload, kernel) and "
+                      "every member on the halo plan")
+
     def _is_stacked(self, ensemble: GraphEnsemble) -> bool:
-        """Stacked launches share one (K, B, ...) operand set built by the
-        halo-plan machinery, so they additionally require every member on
-        the halo plan; mixed-plan ensembles use the tuple fallback."""
-        return (
-            ensemble.stackable
-            and len({g.kernel for g in ensemble.members}) == 1
-            and all(self.plan_for(g)[0] == PLAN_HALO
-                    for g in ensemble.members)
-        )
+        return self.stacking_verdict(ensemble)[0]
 
     @staticmethod
     def _launches(total_steps: int, s: int) -> int:
@@ -1278,9 +1307,36 @@ class PallasStepRuntime(_BspBase):
             if S > 1:
                 return self._build_ensemble_stacked_blocked(ensemble, S)
             return self._build_ensemble_stacked(ensemble)
+        self._record_stacking_degradation(ensemble, S, "tuple")
         if S > 1:
             return self._build_ensemble_tuple_blocked(ensemble, S)
         return self._build_ensemble_tuple(ensemble)
+
+    def _record_stacking_degradation(self, ensemble: GraphEnsemble,
+                                     S: int, plan_kind: str) -> None:
+        """Decision record for a multi-member ensemble that fell off the
+        stacked fast path. The fall used to be silent — cadence quietly
+        pinned to per-step tuple dispatch — so every builder that takes
+        the fallback emits one ``schedule.resolve`` instant naming the
+        failed requirement (stacking_verdict's reason)."""
+        if len(ensemble.members) <= 1:
+            return
+        if not getattr(self.tracer, "enabled", False):
+            return
+        ok, why = self.stacking_verdict(ensemble)
+        if ok:
+            return
+        _schedule.record_resolution(
+            self.tracer,
+            plan=plan_kind,
+            steps_per_launch=S,
+            pipeline=False,
+            model=self._cost_model(ensemble.members[0].payload),
+            reason=f"ensemble off the stacked fast path: {why}",
+            runtime=self.name,
+            members=len(ensemble.members),
+            stacked=False,
+        )
 
     def _build_ensemble_stacked(self, ensemble: GraphEnsemble) -> Callable:
         """All K members' combines + bodies in ONE megakernel launch/step.
@@ -1610,6 +1666,7 @@ class PallasStepRuntime(_BspBase):
         if self._is_stacked(ensemble):
             return self._launch_plan_stacked(
                 ensemble, self._ensemble_steps_per_launch(ensemble))
+        self._record_stacking_degradation(ensemble, 1, "stepwise")
         return self._launch_plan_stepwise(ensemble)
 
     def _launch_plan_stacked(
@@ -1717,6 +1774,10 @@ class PallasStepRuntime(_BspBase):
                 rows=(K // dk) * B, steps_per_launch=S, model=model,
                 impl=self._halo_impl()),
             kind="stacked",
+            # launch shapes are membership-invariant (evict/admit only
+            # edit mask/state VALUES) so this cache must never grow past
+            # its first entry — the serving fabric asserts exactly that
+            compile_counter=getattr(launch, "_cache_size", None),
         )
 
     def _launch_plan_stepwise(
@@ -1811,6 +1872,7 @@ class PallasStepRuntime(_BspBase):
                 rows=rows, steps_per_launch=1, model=model,
                 impl=self._halo_impl()),
             kind="stepwise",
+            compile_counter=getattr(step_jit, "_cache_size", None),
         )
 
     # ----------------------------------------------------------- accounting

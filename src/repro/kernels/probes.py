@@ -55,7 +55,7 @@ import dataclasses
 import json
 import os
 from pathlib import Path
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 from repro.kernels import schedule as _schedule
 
@@ -591,11 +591,20 @@ def _gather_probe_device_counts(devices: int) -> Tuple[int, ...]:
     return tuple(counts)
 
 
+def _chunk_group_candidates(devices: int) -> Tuple[int, ...]:
+    """Proper divisors 1 < g < D — every grouping the chunked gather can
+    actually run without degrading to the monolithic path."""
+    return tuple(g for g in range(2, devices)
+                 if devices % g == 0)
+
+
 def probe_gather_impl_us(devices: int, payload: int = 64, *,
                          widths: Sequence[int] = (64, 256, 512),
                          impls: Sequence[str] = ("xla", "chunked"),
                          device_counts: Optional[Sequence[int]] = None,
                          reps: int = 25,
+                         chunk_groups: Union[str, Sequence[int], None]
+                         = "auto",
                          ) -> Dict[str, Dict[int, Dict[int, float]]]:
     """``gather_global`` wall per (transport, device count, width) — the
     devices-dimension behind ``schedule.choose_gather_impl``. Each sub
@@ -604,6 +613,16 @@ def probe_gather_impl_us(devices: int, payload: int = 64, *,
     to the monolithic path at a count (chunked with no usable segment
     split) are skipped there too so the table never ranks an impl against
     itself.
+
+    ``chunk_groups`` adds grouping-anatomy rows for the chunked
+    transport: each candidate G probes as a pseudo-impl key
+    ``"chunked:g{G}"`` (forced via ``gather_global(chunk_group=G)``), the
+    input behind ``schedule.choose_gather_chunk_group``'s measured tier.
+    "auto" probes every proper divisor 1 < G < d of each count; an
+    explicit sequence probes its members where they divide d; None skips
+    grouping rows entirely. The colon keeps these keys out of the
+    impl-choice ranking (choose_gather_impl filters them) while fitting
+    the existing ``gather_impl_us`` cache schema unchanged.
 
     Walls are MEDIAN-of-reps, unlike the floor probes' best-of: the full
     D-participant barrier's wall is heavy-tailed by scheduler convoy
@@ -621,6 +640,21 @@ def probe_gather_impl_us(devices: int, payload: int = 64, *,
             raise ValueError(
                 f"unknown gather impl {impl!r}; known "
                 f"{sorted(_halo.GATHER_IMPLS)}")
+
+    def _measure(key, impl, d, width, group=None):
+        def local(x, impl=impl, d=d, group=group):
+            # the program's output IS the gathered (W, P) buffer
+            # (replicated_out) — what the allgather plan feeds
+            # the kernel; see _sharded_wall_us for why a
+            # reduction-style consumption would measure the
+            # wrong collective
+            return _halo.gather_global(x, d, _AXIS, impl=impl,
+                                       chunk_group=group)
+
+        us = _sharded_wall_us(local, d, width // d, payload, reps,
+                              stat="median", replicated_out=True)
+        out.setdefault(key, {}).setdefault(d, {})[width] = us
+
     for d in counts:
         for impl in impls:
             if impl == "chunked":
@@ -630,18 +664,20 @@ def probe_gather_impl_us(devices: int, payload: int = 64, *,
             for width in sorted(set(int(w) for w in widths)):
                 if width < d or width % d:
                     continue
-
-                def local(x, impl=impl, d=d):
-                    # the program's output IS the gathered (W, P) buffer
-                    # (replicated_out) — what the allgather plan feeds
-                    # the kernel; see _sharded_wall_us for why a
-                    # reduction-style consumption would measure the
-                    # wrong collective
-                    return _halo.gather_global(x, d, _AXIS, impl=impl)
-
-                us = _sharded_wall_us(local, d, width // d, payload, reps,
-                                      stat="median", replicated_out=True)
-                out.setdefault(impl, {}).setdefault(d, {})[width] = us
+                _measure(impl, impl, d, width)
+        if chunk_groups is None or "chunked" not in impls:
+            continue
+        groups = _chunk_group_candidates(d) if chunk_groups == "auto" \
+            else tuple(g for g in chunk_groups
+                       if 1 < int(g) < d and d % int(g) == 0)
+        if len(groups) < 2:
+            continue  # a single viable grouping is nothing to rank
+        for g in groups:
+            for width in sorted(set(int(w) for w in widths)):
+                if width < d or width % d:
+                    continue
+                _measure(f"chunked:g{int(g)}", "chunked", d, width,
+                         group=int(g))
     return out
 
 
@@ -667,9 +703,10 @@ def run_probes(devices: Optional[int] = None, payload: int = 64, *,
     stride = probe_stride_exchange_us(devices, payload, reps=reps)
     gather = probe_gather_us(devices, payload, widths=gather_widths,
                              reps=reps)
-    # Devices-dimension transport table (choose_gather_impl's input):
-    # smoke probes only the calibration count, full runs add the /2, /4
-    # subgroup counts so one calibration serves the scaling sweep.
+    # Devices-dimension transport table (choose_gather_impl's input, plus
+    # the "chunked:g{G}" grouping-anatomy rows choose_gather_chunk_group
+    # ranks): smoke probes only the calibration count, full runs add the
+    # /2, /4 subgroup counts so one calibration serves the scaling sweep.
     impl_counts = (devices,) if smoke else None
     # median-of-reps needs a real sample; don't let the floor probes'
     # small reps starve the transport-choice distribution

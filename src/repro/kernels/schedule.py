@@ -37,6 +37,7 @@ never WHAT it computes — numerics are bit-identical across models.
 """
 from __future__ import annotations
 
+import os
 from typing import Optional, Sequence, Tuple, Union
 
 
@@ -542,6 +543,9 @@ def choose_gather_impl(*, width: int, devices: int,
     walls = {}
     if getattr(model, "gather_walls_at", None) is not None:
         walls = model.gather_walls_at(width, devices) or {}
+    # grouping variants ("chunked:g8") rank the chunk GROUP, not the impl —
+    # choose_gather_chunk_group owns them; here they would shadow "chunked"
+    walls = {k: v for k, v in walls.items() if ":" not in k}
     if len(walls) >= 2:
         impl = min(walls, key=walls.get)
         detail = ", ".join(
@@ -558,6 +562,76 @@ def choose_gather_impl(*, width: int, devices: int,
         f"structural: D={devices} < "
         f"{DEFAULT_CHUNKED_GATHER_MIN_DEVICES}, monolithic all-gather "
         f"(no measured devices-dimension probes to overrule)")
+
+
+_GATHER_CHUNK_GROUP_ENV = "REPRO_GATHER_CHUNK_GROUP"
+
+
+def choose_gather_chunk_group(*, devices: int, width: Optional[int] = None,
+                              model=None,
+                              explicit: Optional[int] = None
+                              ) -> Tuple[int, str]:
+    """Pick the chunked gather's rendezvous group size G at (devices, width).
+
+    The two-stage hierarchical gather splits D devices into D/G segments of
+    G parties each; every G | D is bit-identical, only the wall differs, so
+    this is a pure cost choice — the same contract as choose_gather_impl.
+    Analytically the per-stage party count is balanced at G ~ sqrt(D), but
+    the anatomy probes disagree where rendezvous cost is not symmetric
+    across the two stages (e.g. G=8 beating G=4 at D=32 on this
+    container), so a measured model with grouping probes
+    (``gather_impl_us`` keys "chunked:g{G}") overrules the analytic rule.
+
+    Precedence is the standard resolver ladder: ``explicit`` argument >
+    ``REPRO_GATHER_CHUNK_GROUP`` env > measured grouping walls at this
+    exact (D, W) (needs >= 2 candidates to rank) > the sqrt(D) analytic
+    rule (``_halo.gather_chunk_group``). Explicit/env values that do not
+    divide D fail loudly — a silently ignored override is worse than a
+    crash. Returns (group, reason) with numbers in the reason.
+    """
+    def _validated(value, origin: str) -> int:
+        try:
+            g = int(value)
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"{origin} chunk group {value!r} is not an integer")
+        if g < 1 or devices % g:
+            raise ValueError(
+                f"{origin} chunk group {g} does not divide D={devices} "
+                f"(the two-stage segment gather needs G | D)")
+        return g
+
+    if explicit is not None:
+        g = _validated(explicit, "explicit")
+        return g, f"explicit chunk group G={g}"
+    raw = os.environ.get(_GATHER_CHUNK_GROUP_ENV)
+    if raw is not None and raw.strip():
+        g = _validated(raw.strip(), f"env {_GATHER_CHUNK_GROUP_ENV}")
+        return g, f"env {_GATHER_CHUNK_GROUP_ENV}={g}"
+    model = _resolve_model(model)
+    if width is not None and getattr(model, "gather_walls_at", None):
+        walls = model.gather_walls_at(width, devices) or {}
+        grouped = {}
+        for impl, us in walls.items():
+            if not impl.startswith("chunked:g"):
+                continue
+            try:
+                g = int(impl.split(":g", 1)[1])
+            except ValueError:
+                continue
+            if 1 < g < devices and devices % g == 0:
+                grouped[g] = us
+        if len(grouped) >= 2:
+            best = min(grouped, key=lambda g: (grouped[g], g))
+            detail = ", ".join(
+                f"g{g}={us:.1f}us" for g, us in sorted(grouped.items()))
+            return best, (f"measured chunked-gather grouping walls at "
+                          f"D={devices}, W={width}: {detail}")
+    from repro.core.runtimes import _halo
+
+    g = _halo.gather_chunk_group(devices)
+    return g, (f"analytic: divisor of D={devices} nearest sqrt(D) -> G={g} "
+               f"(no measured grouping probes at this D, W to overrule)")
 
 
 def choose_member_shards(*, devices: int, num_members: int, width: int,

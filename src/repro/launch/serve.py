@@ -134,12 +134,15 @@ def serve(
         tokens_per_step=batch,  # each decode step emits one token per seq
     )
     # deadline detector around each decode step: no cost model prices a
-    # decode step, so it self-calibrates from the run's own clean walls
-    # (step 0 carries the compile and is inside the warmup window)
+    # decode step, so it self-calibrates from the run's own clean walls.
+    # Step 0 carries the compile — a recompile boundary, so its wall is
+    # excluded from the calibration median outright (merely being inside
+    # the warmup window would still seed the median with a compile wall).
     from repro.resilience import DEFAULT_DEADLINE_FACTOR, DeadlineDetector
 
     detector = DeadlineDetector(
         factor=deadline_factor or DEFAULT_DEADLINE_FACTOR)
+    detector.note_recompile_boundary()
     flagged: List[dict] = []
     poisoned: List[int] = []
     lengths = jnp.full((batch,), prompt_len, jnp.int32)

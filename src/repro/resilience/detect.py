@@ -14,9 +14,13 @@ the EXPECTED wall. Two sources for the expectation, in precedence order:
               a deadline; the run's own walls can (DESIGN.md §11).
 
 Flagged walls are NOT folded into the running median (a straggler must
-not drag the baseline toward itself), and the detector never *acts* — it
-reports overshoot, and the caller decides (the engine records a tracer
-``fault`` event; serve.py reports the step in ServeResult).
+not drag the baseline toward itself), recompile-boundary walls — marked
+via ``note_recompile_boundary()`` before the first launch after a
+(re)compile or membership change — are neither folded nor flagged (a
+compile wall is expected to be slow; folding it would seed the warmup
+median with an outlier), and the detector never *acts* — it reports
+overshoot, and the caller decides (the engine records a tracer ``fault``
+event; serve.py reports the step in ServeResult).
 """
 from __future__ import annotations
 
@@ -62,6 +66,10 @@ class DeadlineDetector:
         self._walls: List[float] = []
         self.detections: List[Detection] = []
         self._n = 0
+        self._boundary_next = False
+        #: boundary walls seen (compile/repack walls excluded from both
+        #: the median and the detections) — exposed for tests/telemetry
+        self.boundary_skips = 0
 
     def deadline_us(self) -> Optional[float]:
         """The current deadline, or None while still unpriceable (no
@@ -73,11 +81,25 @@ class DeadlineDetector:
                        self.min_deadline_us)
         return None
 
+    def note_recompile_boundary(self) -> None:
+        """Mark the NEXT observed wall as crossing a recompile/repack
+        boundary (the cohort's first launch, or the first launch after any
+        membership change). That wall carries compilation, not steady-state
+        work: folding it into the self-calibration median would let one
+        warmup-compile outlier seed the baseline and inflate every later
+        deadline, and flagging it would report a healthy repack as a
+        straggler — so it is neither folded nor flagged."""
+        self._boundary_next = True
+
     def observe(self, wall_us: float) -> Optional[Detection]:
         """Record one wall; returns a Detection when it blew the deadline."""
+        boundary, self._boundary_next = self._boundary_next, False
         deadline = self.deadline_us()
         idx = self._n
         self._n += 1
+        if boundary:
+            self.boundary_skips += 1
+            return None
         if deadline is not None and wall_us > deadline:
             det = Detection(idx, wall_us, deadline)
             self.detections.append(det)

@@ -297,6 +297,9 @@ class _Run:
                 replays_here += 1
                 self.replays += 1
                 self._evict(launch, mspec.member)
+                # membership changed: the next committed wall crosses a
+                # repack boundary and must not seed the deadline median
+                self.detector.note_recompile_boundary()
                 self.events.append(FaultEvent(
                     "member", launch, "evicted", member=mspec.member,
                     wall_us=wall_us))
@@ -333,6 +336,9 @@ class _Run:
             init = self._readmit(admit_member, launch + 1)
             if init is not None:
                 carry = self.lp.admit_fn(carry, admit_member, init)
+                # the first wall after a re-admission is a repack
+                # boundary (admit compiles on first use per slot)
+                self.detector.note_recompile_boundary()
         return carry
 
 

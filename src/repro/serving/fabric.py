@@ -1,0 +1,438 @@
+"""The continuous-batching fabric: cohort lifecycle over launch plans.
+
+One cohort = one ``EnsembleLaunchPlan`` whose (K, S) act-mask slots serve
+MANY requests over time. At every launch boundary the fabric
+
+  1. retires slots with no remaining active work (snapshot the member's
+     final state, record completion),
+  2. evicts slots past their deadline (zero the slot's act rows from this
+     launch on — the PR 8 eviction edit — and record the frozen step),
+  3. re-admits queued compatible requests into freed slots via the plan's
+     ``admit_fn`` (stacked cohorts only: their operand tables are
+     time-invariant and shared across slots by the packer's cohort key,
+     so a fresh member's t=0 state is the only thing that changes), and
+  4. dispatches the launch, feeding the wall to a DeadlineDetector whose
+     post-membership-change walls are recompile-boundary-skipped.
+
+No recompile across membership churn: launch shapes never change (only
+mask/state VALUES do), which the plan's ``compile_counter`` asserts.
+
+Bit-identity: every request's output must equal "serial execution of the
+same seeded request". The exact oracle is the SAME-K uniform ensemble —
+``execute_ensemble(GraphEnsemble((graph,) * K))[slot]`` with the
+request's effective steps — because the megakernel's reduction lowering
+is shape-dependent (K=1 vs K=2 differ in final-ulp rounding at S=1) but
+value-independent across slots (each member's rows depend only on its own
+slice; the packer guarantees identical operand tables). This is the same
+same-K convention test_chaos_property.py's eviction oracle uses.
+
+Clocks: the fabric is generic over a clock so the hypothesis property
+suite can run DETERMINISTICALLY. ``WallClock`` is real time (the driver's
+latency numbers); ``LaunchClock`` is virtual time advancing 1.0 per
+dispatched launch, making arrival/deadline interleavings a pure function
+of the request list.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.graph import GraphEnsemble, TaskGraph
+from repro.core.task_kernels import initial_state
+from repro.kernels import schedule as _schedule
+from repro.resilience.detect import DeadlineDetector
+from repro.serving.packer import cohort_key, order_key
+from repro.serving.request import Request
+
+
+class WallClock:
+    """Real elapsed seconds since construction. Launches advance it by
+    themselves; waiting sleeps."""
+
+    def __init__(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def advance_launch(self) -> None:
+        pass  # real time already passed during the launch
+
+    def wait_until(self, t: float) -> None:
+        delta = t - self.now()
+        if delta > 0:
+            time.sleep(delta)
+
+    def launch_unit_s(self, lp, detector: DeadlineDetector
+                      ) -> Optional[float]:
+        """Expected seconds per launch: the measured cost model's pricing
+        when the plan carries one, else the detector's self-calibrated
+        median (deadline / factor), else unpriceable."""
+        if lp.expected_launch_us:
+            return lp.expected_launch_us * 1e-6
+        d = detector.deadline_us()
+        if d is not None:
+            return (d / detector.factor) * 1e-6
+        return None
+
+
+class LaunchClock:
+    """Virtual clock: time is a launch count. Every dispatched launch
+    costs exactly 1.0, so arrival/retire/admit interleavings — and
+    priced deadlines — are deterministic functions of the request list
+    (the property suite's requirement)."""
+
+    def __init__(self) -> None:
+        self._t = 0.0
+
+    def now(self) -> float:
+        return self._t
+
+    def advance_launch(self) -> None:
+        self._t += 1.0
+
+    def wait_until(self, t: float) -> None:
+        self._t = max(self._t, t)
+
+    def launch_unit_s(self, lp, detector: DeadlineDetector
+                      ) -> Optional[float]:
+        del lp, detector
+        return 1.0
+
+
+@dataclasses.dataclass
+class RequestOutcome:
+    """One request's fate through the fabric."""
+
+    rid: int
+    status: str  # "completed" | "deadline_evicted"
+    effective_steps: int  # steps actually executed (== T unless evicted)
+    arrival_s: float
+    admitted_s: float
+    finished_s: float
+    cohort: int
+    slot: int
+    admitted_mid_run: bool
+    deadline_s: Optional[float]
+    graph: Optional[TaskGraph] = None  # what ran (oracle input)
+    bit_identical: Optional[bool] = None  # None until verified
+    output: Optional[np.ndarray] = None
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_s - self.arrival_s
+
+
+@dataclasses.dataclass
+class CohortReport:
+    """One cohort's census: what ran, how it churned, whether the
+    no-recompile contract held."""
+
+    index: int
+    key: str
+    kind: str  # EnsembleLaunchPlan.kind: "stacked" | "stepwise"
+    reason: str  # stacking_verdict's reason string
+    slots: int
+    steps_per_launch: int
+    launches_run: int
+    requests: int
+    admitted_mid_run: int
+    deadline_evictions: int
+    membership_changes: int  # retire-then-readmit + evictions
+    recompiles: Optional[int]  # launch-cache growth after 1st launch
+    slot_utilization: float  # active-slot-launches / (K * launches_run)
+
+
+@dataclasses.dataclass
+class ServeReport:
+    outcomes: List[RequestOutcome]
+    cohorts: List[CohortReport]
+    wall_s: float
+
+    @property
+    def completed(self) -> List[RequestOutcome]:
+        return [o for o in self.outcomes if o.status == "completed"]
+
+    @property
+    def bit_identical(self) -> Optional[bool]:
+        """True when every verified request matched its serial oracle;
+        None when verification was off."""
+        verdicts = [o.bit_identical for o in self.outcomes
+                    if o.bit_identical is not None]
+        if not verdicts:
+            return None
+        return all(verdicts)
+
+    def latency_percentiles_s(self, qs=(50, 95, 99)) -> Dict[str, float]:
+        lats = [o.latency_s for o in self.completed]
+        if not lats:
+            return {f"p{q}": float("nan") for q in qs}
+        return {f"p{q}": float(np.percentile(lats, q)) for q in qs}
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    l0: int  # launch index of admission (0 for cohort founders)
+    admitted_s: float
+    deadline_s: Optional[float]
+    mid_run: bool
+
+
+class ServingFabric:
+    """Continuous-batching executor over one runtime.
+
+    ``runtime`` must expose ``build_ensemble_launches`` /
+    ``stacking_verdict`` / ``plan_for`` (pallas_step). ``max_slots`` is K
+    per cohort; ``deadline_factor`` scales priced deadlines (the PR 6
+    DEADLINE_FACTOR convention: deadline = factor x expected service);
+    ``verify=True`` checks every outcome against its serial same-K oracle
+    after serving (compile-heavy — tests and --smoke only)."""
+
+    def __init__(self, runtime, *, max_slots: int = 4,
+                 deadline_factor: float = _schedule.DEADLINE_FACTOR,
+                 verify: bool = False, clock=None):
+        if max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {max_slots}")
+        self.runtime = runtime
+        self.max_slots = int(max_slots)
+        self.deadline_factor = float(deadline_factor)
+        self.verify = bool(verify)
+        self.clock = clock if clock is not None else WallClock()
+        self._oracle_cache: Dict[Tuple, np.ndarray] = {}
+
+    # ------------------------------------------------------------- serving
+
+    def serve(self, requests: List[Request]) -> ServeReport:
+        """Run every request to completion (or deadline eviction)."""
+        rids = [r.rid for r in requests]
+        if len(set(rids)) != len(rids):
+            raise ValueError("request rids must be unique")
+        pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        outcomes: List[RequestOutcome] = []
+        cohorts: List[CohortReport] = []
+        t_start = time.perf_counter()
+        while pending:
+            now = self.clock.now()
+            ready = [r for r in pending if r.arrival_s <= now]
+            if not ready:
+                self.clock.wait_until(min(r.arrival_s for r in pending))
+                continue
+            ready.sort(key=order_key)
+            key = cohort_key(self.runtime, ready[0].graph)
+            batch = [r for r in ready
+                     if cohort_key(self.runtime, r.graph) == key]
+            batch = batch[: self.max_slots]
+            for r in batch:
+                pending.remove(r)
+            cohorts.append(self._run_cohort(
+                len(cohorts), key, batch, pending, outcomes))
+        wall_s = time.perf_counter() - t_start
+        if self.verify:
+            self._verify(outcomes, cohorts)
+        return ServeReport(outcomes=outcomes, cohorts=cohorts,
+                           wall_s=wall_s)
+
+    # -------------------------------------------------------------- cohort
+
+    def _run_cohort(self, index: int, key, batch: List[Request],
+                    pending: List[Request],
+                    outcomes: List[RequestOutcome]) -> CohortReport:
+        import jax
+        import jax.numpy as jnp
+
+        rt = self.runtime
+        ens = GraphEnsemble(tuple(r.graph for r in batch))
+        ok, reason = rt.stacking_verdict(ens)
+        lp = rt.build_ensemble_launches(ens)
+        stacked = lp.kind == "stacked"
+        K = len(batch)
+        S = lp.steps_per_launch
+        acts = np.array(lp.acts, copy=True)
+        detector = DeadlineDetector(factor=self.deadline_factor,
+                                    expected_us=lp.expected_launch_us)
+        # the cohort's first launch carries its compile
+        detector.note_recompile_boundary()
+        now = self.clock.now()
+        slots: List[Optional[_Slot]] = [
+            _Slot(req=r, l0=0, admitted_s=now,
+                  deadline_s=self._price_deadline(r, lp, detector, S),
+                  mid_run=False)
+            for r in batch
+        ]
+        carry = jax.block_until_ready(lp.init_fn(rt._ensemble_inits(ens)))
+        membership_changes = 0
+        admitted_mid_run = 0
+        deadline_evictions = 0
+        launches_run = 0
+        util_active = 0
+        compile_base: Optional[int] = None
+        served = len(batch)
+
+        def snapshot(slot: int) -> np.ndarray:
+            return np.array(np.asarray(lp.finalize(carry)[slot]), copy=True)
+
+        def close(slot: int, status: str, eff: int) -> None:
+            st = slots[slot]
+            outcomes.append(RequestOutcome(
+                rid=st.req.rid, status=status, effective_steps=eff,
+                arrival_s=st.req.arrival_s, admitted_s=st.admitted_s,
+                finished_s=self.clock.now(), cohort=index, slot=slot,
+                admitted_mid_run=st.mid_run, deadline_s=st.deadline_s,
+                graph=st.req.graph, output=snapshot(slot)))
+            slots[slot] = None
+
+        l = 0
+        while l < acts.shape[0]:
+            now = self.clock.now()
+            # 1. retire slots whose remaining schedule is empty
+            for slot in range(K):
+                st = slots[slot]
+                if st is not None and not acts[l:, slot, :].any():
+                    close(slot, "completed", st.req.graph.steps)
+            # 2. deadline-miss evictions (the act-mask freeze: zero the
+            # slot's rows from this launch on; state stays at the frozen
+            # step, exactly the engine's _evict edit)
+            for slot in range(K):
+                st = slots[slot]
+                if (st is not None and st.deadline_s is not None
+                        and now > st.deadline_s):
+                    frozen = int(min(st.req.graph.steps,
+                                     1 + (l - st.l0) * S))
+                    acts[l:, slot, :] = 0.0
+                    deadline_evictions += 1
+                    membership_changes += 1
+                    detector.note_recompile_boundary()
+                    close(slot, "deadline_evicted", frozen)
+            # 3. re-admit queued compatible requests into freed slots.
+            # Stacked plans only: their tables are time-invariant and
+            # slot-uniform, so admit_fn's fresh t=0 rows are sound at any
+            # boundary; stepwise plans are time-indexed — fixed membership.
+            if stacked and lp.admit_fn is not None:
+                free = [k for k in range(K) if slots[k] is None]
+                if free:
+                    queue = sorted(
+                        (r for r in pending
+                         if r.arrival_s <= now
+                         and cohort_key(rt, r.graph) == key),
+                        key=order_key)
+                    for r, slot in zip(queue, free):
+                        acts = self._admit_acts(acts, l, slot, r.graph, S)
+                        init = initial_state(r.graph.width,
+                                             r.graph.payload, r.graph.seed)
+                        carry = jax.block_until_ready(
+                            lp.admit_fn(carry, slot, jnp.asarray(init)))
+                        pending.remove(r)
+                        slots[slot] = _Slot(
+                            req=r, l0=l, admitted_s=now,
+                            deadline_s=self._price_deadline(
+                                r, lp, detector, S),
+                            mid_run=True)
+                        served += 1
+                        admitted_mid_run += 1
+                        membership_changes += 1
+                        detector.note_recompile_boundary()
+            # 4. done? (all remaining act rows dead and nothing admitted)
+            if not acts[l:].any():
+                break
+            # 5. dispatch (an all-zero act row is a semantic no-op — the
+            # mask freezes every slot — so skip it without dispatching)
+            if acts[l].any():
+                t1 = time.perf_counter()
+                carry = jax.block_until_ready(lp.launch_fn(
+                    carry, jnp.asarray(acts[l]),
+                    jnp.asarray(lp.launch_t0(l), jnp.int32)))
+                detector.observe((time.perf_counter() - t1) * 1e6)
+                launches_run += 1
+                util_active += int((acts[l] > 0).any(axis=-1).sum())
+                if compile_base is None and lp.compile_counter is not None:
+                    compile_base = int(lp.compile_counter())
+                self.clock.advance_launch()
+            l += 1
+        for slot in range(K):
+            if slots[slot] is not None:
+                close(slot, "completed", slots[slot].req.graph.steps)
+        recompiles: Optional[int] = None
+        if compile_base is not None:
+            recompiles = int(lp.compile_counter()) - compile_base
+            if recompiles:
+                raise RuntimeError(
+                    f"cohort {index}: launch executable recompiled "
+                    f"{recompiles}x across membership churn — the "
+                    f"no-recompile contract of act-mask evict/admit is "
+                    f"broken (shapes must be membership-invariant)")
+        return CohortReport(
+            index=index, key=repr(key), kind=lp.kind, reason=reason,
+            slots=K, steps_per_launch=S, launches_run=launches_run,
+            requests=served, admitted_mid_run=admitted_mid_run,
+            deadline_evictions=deadline_evictions,
+            membership_changes=membership_changes,
+            recompiles=recompiles,
+            slot_utilization=(util_active / (K * launches_run)
+                              if launches_run else 1.0),
+        )
+
+    # ------------------------------------------------------------- pricing
+
+    def _price_deadline(self, req: Request, lp, detector: DeadlineDetector,
+                        S: int) -> Optional[float]:
+        """Per-request completion deadline: the explicit SLO when the
+        request carries one, else factor x the priced service time —
+        launches-to-completion x the expected launch wall (PR 6 cost
+        model via the plan's expected_launch_us, detector median
+        fallback). Unpriceable (analytic model, uncalibrated detector)
+        means best-effort: no deadline."""
+        if req.deadline_s is not None:
+            return req.deadline_s
+        unit = self.clock.launch_unit_s(lp, detector)
+        if unit is None:
+            return None
+        launches = (1 + -(-(req.graph.steps - 1) // S)
+                    if req.graph.steps > 1 else 1)
+        return req.arrival_s + self.deadline_factor * launches * unit
+
+    # ----------------------------------------------------------- admission
+
+    @staticmethod
+    def _admit_acts(acts: np.ndarray, l: int, slot: int, graph: TaskGraph,
+                    S: int) -> np.ndarray:
+        """Write the admitted member's local act schedule into its slot
+        from launch ``l`` on, extending the horizon with all-zero launch
+        rows when the request outlives the cohort's current schedule
+        (all-zero rows freeze every slot, so pre-extension schedules are
+        unchanged semantically)."""
+        need = -(-(graph.steps - 1) // S) if graph.steps > 1 else 0
+        rem = acts.shape[0] - l
+        if need > rem:
+            pad = np.zeros((need - rem,) + acts.shape[1:], acts.dtype)
+            acts = np.concatenate([acts, pad], axis=0)
+            rem = need
+        tloc = 1 + (np.arange(rem)[:, None] * S + np.arange(S)[None, :])
+        acts[l:, slot, :] = (tloc < graph.steps).astype(acts.dtype)
+        return acts
+
+    # -------------------------------------------------------- verification
+
+    def _oracle(self, graph: TaskGraph, eff: int, K: int,
+                slot: int) -> np.ndarray:
+        """Serial same-K oracle: the request alone, truncated to its
+        effective steps, through the production ensemble executor at the
+        cohort's K (see module docstring for why same-K is the exact
+        comparison)."""
+        g = dataclasses.replace(graph, steps=eff)
+        ck = (g, K, slot)
+        if ck not in self._oracle_cache:
+            out = self.runtime.execute_ensemble(GraphEnsemble((g,) * K))
+            self._oracle_cache[ck] = np.asarray(out[slot])
+        return self._oracle_cache[ck]
+
+    def _verify(self, outcomes: List[RequestOutcome],
+                cohorts: List[CohortReport]) -> None:
+        slots_of = {c.index: c.slots for c in cohorts}
+        for o in outcomes:
+            ref = self._oracle(o.graph, o.effective_steps,
+                               slots_of[o.cohort], o.slot)
+            o.bit_identical = bool(np.array_equal(o.output, ref))

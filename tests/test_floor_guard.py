@@ -344,3 +344,88 @@ def test_real_scaling_artifact_if_present():
         import pytest
 
         pytest.skip("no local scaling artifact")
+
+
+# ------------------------------------------------ serve leg (PR 10)
+
+
+def serve_art(*, identical=True, dynamic=True, stacked=2, p99=40.0,
+              util=0.85, schema=1):
+    return {
+        "schema": schema,
+        "smoke": True,
+        "rows": [{"slots": 2, "p99_ms": p99, "slot_utilization": util,
+                  "bit_identical": identical}],
+        "verdict": {
+            "bit_identical": identical,
+            "dynamic_cohort": dynamic,
+            "min_stacked_cohorts": stacked,
+            "p99_ms_by_slots": {"2": p99},
+        },
+    }
+
+
+def run_serve(art, base=None, min_slot_utilization=0.5):
+    return fg.check(current(), baseline(), 2.0, 1.05,
+                    serve_art=art, serve_base=base or serve_art(),
+                    min_slot_utilization=min_slot_utilization)
+
+
+def test_serve_healthy_artifact_passes():
+    assert run_serve(serve_art()) == []
+
+
+def test_serve_p99_regression_alone_warns(capsys):
+    # two-signal rule: 4x p99 with slots still busy is a WARN
+    assert run_serve(serve_art(p99=160.0)) == []
+    assert "SLOW-RUNNER?" in capsys.readouterr().out
+
+
+def test_serve_p99_regression_with_idle_slots_fails():
+    failures = run_serve(serve_art(p99=160.0, util=0.2))
+    assert any("serve@p99" in f and "health signal collapsed" in f
+               for f in failures)
+
+
+def test_serve_identity_loss_alone_fails():
+    failures = run_serve(serve_art(identical=False))
+    assert any("serve@identity" in f and "NOT bit-identical" in f
+               for f in failures)
+
+
+def test_serve_static_cohorts_fail():
+    failures = run_serve(serve_art(dynamic=False))
+    assert any("serve@churn" in f and "continuous batching degraded" in f
+               for f in failures)
+    failures = run_serve(serve_art(stacked=1))
+    assert any("serve@churn" in f and "collapsed compatibility" in f
+               for f in failures)
+
+
+def test_serve_schema_drift_fails():
+    failures = run_serve(serve_art(schema=99))
+    assert any("serve@schema" in f for f in failures)
+
+
+def test_serve_without_baseline_skips_p99_but_judges_contract(capsys):
+    assert fg.check(current(), baseline(), 2.0, 1.05,
+                    serve_art=serve_art(), serve_base=None) == []
+    out = capsys.readouterr().out
+    assert "serve@p99:K2" in out and "no reference value" in out
+
+
+def test_real_serve_artifact_if_present():
+    """The committed serving baseline must satisfy its own guard against
+    itself — catches schema drift between serve_taskbench.py and this
+    leg."""
+    import json
+
+    bench = pathlib.Path(__file__).resolve().parents[1] / "artifacts/bench"
+    path = bench / "serve_taskbench_baseline.json"
+    if not path.exists():
+        import pytest
+
+        pytest.skip("no local serve artifact")
+    with open(path) as f:
+        art = json.load(f)
+    assert run_serve(art, base=art) == []

@@ -1,0 +1,330 @@
+"""Serving fabric, packer, chunk-group resolver, and detector boundary.
+
+Covers the PR's bugfix satellites alongside the tentpole:
+  * ``choose_gather_chunk_group``: measured grouping probes overrule the
+    sqrt(D) analytic rule; precedence explicit > env > measured >
+    analytic; non-divisor overrides fail loudly.
+  * ``choose_gather_impl`` ignores "chunked:g{G}" grouping rows (they
+    rank the group, not the transport — previously they shadowed
+    "chunked" in the impl ranking).
+  * ``DeadlineDetector.note_recompile_boundary``: the first wall after a
+    membership change is neither folded into the calibration median nor
+    flagged as a straggler.
+  * ``stacking_verdict`` + the ``schedule.resolve`` degradation record
+    when an ensemble falls off the stacked fast path.
+  * packer cohort keys / admission order / static packing.
+  * the fabric end-to-end on the virtual LaunchClock: mixed streams ->
+    >= 2 stacked cohorts, mid-run re-admission with zero recompiles,
+    deadline eviction, bit-identity throughout.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import GraphEnsemble, KernelSpec, TaskGraph, get_runtime
+from repro.kernels import probes, schedule
+from repro.kernels.probes import CostModel
+from repro.obs import Tracer
+from repro.resilience.detect import DeadlineDetector
+from repro.serving import (
+    LaunchClock,
+    ServingFabric,
+    cohort_key,
+    make_request,
+    order_key,
+    pack,
+)
+
+WIDTH = 8
+
+
+def _graph(pattern="stencil_1d", steps=5, width=WIDTH, payload=16,
+           radius=1, seed=0):
+    return TaskGraph(steps=steps, width=width, pattern=pattern,
+                     payload=payload, kernel=KernelSpec("compute_bound", 4),
+                     radius=radius, seed=seed)
+
+
+def _measured_grouping_model(*, best=8):
+    walls = {"chunked:g4": 50.0, "chunked:g8": 50.0, "chunked:g16": 90.0}
+    walls[f"chunked:g{best}"] = 30.0
+    impl = {k: {32: {64: v}} for k, v in walls.items()}
+    impl["chunked"] = {32: {64: 40.0}}
+    impl["xla"] = {32: {64: 60.0}}
+    return CostModel(source="measured", exchange_row_steps=1.0,
+                     gather_impl_us=impl, devices=32, platform="cpu")
+
+
+# ------------------------------------------------- chunk-group resolver --
+
+
+def test_chunk_group_analytic_fallback():
+    from repro.core.runtimes import _halo
+
+    g, reason = schedule.choose_gather_chunk_group(devices=32, width=64)
+    assert g == _halo.gather_chunk_group(32)
+    assert 32 % g == 0
+    assert "analytic" in reason and "sqrt" in reason
+
+
+def test_chunk_group_measured_overrules_analytic():
+    m = _measured_grouping_model(best=8)
+    g, reason = schedule.choose_gather_chunk_group(
+        devices=32, width=64, model=m)
+    assert g == 8
+    assert "measured" in reason and "g8=30.0us" in reason
+    # ties break toward the smaller group deterministically
+    tie = _measured_grouping_model(best=4)
+    tie.gather_impl_us["chunked:g8"][32][64] = 30.0
+    g2, _ = schedule.choose_gather_chunk_group(devices=32, width=64,
+                                               model=tie)
+    assert g2 == 4
+
+
+def test_chunk_group_needs_two_candidates():
+    m = dataclasses.replace(
+        _measured_grouping_model(),
+        gather_impl_us={"chunked:g8": {32: {64: 30.0}},
+                        "chunked": {32: {64: 40.0}}})
+    from repro.core.runtimes import _halo
+
+    g, reason = schedule.choose_gather_chunk_group(devices=32, width=64,
+                                                   model=m)
+    assert g == _halo.gather_chunk_group(32)  # one row cannot rank
+    assert "analytic" in reason
+
+
+def test_chunk_group_precedence(monkeypatch):
+    m = _measured_grouping_model(best=8)
+    monkeypatch.setenv("REPRO_GATHER_CHUNK_GROUP", "4")
+    g, reason = schedule.choose_gather_chunk_group(
+        devices=32, width=64, model=m)
+    assert (g, "env" in reason) == (4, True)  # env beats measured
+    g, reason = schedule.choose_gather_chunk_group(
+        devices=32, width=64, model=m, explicit=16)
+    assert (g, "explicit" in reason) == (16, True)  # explicit beats env
+    monkeypatch.setenv("REPRO_GATHER_CHUNK_GROUP", "5")
+    with pytest.raises(ValueError, match="does not divide"):
+        schedule.choose_gather_chunk_group(devices=32, width=64)
+    with pytest.raises(ValueError, match="does not divide"):
+        schedule.choose_gather_chunk_group(devices=32, explicit=7)
+
+
+def test_gather_impl_ranking_ignores_grouping_rows():
+    """Grouping rows rank G, not the transport: before the fix
+    "chunked:g8"'s 30us would win the impl ranking and gather_global
+    would be handed a transport name it cannot dispatch."""
+    m = _measured_grouping_model(best=8)
+    impl, reason = schedule.choose_gather_impl(width=64, devices=32,
+                                               model=m)
+    assert impl == "chunked"  # 40us beats xla's 60us; g-rows excluded
+    assert "chunked:g" not in reason
+
+
+def test_chunk_group_candidates():
+    assert probes._chunk_group_candidates(32) == (2, 4, 8, 16)
+    assert probes._chunk_group_candidates(4) == (2,)
+    assert probes._chunk_group_candidates(2) == ()
+
+
+# ------------------------------------------------ detector boundary skip --
+
+
+def test_detector_skips_recompile_boundary_wall():
+    det = DeadlineDetector(factor=3.0, warmup=3)
+    det.note_recompile_boundary()
+    assert det.observe(1e6) is None  # compile wall: not folded, not flagged
+    assert det.boundary_skips == 1
+    for _ in range(3):
+        assert det.observe(300.0) is None
+    # median calibrated from the clean walls only: 1e6 would have wrecked it
+    assert det.deadline_us() == pytest.approx(900.0, rel=0.01)
+    hit = det.observe(1e6)
+    assert hit is not None and hit.wall_us == 1e6
+
+
+def test_detector_boundary_skip_with_measured_expectation():
+    det = DeadlineDetector(factor=2.0, expected_us=400.0)
+    det.note_recompile_boundary()
+    assert det.observe(5e5) is None  # priced deadline exists, still skipped
+    assert det.boundary_skips == 1
+    assert det.observe(5e5) is not None  # next breach is real
+
+
+def test_detector_boundary_flag_is_one_shot():
+    det = DeadlineDetector(factor=2.0, expected_us=100.0)
+    det.note_recompile_boundary()
+    det.note_recompile_boundary()  # idempotent: still one skip
+    assert det.observe(1e5) is None
+    assert det.observe(1e5) is not None
+    assert det.boundary_skips == 1
+
+
+# --------------------------------------- stacking verdict + trace record --
+
+
+def test_stacking_verdict_names_the_off_plan_member():
+    rt = get_runtime("pallas_step", steps_per_launch=2)
+    ok, reason = rt.stacking_verdict(
+        GraphEnsemble((_graph(), _graph(seed=7))))
+    assert ok and "stacked" in reason
+    ok, reason = rt.stacking_verdict(
+        GraphEnsemble((_graph(), _graph(pattern="all_to_all"))))
+    assert not ok
+    assert "member 1" in reason and "all_to_all" in reason
+    ok, reason = rt.stacking_verdict(
+        GraphEnsemble((_graph(), _graph(width=2 * WIDTH))))
+    assert not ok and "width" in reason
+
+
+def test_degradation_emits_schedule_resolve_record():
+    tr = Tracer()
+    rt = get_runtime("pallas_step", steps_per_launch=2, trace=tr)
+    ens = GraphEnsemble((_graph(), _graph(pattern="all_to_all")))
+    rt.build_ensemble_launches(ens)
+    recs = [s for s in tr.spans
+            if s.name == "schedule.resolve"
+            and s.attrs.get("stacked") is False]
+    assert recs, "falling off the stacked fast path must leave a record"
+    assert "off the stacked fast path" in recs[-1].attrs["reason"]
+    assert recs[-1].attrs["members"] == 2
+
+
+def test_stacked_ensemble_leaves_no_degradation_record():
+    tr = Tracer()
+    rt = get_runtime("pallas_step", steps_per_launch=2, trace=tr)
+    rt.build_ensemble_launches(GraphEnsemble((_graph(), _graph(seed=3))))
+    assert not [s for s in tr.spans if s.name == "schedule.resolve"
+                and s.attrs.get("stacked") is False]
+
+
+# ----------------------------------------------------------------- packer --
+
+
+def test_cohort_key_partitions_by_operand_identity():
+    rt = get_runtime("pallas_step", steps_per_launch=2)
+    base = cohort_key(rt, _graph())
+    assert cohort_key(rt, _graph(steps=11, seed=9)) == base  # only state
+    assert cohort_key(rt, _graph(width=2 * WIDTH)) != base
+    assert cohort_key(rt, _graph(pattern="nearest", radius=2)) != base
+    assert cohort_key(rt, _graph(pattern="all_to_all")) != base
+    # seed-structured patterns bake the seed into the tables themselves
+    assert (cohort_key(rt, _graph(pattern="random_nearest", seed=1))
+            != cohort_key(rt, _graph(pattern="random_nearest", seed=2)))
+
+
+def test_order_key_priority_then_deadline():
+    hi = make_request(0, steps=5, priority=2, arrival_s=9.0)
+    soon = make_request(1, steps=5, deadline_s=3.0)
+    late = make_request(2, steps=5, deadline_s=30.0)
+    plain = make_request(3, steps=5)
+    assert sorted([plain, late, soon, hi], key=order_key) == [
+        hi, soon, late, plain]
+
+
+def test_pack_routes_mixed_stream_into_separate_cohorts():
+    rt = get_runtime("pallas_step", steps_per_launch=2)
+    reqs = [make_request(0, steps=5),
+            make_request(1, steps=9, seed=4),
+            make_request(2, steps=5, pattern="all_to_all"),
+            make_request(3, steps=5, width=2 * WIDTH),
+            make_request(4, steps=7, seed=8)]
+    cohorts = pack(rt, reqs, max_slots=2)
+    rids = sorted(sorted(r.rid for r in c) for c in cohorts)
+    # three stencil requests -> one full + one spill cohort; a2a and the
+    # wide stencil each isolate. Never one degraded 5-tuple.
+    assert rids == [[0, 1], [2], [3], [4]]
+    with pytest.raises(ValueError):
+        pack(rt, reqs, max_slots=0)
+
+
+# ----------------------------------------------------------------- fabric --
+
+
+def _serve(reqs, *, slots, steps_per_launch=2, **kw):
+    rt = get_runtime("pallas_step", steps_per_launch=steps_per_launch)
+    fabric = ServingFabric(rt, max_slots=slots, verify=True,
+                           clock=LaunchClock(), **kw)
+    return fabric.serve(reqs)
+
+
+def test_fabric_mixed_stream_end_to_end():
+    reqs = [
+        make_request(0, steps=9, seed=1),
+        make_request(1, steps=5, seed=2, arrival_s=0.0),
+        make_request(2, steps=7, seed=3, arrival_s=1.0),
+        make_request(3, steps=5, seed=4, arrival_s=1.0),
+        make_request(4, steps=4, pattern="all_to_all", arrival_s=2.0),
+        make_request(5, steps=6, pattern="nearest", radius=2,
+                     arrival_s=2.0, seed=5),
+    ]
+    rep = _serve(reqs, slots=2)
+    assert [o.status for o in rep.outcomes].count("completed") == 6
+    assert rep.bit_identical is True
+    stacked = [c for c in rep.cohorts if c.kind == "stacked"]
+    assert len(stacked) >= 2  # stencil cohort + nearest cohort
+    churn = max(c.membership_changes for c in stacked)
+    admitted = sum(c.admitted_mid_run for c in stacked)
+    assert churn >= 2 and admitted >= 2  # retire -> re-admit, twice
+    assert all((c.recompiles or 0) == 0 for c in rep.cohorts)
+    assert any(c.kind != "stacked" for c in rep.cohorts)  # a2a stepwise
+    # mid-run admissions recorded on the outcomes themselves
+    mid = [o for o in rep.outcomes if o.admitted_mid_run]
+    assert len(mid) >= 2
+    assert all(o.effective_steps == o.graph.steps for o in rep.outcomes)
+
+
+def test_fabric_deadline_eviction_is_bit_exact():
+    # rid 1's explicit deadline (LaunchClock units = launches) expires
+    # mid-cohort: it must be evicted at a boundary, freeze at the
+    # truncated horizon, and still match the truncated serial oracle.
+    reqs = [make_request(0, steps=9, seed=1),
+            make_request(1, steps=9, seed=2, deadline_s=2.0)]
+    rep = _serve(reqs, slots=2)
+    by_rid = {o.rid: o for o in rep.outcomes}
+    assert by_rid[1].status == "deadline_evicted"
+    assert by_rid[1].effective_steps < 9
+    assert by_rid[0].status == "completed"
+    assert rep.bit_identical is True
+    assert sum(c.deadline_evictions for c in rep.cohorts) == 1
+
+
+def test_fabric_readmission_reuses_freed_slot_without_recompile():
+    # one founder pair; rid 2 arrives later and must land in the slot
+    # rid 1 (shorter) frees, inside the same cohort, no recompile.
+    reqs = [make_request(0, steps=13, seed=1),
+            make_request(1, steps=3, seed=2),
+            make_request(2, steps=5, seed=3, arrival_s=3.0)]
+    rep = _serve(reqs, slots=2)
+    assert len(rep.cohorts) == 1
+    c = rep.cohorts[0]
+    assert c.kind == "stacked" and c.requests == 3
+    assert c.admitted_mid_run == 1 and (c.recompiles or 0) == 0
+    assert c.membership_changes >= 1
+    assert rep.bit_identical is True
+    mid = {o.rid: o for o in rep.outcomes}[2]
+    assert mid.admitted_mid_run and mid.slot == 1
+
+
+def test_fabric_rejects_duplicate_rids():
+    rt = get_runtime("pallas_step", steps_per_launch=2)
+    fabric = ServingFabric(rt, max_slots=2, clock=LaunchClock())
+    with pytest.raises(ValueError, match="rid"):
+        fabric.serve([make_request(0, steps=3),
+                      make_request(0, steps=4)])
+
+
+def test_probe_gather_grouping_rows_schema():
+    """probe_gather_impl_us stores grouping anatomy under "chunked:g{G}"
+    keys in the existing cache schema; explicit chunk_groups filter to
+    proper divisors and singletons are dropped (cannot rank)."""
+    curves = probes.probe_gather_impl_us(
+        1, payload=4, widths=(8,), device_counts=(1,), reps=1,
+        impls=("xla",), chunk_groups="auto")
+    assert "xla" in curves
+    assert not any(":" in k for k in curves)  # 1 device: nothing to group
+    rt = CostModel(source="measured", exchange_row_steps=1.0,
+                   gather_impl_us={k: {1: dict(v[1])}
+                                   for k, v in curves.items()})
+    assert rt.gather_walls_at(8, 1)  # round-trips through the query path
